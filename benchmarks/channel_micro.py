@@ -1,0 +1,79 @@
+"""Channel microbenchmarks — paper §5 design points.
+
+  * slot-capacity sweep (the 1152-byte slot / two-part trade-off, §5.3.1):
+    primary capacity vs. served fraction vs. round time.
+  * local-trustee shortcut on/off (§5.2.1).
+  * overflow mode: drop vs second_round.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import DelegatedKVStore
+    from repro.core.routing import sample_keys
+    from benchmarks.common import Csv, bench, block
+
+    n_dev = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(1, n_dev), ("data", "model"))
+    R = args.requests
+    n_keys = 4096
+    rng = np.random.default_rng(5)
+    keys_np = sample_keys(rng, n_keys, R, "zipf")
+    keys = jnp.asarray(keys_np)
+    ones = jnp.ones((R, 1), jnp.float32)
+    mean_cap = max(1, R // n_dev // n_dev)
+
+    csv = Csv(["experiment", "setting", "us_per_round", "served_frac"])
+    csv.print_header()
+
+    # capacity sweep, drop mode (how big must the primary block be?)
+    for mult in (0.5, 1, 2, 4, 8):
+        cap = max(1, int(mean_cap * mult))
+        st = DelegatedKVStore(mesh, n_keys, 1, capacity=cap, overflow="drop",
+                              local_shortcut=False)
+        st.prefill(np.zeros((n_keys, 1), np.float32))
+        out = st.add(keys, ones)
+        served = float((np.asarray(out) != 0).any(1).mean())
+        dt = bench(lambda: block(st.add(keys, ones)), iters=4)
+        csv.add("capacity_drop", f"{mult}x_mean", round(dt * 1e6, 1),
+                round(served, 4))
+
+    # two-part slot: small primary + overflow round (lossless)
+    for mult in (0.5, 1, 2):
+        cap = max(1, int(mean_cap * mult))
+        st = DelegatedKVStore(mesh, n_keys, 1, capacity=cap,
+                              overflow="second_round",
+                              overflow_capacity=cap * 4, local_shortcut=False)
+        st.prefill(np.zeros((n_keys, 1), np.float32))
+        out = st.add(keys, ones)
+        served = float((np.asarray(out) != 0).any(1).mean())
+        dt = bench(lambda: block(st.add(keys, ones)), iters=4)
+        csv.add("two_part_slot", f"{mult}x_mean+4x_overflow",
+                round(dt * 1e6, 1), round(served, 4))
+
+    # local shortcut ablation
+    for shortcut in (False, True):
+        st = DelegatedKVStore(mesh, n_keys, 1, capacity=8 * mean_cap,
+                              local_shortcut=shortcut)
+        st.prefill(np.zeros((n_keys, 1), np.float32))
+        dt = bench(lambda: block(st.add(keys, ones)), iters=4)
+        csv.add("local_shortcut", str(shortcut), round(dt * 1e6, 1), 1.0)
+
+    if args.out:
+        csv.dump(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Shared benchmark utilities.
+
+Benchmarks need several simulated devices; the harness re-executes each
+benchmark module in a subprocess with --xla_force_host_platform_device_count
+(never set in the parent — dry-run protocol).  Wall-clock numbers on the CPU
+backend measure the *algorithmic* structure (rounds, serialization, bytes
+moved), which is what the paper's figures compare; derived columns model TPU
+v5e time from the bytes/flops actually moved.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List
+
+V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+
+def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (fn must block until ready)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def block(x):
+    import jax
+    jax.block_until_ready(x)
+    return x
+
+
+class Csv:
+    def __init__(self, header: List[str]):
+        self.header = header
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        assert len(row) == len(self.header)
+        self.rows.append(list(row))
+        print(",".join(str(r) for r in row), flush=True)
+
+    def print_header(self):
+        print(",".join(self.header), flush=True)
+
+    def dump(self, path: str):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(",".join(self.header) + "\n")
+            for r in self.rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+
+
+def run_in_subprocess(module: str, args: List[str], devices: int = 8,
+                      timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         os.path.join(os.path.dirname(__file__), ".."),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-m", module] + args, env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"{module} failed:\n{out.stderr[-3000:]}")
+    return out.stdout
+
+
+def artifact_path(name: str) -> str:
+    return os.path.join(os.path.dirname(__file__), "artifacts", name)

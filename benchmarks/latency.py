@@ -1,0 +1,88 @@
+"""Latency vs offered load — paper Fig. 7.
+
+Measures per-request latency of one service round as the request batch size
+(offered load) grows, for delegation vs the lock analog, at 64 objects
+(uniform) and 1e6 objects (zipf α=1) as in the paper.
+
+Latency(load) behavior to reproduce: locks are fast at low load but collapse
+(convoy rounds) as load concentrates; delegation has a higher floor (the
+channel round) but stays flat until trustee capacity saturates.  Mean and
+p99 over repeated rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dist", default="uniform", choices=["uniform", "zipf"])
+    ap.add_argument("--objects", type=int, default=0)   # 0 -> paper default
+    ap.add_argument("--loads", default="64,128,256,512,1024,2048,4096,8192")
+    ap.add_argument("--trials", type=int, default=15)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import DelegatedKVStore, FetchRMWStore, conflict_ranks
+    from repro.core.routing import sample_keys
+    from benchmarks.common import Csv, block
+
+    n_obj = args.objects or (64 if args.dist == "uniform" else 1_000_000)
+    n_dev = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(1, n_dev), ("data", "model"))
+    rng = np.random.default_rng(2)
+
+    csv = Csv(["fig", "dist", "n_objects", "load_req_per_round", "solution",
+               "mean_us_per_req", "p99_us_per_req", "throughput_mops"])
+    csv.print_header()
+
+    for load in [int(x) for x in args.loads.split(",")]:
+        keys_np = sample_keys(rng, n_obj, load, args.dist)
+        keys = jnp.asarray(keys_np)
+        ones = jnp.ones((load, 1), jnp.float32)
+
+        st = DelegatedKVStore(mesh, n_obj, 1, capacity=0)
+        st.prefill(np.zeros((n_obj, 1), np.float32))
+        st.add(keys, ones)                       # compile
+        times = []
+        for _ in range(args.trials):
+            t0 = time.perf_counter()
+            block(st.add(keys, ones))
+            times.append(time.perf_counter() - t0)
+        times = np.array(times)
+        csv.add("fig7", args.dist, n_obj, load, "trust",
+                round(times.mean() / load * 1e6, 2),
+                round(np.percentile(times, 99) / load * 1e6, 2),
+                round(load / times.mean() / 1e6, 3))
+
+        ranks, n_rounds = conflict_ranks(keys_np, n_dev)
+        n_rounds_c = min(n_rounds, 32)
+        lock = FetchRMWStore(mesh, n_obj, 1)
+        lock.prefill(np.zeros((n_obj, 1), np.float32))
+        rk = np.minimum(ranks, n_rounds_c - 1)
+        lock.rmw(keys, lambda v, p: v + 1.0, rk, n_rounds_c)  # compile
+        times = []
+        for _ in range(max(3, args.trials // 3)):
+            t0 = time.perf_counter()
+            lock.rmw(keys, lambda v, p: v + 1.0, rk, n_rounds_c)
+            block(lock.store.trust.state()["table"])
+            times.append((time.perf_counter() - t0)
+                         * (n_rounds / n_rounds_c))
+        times = np.array(times)
+        csv.add("fig7", args.dist, n_obj, load, "mutex",
+                round(times.mean() / load * 1e6, 2),
+                round(np.percentile(times, 99) / load * 1e6, 2),
+                round(load / times.mean() / 1e6, 3))
+
+    if args.out:
+        csv.dump(args.out)
+
+
+if __name__ == "__main__":
+    main()

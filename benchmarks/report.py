@@ -1,0 +1,115 @@
+"""Render EXPERIMENTS.md sections from dry-run artifacts.
+
+Replaces the <!-- DRYRUN_SUMMARY --> and <!-- ROOFLINE_TABLE --> markers.
+Perf-log and paper-claims sections are maintained by hand (they narrate
+hypothesis -> change -> measure cycles).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import V5E
+from benchmarks.roofline import fraction, load_cells
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_summary():
+    lines = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(ART, mesh)
+        if not cells:
+            continue
+        ok = sum(c["status"] == "ok" for c in cells)
+        skip = sum(c["status"] == "skipped" for c in cells)
+        err = sum(c["status"] == "error" for c in cells)
+        fits = sum(c.get("fits_hbm", False) for c in cells
+                   if c["status"] == "ok")
+        t = sum(c.get("compile_s", 0) for c in cells)
+        lines.append(
+            f"- **{mesh}-pod mesh** ({'2x16x16' if mesh == 'multi' else '16x16'}): "
+            f"{ok} compiled OK, {skip} skipped (documented), {err} errors; "
+            f"{fits}/{ok} fit 16 GB/chip; total compile {t:.0f}s.")
+        for c in cells:
+            if c["status"] == "error":
+                lines.append(f"  - ERROR {c['arch']} x {c['shape']}: "
+                             f"{c.get('error', '')[:120]}")
+            elif c["status"] == "ok" and not c.get("fits_hbm", True):
+                m = c.get("memory", {})
+                lines.append(
+                    f"  - over-HBM {c['arch']} x {c['shape']}: "
+                    f"args {m.get('argument_size_in_bytes', 0)/1e9:.1f} GB + "
+                    f"temps {m.get('temp_size_in_bytes', 0)/1e9:.1f} GB "
+                    f"(analysis in §Perf / §Roofline notes)")
+    return "\n".join(lines)
+
+
+def roofline_table(tag=""):
+    cells = load_cells(ART, "single", tag)
+    hdr = ("| arch | shape | status | bottleneck | compute ms | memory ms | "
+           "collective ms | useful | roofline frac | fits HBM |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for d in cells:
+        if d["status"] != "ok":
+            reason = d.get("reason", d.get("error", ""))[:48]
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['status'].upper()}"
+                        f" | {reason} | | | | | | |")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | ok | {r['bottleneck']} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['useful_ratio']:.2f} | "
+            f"{fraction(d)*100:.1f}% | "
+            f"{'yes' if d.get('fits_hbm') else 'NO'} |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes():
+    cells = [c for c in load_cells(ART, "single") if c["status"] == "ok"]
+    cells.sort(key=fraction)
+    lines = ["", "Per-cell one-liners (worst roofline fraction first):", ""]
+    for d in cells:
+        r = d["roofline"]
+        b = r["bottleneck"]
+        fix = {
+            "compute": "padding waste (heads/slots) dominates — cut padded "
+                       "FLOPs or raise useful ratio",
+            "memory": "HBM streaming bound — fuse/remat less, shrink f32 "
+                      "intermediates, bigger arithmetic intensity per byte",
+            "collective": "ICI bound — reduce-scatter instead of all-reduce, "
+                          "sequence-parallel residual, overlap with compute",
+        }[b]
+        lines.append(f"- {d['arch']} x {d['shape']}: {b}-bound "
+                     f"(frac {fraction(d)*100:.1f}%, useful "
+                     f"{r['useful_ratio']:.2f}) -> {fix}")
+    return "\n".join(lines)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = _replace(text, "DRYRUN_SUMMARY", dryrun_summary())
+    text = _replace(text, "ROOFLINE_TABLE",
+                    roofline_table() + "\n" + bottleneck_notes())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+def _replace(text, marker, content):
+    tag = f"<!-- {marker} -->"
+    block = f"{tag}\n{content}\n<!-- /{marker} -->"
+    if f"<!-- /{marker} -->" in text:
+        import re
+        return re.sub(f"<!-- {marker} -->.*?<!-- /{marker} -->", block,
+                      text, flags=re.S)
+    return text.replace(tag, block)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Each benchmark runs in a subprocess with 8 simulated devices (the parent
+stays single-device per the dry-run protocol) in a reduced-size mode so the
+full suite completes on CPU; pass --full for the paper-scale sweeps.
+Prints ``name,us_per_call,derived`` CSV summary lines at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+from benchmarks.common import artifact_path, run_in_subprocess
+
+REDUCED = {
+    "fetch_add_uniform": ("benchmarks.fetch_add",
+                          ["--dist", "uniform", "--objects", "1,8,64,1024",
+                           "--requests", "1024", "--iters", "3"]),
+    "fetch_add_zipf": ("benchmarks.fetch_add",
+                       ["--dist", "zipf", "--objects", "8,64,1024",
+                        "--requests", "1024", "--iters", "3"]),
+    "latency_uniform": ("benchmarks.latency",
+                        ["--dist", "uniform", "--loads", "128,1024,4096",
+                         "--trials", "5"]),
+    "kv_store_fig8": ("benchmarks.kv_store",
+                      ["--fig", "8", "--dist", "zipf",
+                       "--tables", "100,10000", "--requests", "2048",
+                       "--iters", "2"]),
+    "kv_store_fig9": ("benchmarks.kv_store",
+                      ["--fig", "9", "--dist", "uniform", "--tables", "1000",
+                       "--writes", "5", "--requests", "2048", "--iters", "2"]),
+    "memcached": ("benchmarks.memcached_like",
+                  ["--dist", "zipf", "--tables", "10000", "--writes", "5",
+                   "--requests", "2048", "--iters", "2"]),
+    "channel_micro": ("benchmarks.channel_micro", ["--requests", "1024"]),
+}
+
+FULL = {
+    "fetch_add_uniform": ("benchmarks.fetch_add", ["--dist", "uniform"]),
+    "fetch_add_zipf": ("benchmarks.fetch_add", ["--dist", "zipf"]),
+    "latency_uniform": ("benchmarks.latency", ["--dist", "uniform"]),
+    "latency_zipf": ("benchmarks.latency", ["--dist", "zipf"]),
+    "kv_store_fig8_uniform": ("benchmarks.kv_store",
+                              ["--fig", "8", "--dist", "uniform"]),
+    "kv_store_fig8_zipf": ("benchmarks.kv_store",
+                           ["--fig", "8", "--dist", "zipf"]),
+    "kv_store_fig9_uniform": ("benchmarks.kv_store",
+                              ["--fig", "9", "--dist", "uniform",
+                               "--tables", "1000"]),
+    "kv_store_fig9_zipf": ("benchmarks.kv_store",
+                           ["--fig", "9", "--dist", "zipf",
+                            "--tables", "1000000"]),
+    "memcached_uniform": ("benchmarks.memcached_like",
+                          ["--dist", "uniform"]),
+    "memcached_zipf": ("benchmarks.memcached_like", ["--dist", "zipf"]),
+    "channel_micro": ("benchmarks.channel_micro", []),
+}
+
+
+def summarize(name: str, stdout: str):
+    """Extract (us_per_call, derived) rows from a benchmark's CSV output."""
+    lines = [l for l in stdout.strip().splitlines() if "," in l]
+    if len(lines) < 2:
+        return []
+    header = lines[0].split(",")
+    out = []
+    for line in lines[1:]:
+        parts = line.split(",")
+        if len(parts) != len(header):
+            continue
+        row = dict(zip(header, parts))
+        if "mops_wall" in row:
+            mops = float(row["mops_wall"])
+            us = 1.0 / mops if mops > 0 else float("inf")
+            key = "/".join(str(row.get(k, "")) for k in
+                           ("dist", "n_objects", "n_keys", "write_pct",
+                            "solution") if row.get(k))
+            out.append((f"{name}:{key}", round(us, 3),
+                        f"mops={row['mops_wall']}"))
+        elif "mean_us_per_req" in row:
+            out.append((f"{name}:{row['dist']}/load{row['load_req_per_round']}"
+                        f"/{row['solution']}",
+                        float(row["mean_us_per_req"]),
+                        f"p99={row['p99_us_per_req']}us"))
+        elif "us_per_round" in row:
+            out.append((f"{name}:{row['experiment']}/{row['setting']}",
+                        float(row["us_per_round"]),
+                        f"served={row['served_frac']}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    table = FULL if args.full else REDUCED
+
+    summary = []
+    for name, (module, margs) in table.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"=== {name} ({module}) ===", flush=True)
+        try:
+            out = run_in_subprocess(module, margs, devices=8, timeout=2400)
+            print(out, flush=True)
+            summary.extend(summarize(name, out))
+        except Exception as e:                               # noqa: BLE001
+            print(f"{name} FAILED: {e}", flush=True)
+            summary.append((name, float("nan"), f"FAILED {type(e).__name__}"))
+
+    print("\n=== summary: name,us_per_call,derived ===", flush=True)
+    for name, us, derived in summary:
+        print(f"{name},{us},{derived}", flush=True)
+
+    # roofline table from dry-run artifacts, if present
+    print("\n=== roofline (from dry-run artifacts) ===", flush=True)
+    try:
+        from benchmarks import roofline
+        roofline.main(["--fmt", "csv"])
+    except Exception as e:                                   # noqa: BLE001
+        print(f"roofline unavailable: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — Trust<T> delegation (Ahmad et al., 2024) as a TPU-native
+multi-pod JAX training/inference framework.  See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from . import checkpoint
+from .checkpoint import latest_step, prune_old, restore, save

@@ -1,0 +1,162 @@
+"""Sharded, atomic, integrity-checked checkpointing with elastic restore.
+
+Layout:   <dir>/step_<N>/
+              manifest.json     — tree structure, shapes, dtypes, hashes, step
+              arrays.npz        — one entry per leaf (host-gathered)
+          <dir>/LATEST          — atomically updated pointer file
+
+Fault-tolerance properties:
+  * atomic publish: write to step_<N>.tmp, fsync, rename, then update LATEST
+    (a torn write can never be observed as a valid checkpoint).
+  * integrity: per-leaf crc32 in the manifest, verified on load.
+  * elastic restore: arrays are saved in logical (global) layout; on restore
+    they are device_put against the *current* mesh's sharding specs, so a job
+    may restart on a different mesh shape (elastic rescale) — tested in
+    tests/test_checkpoint.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def pstr(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return _SEP.join(parts)
+
+    return {pstr(path): leaf for path, leaf in flat}
+
+
+def save(directory: str, step: int, tree: Pytree,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically write a checkpoint; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for name, leaf in leaves.items():
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arrays[name] = arr.view(np.uint16)
+            stored_dtype = "bfloat16"
+        else:
+            arrays[name] = arr
+            stored_dtype = str(arr.dtype)
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape), "dtype": stored_dtype,
+            "crc32": zlib.crc32(np.ascontiguousarray(arrays[name]).tobytes()),
+        }
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, tree_like: Pytree, step: Optional[int] = None,
+            shardings: Optional[Pytree] = None
+            ) -> Tuple[Pytree, int, Dict[str, Any]]:
+    """Restore into the structure of ``tree_like``; device_put against
+    ``shardings`` (pytree of NamedSharding) for elastic re-layout."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint under {directory}"
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves_like = _flatten_with_paths(tree_like)
+    shard_leaves = _flatten_with_paths(shardings) if shardings is not None \
+        else {}
+    out = {}
+    for name, like in leaves_like.items():
+        meta = manifest["leaves"][name]
+        arr = data[name]
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in leaf {name}")
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if name in shard_leaves:
+            out[name] = jax.device_put(arr, shard_leaves[name])
+        else:
+            out[name] = jnp.asarray(arr)
+    # unflatten back into tree_like's structure
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+
+    def pstr(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return _SEP.join(parts)
+
+    ordered = [out[pstr(path)] for path, _ in flat_like]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), ordered)
+    return tree, manifest["step"], manifest.get("extra", {})
+
+
+def prune_old(directory: str, keep: int = 3) -> None:
+    """Keep the newest ``keep`` checkpoints (never the one LATEST points at)."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,3 @@
+from .base import (MeshConfig, ModelConfig, MoEConfig, MambaConfig,
+                   RunConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME)
+from .registry import ARCHS, get_arch, get_smoke_arch, list_archs

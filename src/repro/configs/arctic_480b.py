@@ -1,0 +1,26 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+Dense-MoE hybrid: every layer runs a dense residual MLP (d_ff) in parallel
+with the 128-expert top-2 MoE.  This is the flagship delegation cell (most
+representative of the paper's technique): 128 experts over 16 trustees = 8
+experts per trustee.  56 heads % 16 != 0 -> padded to 64.
+"""
+from .base import ModelConfig, MoEConfig, FFN_MOE_DENSE
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab_size=32000,
+    ffn_kind=FFN_MOE_DENSE,
+    moe=MoEConfig(num_experts=128, top_k=2, d_ff_expert=4864),
+    source="hf:Snowflake/snowflake-arctic-base",
+)
+
+SMOKE = CONFIG.with_overrides(
+    name="arctic-480b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=96,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96),
+    vocab_size=512,
+)

@@ -1,0 +1,234 @@
+"""Configuration dataclasses for the repro framework.
+
+A ``ModelConfig`` fully describes one architecture from the assignment pool.
+``ShapeConfig`` describes one (seq_len, global_batch, kind) input-shape cell.
+``RunConfig`` couples the two with mesh / precision / delegation settings.
+
+All configs are plain frozen dataclasses so they hash, print, and diff cleanly
+and can be used as static args to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Attention / block kinds
+# ---------------------------------------------------------------------------
+
+ATTN_GQA = "gqa"          # grouped-query attention (covers MHA/MQA as cases)
+ATTN_MLA = "mla"          # DeepSeek multi-head latent attention
+BLOCK_ATTN = "attn"
+BLOCK_MAMBA = "mamba"
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+FFN_MOE_DENSE = "moe+dense"   # Arctic-style: MoE with parallel dense residual
+ACT_SILU = "silu"             # SwiGLU gating
+ACT_GELU = "gelu"             # GeGLU gating
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts
+    top_k: int = 0
+    num_shared: int = 0             # shared (always-on) experts
+    d_ff_expert: int = 0            # per-expert hidden size
+    capacity_factor: float = 1.25   # primary slot capacity (paper: slot size)
+    overflow: str = "second_round"  # "drop" | "second_round" | "defer"
+    overflow_factor: float = 1.0    # overflow round capacity factor
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0     # 0 -> ceil(d_model / 16)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank > 0 else -(-d_model // 16)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                     # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # attention details
+    attn_kind: str = ATTN_GQA
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    mla_kv_lora_rank: int = 0        # MLA latent rank
+    mla_q_nope_dim: int = 128
+    mla_q_rope_dim: int = 64
+    mla_v_head_dim: int = 128
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w) sections
+    # mlp
+    act: str = ACT_SILU
+    ffn_kind: str = FFN_DENSE
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    moe_every: int = 1               # layer i uses MoE iff i % moe_every == moe_offset
+    moe_offset: int = 0
+    first_layer_dense: bool = False  # deepseek: layer 0 dense even in MoE nets
+    # hybrid / ssm
+    block_pattern: Tuple[str, ...] = ()   # e.g. jamba period-8 pattern; empty = attn
+    mamba: MambaConfig = field(default_factory=MambaConfig)
+    # embeddings / output
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma: scale embeds by sqrt(d_model)
+    logit_softcap: float = 0.0
+    # enc-dec
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # frontend stubs
+    input_mode: str = "tokens"       # tokens | embeds (vlm/audio precomputed)
+    norm_eps: float = 1e-6
+    # provenance
+    source: str = ""
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.n_heads == 0:
+            return 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(b == BLOCK_MAMBA for b in self.block_pattern) and bool(self.block_pattern)
+
+    @property
+    def has_subquadratic_context(self) -> bool:
+        """True if arch can serve 500k-context decode (SSM/hybrid)."""
+        return bool(self.block_pattern)  # any mamba layers => linear-state context
+
+    def block_kind(self, layer: int) -> str:
+        if not self.block_pattern:
+            return BLOCK_ATTN
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    def layer_ffn_kind(self, layer: int) -> str:
+        if self.ffn_kind == FFN_DENSE:
+            return FFN_DENSE
+        if self.first_layer_dense and layer == 0:
+            return FFN_DENSE
+        if layer % self.moe_every == self.moe_offset:
+            return self.ffn_kind
+        return FFN_DENSE
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assignment: 4 shapes per arch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Run config: mesh + precision + delegation runtime knobs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def trustee_axis(self) -> str:
+        return "model"
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    @property
+    def model_size(self) -> int:
+        return self.shape[self.axes.index("model")]
+
+    @property
+    def data_size(self) -> int:
+        n = 1
+        for a, s in zip(self.axes, self.shape):
+            if a in ("pod", "data"):
+                n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    # precision
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"       # AdamW moments ("bfloat16" for >100B nets)
+    grad_accum_dtype: str = "float32"  # grad accumulator (bf16 for >100B nets)
+    # training
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    grad_accum: int = 1              # microbatches per step (activation mem)
+    remat: str = "dots"              # "none" | "dots" | "full"
+    zero_sharding: bool = True       # delegated (ZeRO-1) optimizer state
+    fsdp_inference: bool = False     # shard params over data at serve too
+                                     # (weight-gathered serving, >100B nets)
+    grad_compression: str = "none"   # "none" | "int8" | "topk"
+    # delegation runtime
+    use_delegation_xent: bool = True
+    local_shortcut: bool = True
+    seq_parallel_attn: Optional[bool] = None  # None -> auto (heads % tp != 0)
+    mla_absorb: bool = False         # MLA decode weight absorption (§Perf)
+    sp_residual: bool = False        # sequence-parallel residual stream (§Perf)
+    mamba_chunked: bool = False      # chunked selective scan (§Perf)
+    mamba_chunk: int = 512
+    use_pallas: bool = False         # kernels (TPU target); jnp ref path if False
+    unroll_layers: bool = False      # python-loop groups (dry-run cost probes)
+    xent_chunk: int = 512            # seq chunk for the delegated xent
+    seed: int = 0
+
+    def auto_seq_parallel(self) -> bool:
+        if self.seq_parallel_attn is not None:
+            return self.seq_parallel_attn
+        m = self.model
+        if m.n_heads == 0:
+            return False
+        return (m.n_heads % self.mesh.model_size) != 0
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,20 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 (attn-free) d_ff=0 vocab=65024,
+ssm_state=16 — mamba1 arch [arXiv:2410.05355; unverified].
+
+Pure Mamba-1: every layer is a selective-SSM mixer; no attention, no FFN.
+Runs the long_500k cell (linear-state context)."""
+from .base import MambaConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    block_pattern=("mamba",),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    source="arXiv:2410.05355; hf:tiiuae/falcon-mamba-7b",
+)
+
+SMOKE = CONFIG.with_overrides(
+    name="falcon-mamba-7b-smoke", n_layers=2, d_model=64,
+    vocab_size=512, mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+)

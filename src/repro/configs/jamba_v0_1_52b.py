@@ -1,0 +1,30 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE
+[arXiv:2403.19887; hf].
+
+Period-8 block pattern with attention at offset 4; MoE every 2nd layer.
+The scanned group is the 8-layer pattern (4 groups).
+"""
+from .base import MambaConfig, ModelConfig, MoEConfig, FFN_MOE
+
+_PATTERN = ("mamba", "mamba", "mamba", "mamba",
+            "attn", "mamba", "mamba", "mamba")
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=65536,
+    ffn_kind=FFN_MOE,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336),
+    moe_every=2, moe_offset=1,
+    block_pattern=_PATTERN,
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    source="arXiv:2403.19887; hf:ai21labs/Jamba-v0.1",
+)
+
+SMOKE = CONFIG.with_overrides(
+    name="jamba-v0.1-52b-smoke", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128),
+    vocab_size=512, mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+)

@@ -1,0 +1,19 @@
+"""qwen1.5-32b [dense] — 64L d_model=5120 40H (GQA kv=40) d_ff=27392
+vocab=152064 — QKV bias [hf:Qwen/Qwen1.5-0.5B; hf].
+
+MHA (kv == q = 40); 40 % 16 != 0 -> both padded to 48 heads (DESIGN.md §5).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40,
+    d_ff=27392, vocab_size=152064,
+    qkv_bias=True, rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen1.5-32B",
+)
+
+SMOKE = CONFIG.with_overrides(
+    name="qwen1.5-32b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab_size=512,
+)

@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [audio] — 24L d_model=1024 16H (GQA kv=16)
+d_ff=8192 vocab=256206 — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+Encoder-decoder backbone only (24 encoder + 24 decoder layers); the speech
+frontend is a STUB per assignment: input_specs provides precomputed frame
+embeddings (B, S_src, d_model).  vocab 256206 is padded to the next multiple
+of max(tp, 128) for vocab sharding (recorded in DESIGN.md §4)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206,
+    is_encoder_decoder=True, n_encoder_layers=24,
+    input_mode="embeds",
+    source="arXiv:2308.11596; hf:facebook/seamless-m4t-v2-large",
+)
+
+SMOKE = CONFIG.with_overrides(
+    name="seamless-m4t-large-v2-smoke", n_layers=2, n_encoder_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=512,
+)

@@ -1,0 +1,26 @@
+# repro.core — Trust<T> delegation as a TPU-native distribution primitive.
+#
+# channel.py   the delegation channel (pack/transmit/serve/respond/unpack)
+# trust.py     Trust / TrusteeGroup — the user-facing apply()/apply_then() API
+# kvstore.py   DelegatedKVStore (paper §6.3)
+# lockstore.py lock-analog baselines (Fig. 6 competitors)
+# nested.py    launch()/nested delegation (chained channel rounds)
+# routing.py   key -> trustee routers + workload generators
+# meshctx.py   current-mesh threading for shard_map islands inside jit
+from .channel import (ChannelConfig, DelegatedOp, DelegationFuture, Packed,
+                      Received, delegate, delegate_async, pack, respond,
+                      serve_optable, transmit, unpack)
+from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
+from .kvstore import DelegatedKVStore, make_kv_ops
+from .lockstore import AtomicAddStore, FetchRMWStore, conflict_ranks
+from .meshctx import constrain, current_mesh, use_mesh, set_mesh
+from .nested import launch_serve
+
+__all__ = [
+    "ChannelConfig", "DelegatedOp", "DelegationFuture", "Packed", "Received",
+    "delegate", "delegate_async", "pack", "respond", "serve_optable",
+    "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
+    "local_trustees", "DelegatedKVStore", "make_kv_ops", "AtomicAddStore",
+    "FetchRMWStore", "conflict_ranks", "constrain", "current_mesh",
+    "use_mesh", "set_mesh", "launch_serve",
+]

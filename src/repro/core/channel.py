@@ -1,0 +1,379 @@
+"""The Trust<T> delegation channel, adapted to TPU SPMD.
+
+Paper mapping (see DESIGN.md §2):
+
+  * request slot  -> fixed-capacity buffer ``(T, C, *payload)`` per device,
+                     one row block per (client, trustee) pair, moved by ONE
+                     ``all_to_all`` over the trustee mesh axis.
+  * count header  -> ``counts[t]`` = number of valid requests for trustee t
+                     (the paper's request counter; the ready bit is subsumed
+                     by SPMD collective synchronization).
+  * two-part slot -> ``capacity`` (primary block, sized for mean load) plus an
+                     ``overflow`` policy: "second_round" ships the excess in a
+                     second, narrower all_to_all; "drop" discards (MoE-style
+                     capacity factor); "defer" returns the unsent mask to the
+                     caller (paper: wait for slot availability).
+  * FIFO per pair -> pack is a stable sort by destination, so requests from
+                     one client to one trustee are served in issue order.
+
+All functions here are *per-shard* code: they must run inside a ``shard_map``
+whose mesh contains ``axis``.  ``Trust`` (trust.py) provides that wrapper.
+Payloads are pytrees of ``(R, ...)`` arrays — the "captured environment" rows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class ChannelConfig:
+    axis: str = "model"            # trustee mesh axis (or tuple of axes)
+    capacity: int = 0              # primary rows per (client, trustee) pair
+    overflow: str = "drop"         # "drop" | "second_round" | "defer"
+    overflow_capacity: int = 0     # rows per pair in the overflow round
+    local_shortcut: bool = False   # apply self-addressed requests inline (§5.2.1)
+    interpret: bool = False        # route pack through Pallas interpret kernel
+
+    def total_capacity(self) -> int:
+        if self.overflow == "second_round":
+            return self.capacity + self.overflow_capacity
+        return self.capacity
+
+
+class Packed(NamedTuple):
+    """Client-side packed request slots (pre-transmission)."""
+    slots: Pytree          # leaves (T*C, ...) — primary block
+    counts: jax.Array      # (T,) int32 — count header per pair
+    slots2: Optional[Pytree]   # overflow block leaves (T*C2, ...) or None
+    counts2: Optional[jax.Array]
+    request_slot: jax.Array    # (R,) int32: row id in [0, T*C + T*C2) or -1
+    dropped: jax.Array         # (R,) bool: not sent this step (drop/defer)
+
+
+class Received(NamedTuple):
+    """Trustee-side received requests (post-transmission)."""
+    rows: Pytree           # leaves (T*C [+T*C2], ...) — flattened request rows
+    valid: jax.Array       # (N,) bool
+    client: jax.Array      # (N,) int32 — originating client (response routing)
+
+
+def _group_positions(dst: jax.Array, n_trustees: int):
+    """Stable grouping of requests by destination.
+
+    Returns (order, key_sorted, pos_sorted, group_sizes):
+      order       (R,) permutation grouping requests by trustee, FIFO inside
+      key_sorted  (R,) destination of order[i] (n_trustees == inactive)
+      pos_sorted  (R,) rank of the request within its destination group
+      group_sizes (T,) demand per trustee (pre-capacity — used for load stats)
+    """
+    r = dst.shape[0]
+    key = jnp.where(dst < 0, n_trustees, dst).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    key_sorted = key[order]
+    # start offset of each group via binary search on the sorted keys
+    starts = jnp.searchsorted(key_sorted, jnp.arange(n_trustees + 1, dtype=jnp.int32))
+    pos_sorted = jnp.arange(r, dtype=jnp.int32) - starts[key_sorted]
+    group_sizes = (starts[1:] - starts[:-1]).astype(jnp.int32)
+    return order, key_sorted, pos_sorted, group_sizes
+
+
+def _scatter_rows(payload: Pytree, order: jax.Array, row_ids: jax.Array,
+                  valid: jax.Array, n_rows: int) -> Pytree:
+    """Scatter payload rows (in sorted order) into a slot buffer; invalid rows
+    are dropped (out-of-bounds index + mode='drop')."""
+    idx = jnp.where(valid, row_ids, n_rows)
+
+    def scat(leaf):
+        sorted_leaf = jnp.take(leaf, order, axis=0)
+        out = jnp.zeros((n_rows,) + leaf.shape[1:], leaf.dtype)
+        return out.at[idx].set(sorted_leaf, mode="drop")
+
+    return jax.tree.map(scat, payload)
+
+
+def pack(dst: jax.Array, payload: Pytree, n_trustees: int,
+         cfg: ChannelConfig) -> Tuple[Packed, jax.Array]:
+    """Client-side: bin requests into per-trustee slots with capacity.
+
+    dst: (R,) int32 trustee id per request; -1 marks inactive rows.
+    Returns (Packed, group_sizes) — group_sizes is pre-capacity demand.
+    """
+    c1 = cfg.capacity
+    assert c1 > 0, "channel capacity must be positive"
+    r = dst.shape[0]
+    order, key_sorted, pos_sorted, group_sizes = _group_positions(dst, n_trustees)
+
+    active_sorted = key_sorted < n_trustees
+    in1 = active_sorted & (pos_sorted < c1)
+    rows1 = key_sorted * c1 + jnp.minimum(pos_sorted, c1 - 1)
+    slots1 = _scatter_rows(payload, order, rows1, in1, n_trustees * c1)
+    counts1 = jnp.minimum(group_sizes, c1)
+
+    slots2 = counts2 = None
+    in2 = jnp.zeros_like(in1)
+    slot_of_sorted = jnp.where(in1, rows1, -1)
+    if cfg.overflow == "second_round" and cfg.overflow_capacity > 0:
+        c2 = cfg.overflow_capacity
+        pos2 = pos_sorted - c1
+        in2 = active_sorted & (pos2 >= 0) & (pos2 < c2)
+        rows2 = key_sorted * c2 + jnp.clip(pos2, 0, c2 - 1)
+        slots2 = _scatter_rows(payload, order, rows2, in2, n_trustees * c2)
+        counts2 = jnp.clip(group_sizes - c1, 0, c2)
+        slot_of_sorted = jnp.where(in2, n_trustees * c1 + rows2, slot_of_sorted)
+
+    # invert the sort: request_slot[order[i]] = slot_of_sorted[i]
+    request_slot = jnp.zeros((r,), jnp.int32).at[order].set(slot_of_sorted)
+    sent_sorted = in1 | in2
+    dropped = jnp.ones((r,), bool).at[order].set(~sent_sorted)
+    dropped = dropped & (dst >= 0)
+
+    return Packed(slots1, counts1, slots2, counts2, request_slot, dropped), group_sizes
+
+
+def _a2a(x: jax.Array, axis: str, n: int) -> jax.Array:
+    """all_to_all over the trustee axis on a leading-(T,)-shaped array."""
+    if n == 1:
+        return x
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def transmit(packed: Packed, n_trustees: int, cfg: ChannelConfig) -> Received:
+    """Move request slots to their trustees (the delegation message)."""
+    t, c1 = n_trustees, cfg.capacity
+
+    def send_block(slots, counts, c):
+        rows = jax.tree.map(
+            lambda l: _a2a(l.reshape((t, c) + l.shape[1:]), cfg.axis, t)
+                        .reshape((t * c,) + l.shape[1:]),
+            slots)
+        cnt = _a2a(counts.reshape(t, 1), cfg.axis, t).reshape(t)
+        valid = (jnp.arange(c)[None, :] < cnt[:, None]).reshape(-1)
+        client = jnp.repeat(jnp.arange(t, dtype=jnp.int32), c)
+        return rows, valid, client
+
+    rows, valid, client = send_block(packed.slots, packed.counts, c1)
+    if packed.slots2 is not None:
+        c2 = cfg.overflow_capacity
+        rows2, valid2, client2 = send_block(packed.slots2, packed.counts2, c2)
+        rows = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), rows, rows2)
+        valid = jnp.concatenate([valid, valid2])
+        client = jnp.concatenate([client, client2])
+    return Received(rows, valid, client)
+
+
+def respond(responses: Pytree, n_trustees: int, cfg: ChannelConfig) -> Pytree:
+    """Move response rows back to clients (matching response slot)."""
+    t, c1 = n_trustees, cfg.capacity
+    n1 = t * c1
+
+    def back(leaf_block, c):
+        return _a2a(leaf_block.reshape((t, c) + leaf_block.shape[1:]), cfg.axis, t) \
+                 .reshape((t * c,) + leaf_block.shape[1:])
+
+    if cfg.overflow == "second_round" and cfg.overflow_capacity > 0:
+        c2 = cfg.overflow_capacity
+        out = jax.tree.map(
+            lambda l: jnp.concatenate([back(l[:n1], c1), back(l[n1:], c2)], 0),
+            responses)
+    else:
+        out = jax.tree.map(lambda l: back(l, c1), responses)
+    return out
+
+
+def unpack(responses_at_client: Pytree, request_slot: jax.Array) -> Pytree:
+    """Client-side: responses back into original request order.
+    Rows for unsent requests (slot == -1) come back as zeros."""
+    def take(leaf):
+        safe = jnp.where(request_slot >= 0, request_slot, 0)
+        rows = jnp.take(leaf, safe, axis=0)
+        mask_shape = (request_slot.shape[0],) + (1,) * (leaf.ndim - 1)
+        return jnp.where((request_slot >= 0).reshape(mask_shape), rows,
+                         jnp.zeros_like(rows))
+    return jax.tree.map(take, responses_at_client)
+
+
+# ---------------------------------------------------------------------------
+# Full synchronous round trip == paper's apply()
+# ---------------------------------------------------------------------------
+
+ServeFn = Callable[[Pytree, Received], Tuple[Pytree, Pytree]]
+# (state_shard, received) -> (new_state_shard, response_rows)
+
+
+class ChannelInfo(NamedTuple):
+    group_sizes: jax.Array   # (T,) pre-capacity demand from this client
+    dropped: jax.Array       # (R,) bool — not transmitted this round
+    n_rows: int              # static: channel rows per device per round
+
+
+def _merge_local(responses: Pytree, local_resp: Pytree, local_mask: jax.Array) -> Pytree:
+    def sel(chan, loc):
+        m = local_mask.reshape((-1,) + (1,) * (chan.ndim - 1))
+        return jnp.where(m, loc, chan)
+    return jax.tree.map(sel, responses, local_resp)
+
+
+def _my_trustee_id(axis) -> jax.Array:
+    try:
+        return lax.axis_index(axis)
+    except NameError:
+        return jnp.int32(0)
+
+
+def _split_local(dst: jax.Array, payload: Pytree, axis):
+    """Local-trustee shortcut (§5.2.1): requests addressed to self skip the
+    channel; they are appended to the trustee's serve batch directly, so one
+    serve call processes channel + local rows in a single deterministic pass
+    (op-table order), exactly as if the trustee fiber handled them."""
+    my_id = _my_trustee_id(axis)
+    local_mask = dst == my_id
+    remote_dst = jnp.where(local_mask, -1, dst)
+    local_recv = Received(rows=payload, valid=local_mask,
+                          client=jnp.full(dst.shape, my_id, jnp.int32))
+    return remote_dst, local_recv, local_mask
+
+
+def _concat_received(a: Received, b: Received) -> Received:
+    return Received(
+        rows=jax.tree.map(lambda x, y: jnp.concatenate([x, y], 0), a.rows, b.rows),
+        valid=jnp.concatenate([a.valid, b.valid]),
+        client=jnp.concatenate([a.client, b.client]))
+
+
+def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
+             n_trustees: int, cfg: ChannelConfig
+             ) -> Tuple[Pytree, Pytree, ChannelInfo]:
+    """Synchronous delegation: pack -> transmit -> serve -> respond -> unpack.
+
+    Must run inside shard_map over ``cfg.axis``.  Returns
+    (new_state_shard, responses_in_request_order, info).
+    """
+    r = dst.shape[0]
+    local_recv = local_mask = None
+    if cfg.local_shortcut:
+        dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis)
+        if n_trustees == 1:
+            new_state, local_resp = serve_fn(state, local_recv)
+            info = ChannelInfo(jnp.zeros((1,), jnp.int32),
+                               jnp.zeros((r,), bool), 0)
+            return new_state, local_resp, info
+
+    packed, group_sizes = pack(dst, payload, n_trustees, cfg)
+    received = transmit(packed, n_trustees, cfg)
+    n_chan = received.valid.shape[0]
+    if local_recv is not None:
+        received = _concat_received(received, local_recv)
+    new_state, resp_rows = serve_fn(state, received)
+    if local_recv is not None:
+        local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
+        resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
+    resp_at_client = respond(resp_rows, n_trustees, cfg)
+    responses = unpack(resp_at_client, packed.request_slot)
+    if local_recv is not None:
+        responses = _merge_local(responses, local_resp, local_mask)
+    info = ChannelInfo(group_sizes, packed.dropped,
+                       n_trustees * cfg.total_capacity())
+    return new_state, responses, info
+
+
+class DelegationFuture(NamedTuple):
+    """apply_then(): response transmission + unpack deferred (§4.2).
+
+    The serve already happened; calling ``wait()`` later gives XLA's
+    latency-hiding scheduler room to overlap the response collective with
+    whatever the client computes in between (the fiber analog)."""
+    resp_rows: Pytree
+    request_slot: jax.Array
+    n_trustees: int
+    cfg: ChannelConfig
+    local_resp: Optional[Pytree] = None
+    local_mask: Optional[jax.Array] = None
+
+    def wait(self) -> Pytree:
+        if self.n_trustees == 1 and self.cfg.local_shortcut:
+            return self.local_resp
+        resp_at_client = respond(self.resp_rows, self.n_trustees, self.cfg)
+        out = unpack(resp_at_client, self.request_slot)
+        if self.local_resp is not None:
+            out = _merge_local(out, self.local_resp, self.local_mask)
+        return out
+
+
+def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
+                   serve_fn: ServeFn, n_trustees: int, cfg: ChannelConfig
+                   ) -> Tuple[Pytree, DelegationFuture, ChannelInfo]:
+    """apply_then(): returns immediately after the serve phase."""
+    r = dst.shape[0]
+    local_recv = local_mask = local_resp = None
+    if cfg.local_shortcut:
+        dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis)
+        if n_trustees == 1:
+            new_state, local_resp = serve_fn(state, local_recv)
+            fut = DelegationFuture(None, None, 1, cfg, local_resp, local_mask)
+            info = ChannelInfo(jnp.zeros((1,), jnp.int32),
+                               jnp.zeros((r,), bool), 0)
+            return new_state, fut, info
+
+    packed, group_sizes = pack(dst, payload, n_trustees, cfg)
+    received = transmit(packed, n_trustees, cfg)
+    n_chan = received.valid.shape[0]
+    if local_recv is not None:
+        received = _concat_received(received, local_recv)
+    new_state, resp_rows = serve_fn(state, received)
+    if local_recv is not None:
+        local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
+        resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
+    fut = DelegationFuture(resp_rows, packed.request_slot, n_trustees, cfg,
+                           local_resp, local_mask)
+    info = ChannelInfo(group_sizes, packed.dropped,
+                       n_trustees * cfg.total_capacity())
+    return new_state, fut, info
+
+
+# ---------------------------------------------------------------------------
+# Op table — the SPMD "vtable" for delegated closures (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DelegatedOp:
+    """A registered, vectorized operation a trustee can apply.
+
+    ``apply(state, rows, valid, client) -> (new_state, response_rows)`` must be
+    pure, vectorized over rows, and a no-op on rows where ``valid`` is False.
+    This is the compile-time analog of the paper's closure fat pointer; the
+    payload rows are the captured environment (pass-by-value enforced)."""
+    name: str
+    apply: Callable
+
+
+def serve_optable(ops: Tuple[DelegatedOp, ...],
+                  active_ids: Optional[Tuple[int, ...]] = None) -> ServeFn:
+    """Multi-op serve: payload rows carry an 'op' column selecting the op.
+    Each op is applied masked (small op tables — GET/PUT/etc.).  When the
+    caller statically knows which ops appear in the batch (Trust does),
+    ``active_ids`` skips the rest at trace time."""
+    ids = tuple(range(len(ops))) if active_ids is None else tuple(active_ids)
+
+    def serve(state, received: Received):
+        rows = received.rows
+        op_ids = rows["op"]
+        out_resp = None
+        for i in ids:
+            m = received.valid & (op_ids == i) if len(ids) > 1 else received.valid
+            state, resp = ops[i].apply(state, rows, m, received.client)
+            if out_resp is None:
+                out_resp = jax.tree.map(jnp.zeros_like, resp)
+            out_resp = jax.tree.map(
+                lambda acc, r: jnp.where(
+                    m.reshape((-1,) + (1,) * (r.ndim - 1)), r, acc),
+                out_resp, resp)
+        return state, out_resp
+    return serve

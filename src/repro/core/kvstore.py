@@ -1,0 +1,201 @@
+"""DelegatedKVStore — the paper's key-value store (§6.3) as a Trust.
+
+State: a direct-indexed table of fixed-width values, range/mod-partitioned
+over trustees (the paper pre-fills a known key space and benchmarks GET/PUT
+over it; memcached's hash power is fixed likewise).  Ops:
+
+  GET(key)                 -> value            (read request, large response)
+  PUT(key, value)          -> ()               (write request, no response —
+                                                the paper notes zero-size PUT
+                                                responses save response bytes)
+  ADD(key, delta)          -> old value        (fetch-and-add, Fig 6)
+  CAS(key, expect, value)  -> success flag
+
+Within one channel round, multiple writers to one key are resolved
+last-writer-wins *in request order* (client id, slot order) — matching the
+paper's per-pair FIFO plus a deterministic inter-client order (the Rust
+runtime serves slots in client order; we reproduce that exactly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .channel import DelegatedOp, Received
+from .trust import Trust, TrusteeGroup
+from . import routing
+
+Pytree = Any
+
+
+def _mask(x, m):
+    return jnp.where(m.reshape((-1,) + (1,) * (x.ndim - 1)), x, jnp.zeros_like(x))
+
+
+def _ordered_last_writer(table: jax.Array, idx: jax.Array, rows: jax.Array,
+                         m: jax.Array) -> jax.Array:
+    """Scatter rows into table[idx]; conflicting rows resolve to the LAST
+    valid row in request order (rows arrive sorted by client then slot)."""
+    safe_idx = jnp.where(m, idx, table.shape[0])
+    # .at[].set applies updates in index order; to get last-writer-wins we
+    # scatter the request's sequence number and keep the max, then gather.
+    seq = jnp.arange(1, idx.shape[0] + 1, dtype=jnp.int32)
+    winner = jnp.zeros((table.shape[0] + 1,), jnp.int32).at[safe_idx].max(
+        jnp.where(m, seq, 0), mode="drop")[: table.shape[0]]
+    has_write = winner > 0
+    win_rows = rows[jnp.clip(winner - 1, 0, None)]
+    return jnp.where(has_write[:, None] if table.ndim > 1 else has_write,
+                     win_rows, table)
+
+
+def make_kv_ops(n_trustees: int, value_width: int,
+                dtype=jnp.float32) -> Tuple[DelegatedOp, ...]:
+    """Build the op table.  Local key index = key // n_trustees (mod router)."""
+
+    def local_idx(rows):
+        return (rows["key"] // n_trustees).astype(jnp.int32)
+
+    def get(state, rows, m, client):
+        idx = jnp.where(m, local_idx(rows), 0)
+        vals = state["table"][idx]
+        return state, {"value": _mask(vals, m),
+                       "flag": jnp.zeros(m.shape, jnp.int32)}
+
+    def put(state, rows, m, client):
+        idx = local_idx(rows)
+        table = _ordered_last_writer(state["table"], idx, rows["value"], m)
+        return {**state, "table": table}, \
+               {"value": jnp.zeros(m.shape + (value_width,), dtype),
+                "flag": jnp.zeros(m.shape, jnp.int32)}
+
+    def add(state, rows, m, client):
+        # fetch-and-add: old value is the table value plus the sum of all
+        # *earlier* valid requests to the same key (request order).  Computed
+        # with a sort + segmented exclusive prefix sum (O(R log R)).
+        n_local = state["table"].shape[0]
+        idx = jnp.where(m, local_idx(rows), n_local)
+        delta = _mask(rows["value"], m)
+        order = jnp.argsort(idx, stable=True)
+        idx_s = idx[order]
+        delta_s = delta[order]
+        incl = jnp.cumsum(delta_s, axis=0)
+        excl = incl - delta_s
+        seg_start = jnp.searchsorted(idx_s, idx_s, side="left")
+        prior_s = excl - excl[seg_start]
+        prior = jnp.zeros_like(delta).at[order].set(prior_s)
+        base = state["table"][jnp.where(m, idx, 0)]
+        old = _mask(base + prior, m)
+        table = state["table"].at[idx].add(delta, mode="drop")
+        return {**state, "table": table}, \
+               {"value": old, "flag": jnp.zeros(m.shape, jnp.int32)}
+
+    def cas(state, rows, m, client):
+        idx = jnp.where(m, local_idx(rows), 0)
+        cur = state["table"][idx]
+        ok = m & jnp.all(cur == rows["expect"], axis=-1)
+        table = _ordered_last_writer(state["table"], local_idx(rows),
+                                     rows["value"], ok)
+        return {**state, "table": table}, \
+               {"value": _mask(cur, m), "flag": ok.astype(jnp.int32)}
+
+    return (DelegatedOp("get", get), DelegatedOp("put", put),
+            DelegatedOp("add", add), DelegatedOp("cas", cas))
+
+
+class DelegatedKVStore:
+    """High-level store facade used by the KV-store / memcached benchmarks."""
+
+    def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
+                 axis: Any = None, dtype=jnp.float32, capacity: int = 0,
+                 overflow: str = "second_round", overflow_capacity: int = 0,
+                 local_shortcut: bool = True):
+        axis = axis if axis is not None else tuple(mesh.axis_names)
+        group = TrusteeGroup(mesh, axis)
+        t = group.n_trustees
+        self.n_keys = n_keys
+        self.n_keys_padded = ((n_keys + t - 1) // t) * t
+        self.value_width = value_width
+        table = jnp.zeros((self.n_keys_padded, value_width), dtype)
+        resp_like = {"value": jnp.zeros((1, value_width), dtype),
+                     "flag": jnp.zeros((1,), jnp.int32)}
+        ops = make_kv_ops(t, value_width, dtype)
+        self.trust = group.entrust(
+            {"table": table}, ops, resp_like,
+            capacity=capacity, overflow=overflow,
+            overflow_capacity=overflow_capacity,
+            local_shortcut=local_shortcut)
+        self.t = t
+        self.dtype = dtype
+
+    # -- routing ---------------------------------------------------------
+    def route(self, keys: jax.Array) -> jax.Array:
+        return routing.mod_router(keys, self.t)
+
+    def _payload(self, keys, value=None, expect=None):
+        p = {"key": keys.astype(jnp.int32)}
+        if value is not None:
+            p["value"] = value.astype(self.dtype)
+        if expect is not None:
+            p["expect"] = expect.astype(self.dtype)
+        return p
+
+    # -- sync API ----------------------------------------------------------
+    def get(self, keys):
+        r = self.trust.apply("get", self.route(keys), self._payload(keys))
+        return r["value"]
+
+    def put(self, keys, values):
+        self.trust.apply("put", self.route(keys), self._payload(keys, values))
+
+    def add(self, keys, deltas):
+        r = self.trust.apply("add", self.route(keys),
+                             self._payload(keys, deltas))
+        return r["value"]
+
+    def cas(self, keys, expect, values):
+        r = self.trust.apply("cas", self.route(keys),
+                             self._payload(keys, values, expect))
+        return r["flag"], r["value"]
+
+    # -- async API (apply_then) ---------------------------------------------
+    def get_then(self, keys, then=None):
+        return self.trust.submit("get", self.route(keys),
+                                 self._payload(keys), then=then)
+
+    def put_then(self, keys, values, then=None):
+        return self.trust.submit("put", self.route(keys),
+                                 self._payload(keys, values), then=then)
+
+    def flush(self):
+        self.trust.flush()
+
+    # -- bulk load (bench setup) ---------------------------------------------
+    def prefill(self, values: np.ndarray) -> None:
+        """Directly install table contents (pre-fill before timed runs)."""
+        padded = np.zeros((self.n_keys_padded, self.value_width),
+                          dtype=np.dtype(self.dtype.dtype)
+                          if hasattr(self.dtype, "dtype") else self.dtype)
+        padded[: values.shape[0]] = values
+        # owner-major layout: trustee t holds keys {k : k % T == t} at k // T
+        t = self.t
+        owner_major = np.concatenate(
+            [padded[np.arange(i, self.n_keys_padded, t)] for i in range(t)], 0)
+        state = self.trust.state()
+        new_table = jax.device_put(owner_major.astype(padded.dtype),
+                                   state["table"].sharding)
+        self.trust.set_state({**state, "table": new_table})
+
+    def dump(self) -> np.ndarray:
+        """Gather table to host in key order (tests only)."""
+        t = self.t
+        owner_major = np.asarray(self.trust.state()["table"])
+        n_local = self.n_keys_padded // t
+        out = np.zeros_like(owner_major)
+        for i in range(t):
+            out[np.arange(i, self.n_keys_padded, t)] = \
+                owner_major[i * n_local:(i + 1) * n_local]
+        return out[: self.n_keys]

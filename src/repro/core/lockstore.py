@@ -1,0 +1,149 @@
+"""Lock-analog baselines (the paper's Mutex / spinlock / MCS competitors).
+
+There are no locks on a TPU mesh — but locking has a precise cost-model
+translation (DESIGN.md §2): a lock moves the DATA to the COMPUTE.  A thread
+acquires exclusivity (cache-line transfer), applies its critical section
+locally, and releases.  Two costs dominate, and both transfer:
+
+  1. data round-trip: the object's bytes travel owner -> client -> owner
+     (vs. delegation: request bytes travel client -> owner, response back).
+  2. serialization: clients whose critical sections touch the same object
+     must execute in separate rounds (the lock convoy).  Uncongested, one
+     round suffices and locking matches delegation — exactly the paper's
+     Fig. 6a right-hand side.  Congested, rounds grow with the hottest key's
+     writer multiplicity — Fig. 6a/6b left-hand side collapse.
+
+``FetchRMWStore`` implements the general lock analog: per serialization
+round, gather rows from owners, apply the critical section client-side,
+write rows back.  ``rw`` mode mimics readers-writer locks (reads are one
+parallel round; only writes serialize).  ``AtomicAddStore`` is the
+fetch-and-add-instruction analog (commutative combine, no serialization) —
+the strongest possible baseline for Fig. 6.
+
+Note the implementation reuses the *same* Trust API — mirroring the paper's
+observation (§3) that the Trust<T> interface could also be backed by locks.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .kvstore import DelegatedKVStore
+
+
+def conflict_ranks(keys: np.ndarray, n_clients: int) -> Tuple[np.ndarray, int]:
+    """Host-side lock-acquisition order: rank of each request among all
+    requests to the same key (round-robin over clients, FIFO per client).
+    Returns (ranks, n_rounds).  In a real lock system this order emerges from
+    hardware arbitration; the benchmark precomputes it so the TPU emulation
+    only pays the *execution* cost of serialization, which favors the lock
+    baseline (no acquisition traffic is charged)."""
+    keys = np.asarray(keys)
+    flat = keys.reshape(-1)
+    order = np.argsort(flat, kind="stable")
+    sorted_keys = flat[order]
+    seg_start = np.searchsorted(sorted_keys, sorted_keys, side="left")
+    ranks_flat = np.arange(flat.shape[0]) - seg_start
+    ranks = np.empty_like(ranks_flat)
+    ranks[order] = ranks_flat
+    ranks = ranks.reshape(keys.shape)
+    return ranks.astype(np.int32), int(ranks.max(initial=0)) + 1
+
+
+class FetchRMWStore:
+    """General lock analog: fetch rows, mutate client-side, write back.
+
+    Internally reuses the delegated channel for the fetch and the write-back
+    (on a mesh those ARE the gather/scatter), so the comparison against
+    DelegatedKVStore isolates exactly the algorithmic difference:
+    2x value-bytes moved + serialization rounds vs. 1 request round.
+    """
+
+    def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
+                 dtype=jnp.float32, rw_lock: bool = False, **kw):
+        self.store = DelegatedKVStore(mesh, n_keys, value_width, dtype=dtype,
+                                      local_shortcut=False, **kw)
+        self.rw_lock = rw_lock
+        self.value_width = value_width
+        self.n_rounds_executed = 0
+
+    def dump(self):
+        return self.store.dump()
+
+    def prefill(self, values):
+        self.store.prefill(values)
+
+    def rmw(self, keys: jax.Array, crit_fn, ranks: np.ndarray, n_rounds: int,
+            payload: Optional[jax.Array] = None) -> jax.Array:
+        """Apply ``crit_fn(value_row, payload_row) -> new_row`` under mutual
+        exclusion.  ``ranks``/``n_rounds`` from ``conflict_ranks``."""
+        ranks = jnp.asarray(ranks)
+        out = jnp.zeros((keys.shape[0], self.value_width),
+                        self.store.dtype)
+        for r in range(n_rounds):
+            active = ranks == r
+            ks = jnp.where(active, keys, -1)
+            dst = jnp.where(active, self.store.route(keys), -1)
+            # acquire + fetch: rows travel owner -> client
+            got = self.store.trust.apply(
+                "get", dst, {"key": ks.astype(jnp.int32)})
+            new_rows = crit_fn(got["value"],
+                               payload if payload is not None else got["value"])
+            # write back + release: rows travel client -> owner
+            self.store.trust.apply(
+                "put", dst, {"key": ks.astype(jnp.int32),
+                             "value": new_rows.astype(self.store.dtype)})
+            m = active[:, None]
+            out = jnp.where(m, got["value"], out)
+            self.n_rounds_executed += 1
+        return out
+
+    def get(self, keys: jax.Array) -> jax.Array:
+        # readers-writer lock: reads are a single parallel round
+        return self.store.get(keys)
+
+    def put(self, keys: jax.Array, values: jax.Array, ranks: np.ndarray,
+            n_rounds: int) -> None:
+        if self.rw_lock:
+            # writers still serialize per conflicting key
+            ranks = jnp.asarray(ranks)
+            for r in range(n_rounds):
+                active = ranks == r
+                dst = jnp.where(active, self.store.route(keys), -1)
+                got = self.store.trust.apply(           # exclusive acquire
+                    "get", dst, {"key": keys.astype(jnp.int32)})
+                del got
+                self.store.trust.apply(
+                    "put", dst, {"key": keys.astype(jnp.int32),
+                                 "value": values.astype(self.store.dtype)})
+                self.n_rounds_executed += 1
+        else:
+            _, n = conflict_ranks(np.asarray(keys), 0)
+            self.rmw(keys, lambda _v, p: p, *conflict_ranks(np.asarray(keys), 0),
+                     payload=values)
+
+
+class AtomicAddStore:
+    """Fetch-and-add *instruction* analog: commutative scatter-add combine.
+
+    No serialization rounds (the hardware instruction analog), but it only
+    supports commutative integer ops — the same restriction real atomics
+    have.  This is the strongest baseline for the Fig. 6 microbenchmark."""
+
+    def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
+                 dtype=jnp.float32, **kw):
+        self.store = DelegatedKVStore(mesh, n_keys, value_width, dtype=dtype,
+                                      local_shortcut=False, **kw)
+
+    def dump(self):
+        return self.store.dump()
+
+    def prefill(self, values):
+        self.store.prefill(values)
+
+    def add(self, keys: jax.Array, deltas: jax.Array) -> jax.Array:
+        return self.store.add(keys, deltas)

@@ -1,0 +1,86 @@
+"""Mesh context threading.
+
+Model / channel code needs the current ``jax.sharding.Mesh`` to build
+``shard_map`` islands inside a ``jit``-traced program.  We thread it through a
+module-level context instead of every call signature (the MaxText pattern).
+
+A trivial ``(1, 1)`` mesh over the single local device is installed by default
+so all code paths (including the delegation channel's collectives) run
+unchanged in single-device tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _default_mesh() -> Mesh:
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def current_mesh() -> Mesh:
+    m = getattr(_state, "mesh", None)
+    if m is None:
+        m = _default_mesh()
+        _state.mesh = m
+    return m
+
+
+def set_mesh(mesh: Mesh) -> None:
+    _state.mesh = mesh
+
+
+def set_batch_axes(axes) -> None:
+    """Override which mesh axes shard the batch dim ("default" = pod+data).
+    Cells with global_batch not divisible by the data size (long_500k b=1)
+    set this to () so batch dims stay replicated."""
+    _state.batch_axes = axes
+
+
+def batch_axes():
+    return getattr(_state, "batch_axes", "default")
+
+
+def set_context(mesh: Mesh, axes="default") -> None:
+    set_mesh(mesh)
+    set_batch_axes(axes)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def axis_size(axis: str) -> int:
+    mesh = current_mesh()
+    return int(mesh.shape[axis]) if axis in mesh.shape else 1
+
+
+def data_axes() -> Tuple[str, ...]:
+    mesh = current_mesh()
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def named_sharding(*spec) -> NamedSharding:
+    return NamedSharding(current_mesh(), P(*spec))
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the current mesh (no-op on 1 device)."""
+    mesh = current_mesh()
+    if mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

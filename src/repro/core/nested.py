@@ -1,0 +1,61 @@
+"""Nested delegation — the paper's launch() / apply_then-from-delegated-context.
+
+The paper's two mechanisms for modularity (§4.2–4.3):
+
+  * ``apply_then`` may be issued from delegated context (non-blocking).
+  * ``launch`` runs a blocking closure in a trustee-side fiber guarded by a
+    single-threaded ``Latch<T>``.
+
+Under SPMD both reduce to *chained channel rounds*: a serve function may
+itself open a channel round to a second trust (all trustees participate in
+the inner collective together — there is no deadlock because the schedule is
+global, and no Latch is needed because each state shard has exactly one
+owner applying staged functional updates).  ``launch_serve`` builds such a
+two-hop serve function.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import channel as ch
+from .channel import ChannelConfig, Received
+
+Pytree = Any
+
+
+def launch_serve(outer_serve_pre: Callable,
+                 inner_serve: ch.ServeFn,
+                 outer_serve_post: Callable,
+                 inner_trustees: int,
+                 inner_cfg: ChannelConfig) -> Callable:
+    """Build a serve function that performs nested delegation.
+
+      outer_serve_pre(outer_state, received)
+          -> (outer_state, inner_dst, inner_payload, carry)
+      inner_serve: ordinary serve on the inner trust's state shard
+      outer_serve_post(outer_state, inner_responses, carry, received)
+          -> (outer_state, response_rows)
+
+    The returned function has signature
+      serve((outer_state, inner_state), received)
+          -> ((outer_state, inner_state), response_rows)
+    so the outer trust's "state" carries both shards.  This is the paper's
+    launch(): the outer trustee suspends the request (carry), the inner
+    apply completes, then the response is delivered to the original client.
+    """
+
+    def serve(state, received: Received):
+        outer_state, inner_state = state
+        outer_state, inner_dst, inner_payload, carry = outer_serve_pre(
+            outer_state, received)
+        inner_state, inner_resp, _info = ch.delegate(
+            inner_state, inner_dst, inner_payload, inner_serve,
+            inner_trustees, inner_cfg)
+        outer_state, resp_rows = outer_serve_post(
+            outer_state, inner_resp, carry, received)
+        return (outer_state, inner_state), resp_rows
+
+    return serve

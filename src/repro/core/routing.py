@@ -1,0 +1,80 @@
+"""Key -> trustee routing.
+
+The paper routes each object to a fixed trustee; clients compute the
+destination locally.  We provide the standard router families plus zipfian
+workload generators used by the benchmarks (paper Fig. 6b, 8b, 9b, 11).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mod_router(keys: jax.Array, n_trustees: int) -> jax.Array:
+    """Object id -> trustee by modulo (paper's per-object assignment)."""
+    return (keys % n_trustees).astype(jnp.int32)
+
+
+def block_router(keys: jax.Array, n_keys_total: int, n_trustees: int) -> jax.Array:
+    """Contiguous range partition: trustee t owns [t*B, (t+1)*B)."""
+    block = -(-n_keys_total // n_trustees)
+    return jnp.clip(keys // block, 0, n_trustees - 1).astype(jnp.int32)
+
+
+def page_router(positions: jax.Array, page_size: int, n_trustees: int) -> jax.Array:
+    """KV-cache page owner: page p lives on trustee p % T (round-robin pages)."""
+    return ((positions // page_size) % n_trustees).astype(jnp.int32)
+
+
+def hash_router(keys: jax.Array, n_trustees: int) -> jax.Array:
+    """splitmix64-style integer hash then mod — decorrelates hot keys from
+    trustee ids (load-spreading for adversarial key patterns)."""
+    x = keys.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x % jnp.uint32(n_trustees)).astype(jnp.int32)
+
+
+def local_index(keys: jax.Array, n_trustees: int, router: str = "mod",
+                n_keys_total: int = 0) -> jax.Array:
+    """Index of a key within its owner's local shard, matching the router."""
+    if router == "mod":
+        return (keys // n_trustees).astype(jnp.int32)
+    if router == "block":
+        block = -(-n_keys_total // n_trustees)
+        return (keys % block).astype(jnp.int32)
+    raise ValueError(router)
+
+
+# ---------------------------------------------------------------------------
+# Workload generators (host-side, numpy) — benchmarks
+# ---------------------------------------------------------------------------
+
+def zipf_probs(n: int, alpha: float = 1.0) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-alpha)
+    return w / w.sum()
+
+
+def sample_keys(rng: np.random.Generator, n_keys: int, n_samples: int,
+                dist: str = "uniform", alpha: float = 1.0) -> np.ndarray:
+    if dist == "uniform":
+        return rng.integers(0, n_keys, size=n_samples, dtype=np.int64)
+    if dist == "zipf":
+        p = zipf_probs(n_keys, alpha)
+        return rng.choice(n_keys, size=n_samples, p=p).astype(np.int64)
+    raise ValueError(dist)
+
+
+def expected_max_load(n_keys: int, n_trustees: int, n_requests: int,
+                      dist: str = "uniform", alpha: float = 1.0) -> float:
+    """Expected per-trustee request share — used to size channel capacity
+    (the paper's slot-size trade-off, §5.3.1)."""
+    if dist == "uniform":
+        return n_requests / n_trustees
+    p = zipf_probs(n_keys, alpha)
+    owner = np.arange(n_keys) % n_trustees
+    per_trustee = np.bincount(owner, weights=p, minlength=n_trustees)
+    return float(per_trustee.max() * n_requests)

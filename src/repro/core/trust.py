@@ -1,0 +1,254 @@
+"""Trust — the user-facing handle to entrusted state (paper §3, §4).
+
+``entrust`` places a pytree of state under the care of trustees laid out along
+one or more mesh axes.  The state is then *only* reachable through the
+``apply`` family, which routes batched requests to owners over the delegation
+channel and returns responses in request order:
+
+    group = TrusteeGroup(mesh, axis=("data", "model"))     # every chip serves
+    trust = group.entrust(table, ops=[GET, PUT], resp_like=...)
+    vals  = trust.apply("get", keys, {})                   # sync apply()
+    fut   = trust.submit("put", keys, {"value": v})        # apply_then()
+    trust.flush()                                          # one fused program
+
+Differences from the Rust original (DESIGN.md §2): closures are entries in a
+static op table; requests are rows of serializable values (the paper imposes
+the same value-only restriction via serde); synchronization is the SPMD
+program itself.  Batching of many requests per message (paper §5.3) falls out
+of ``submit``/``flush`` fusing all queued requests into one channel round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import channel as ch
+from .channel import ChannelConfig, DelegatedOp, Received
+
+Pytree = Any
+
+
+def _axes_tuple(axis) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+@dataclass
+class TrusteeGroup:
+    """A set of trustees: the devices along ``axis`` of ``mesh``.
+
+    With ``axis`` covering every mesh axis, every chip is both client and
+    trustee (the paper's *shared* mode — its default runtime).  With a subset
+    (e.g. just ``"model"``), state is replicated over the remaining axes and
+    must only be mutated in ways that keep replicas coherent (read-only serve,
+    or disjoint per-replica state such as batch-sharded KV pages).
+    """
+    mesh: Mesh
+    axis: Any = "model"
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return _axes_tuple(self.axis)
+
+    @property
+    def n_trustees(self) -> int:
+        n = 1
+        for a in self.axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+    def entrust(self, state: Pytree, ops: Sequence[DelegatedOp],
+                resp_like: Pytree, state_specs: Optional[Pytree] = None,
+                capacity: int = 0, overflow: str = "second_round",
+                overflow_capacity: int = 0, local_shortcut: bool = True,
+                ) -> "Trust":
+        """Move ``state`` under trustee ownership and return the Trust handle.
+
+        state leaves must have a leading dim divisible by n_trustees (the
+        owner shard dim) unless ``state_specs`` overrides the layout.
+        """
+        if state_specs is None:
+            state_specs = jax.tree.map(lambda _: P(self.axes), state)
+        sharded = jax.tree.map(
+            lambda x, s: jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, s)),
+            state, state_specs)
+        cfg = ChannelConfig(axis=self.axis if len(self.axes) > 1 else self.axes[0],
+                            capacity=max(capacity, 1), overflow=overflow,
+                            overflow_capacity=overflow_capacity,
+                            local_shortcut=local_shortcut)
+        return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg)
+
+
+@dataclass
+class TrustFuture:
+    """Host-level future for ``submit`` (apply_then analog)."""
+    _result: Optional[Pytree] = None
+    _then: Optional[Callable[[Pytree], None]] = None
+
+    def ready(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> Pytree:
+        assert self._result is not None, "flush() the trust first"
+        return self._result
+
+    def _fulfil(self, value: Pytree) -> None:
+        self._result = value
+        if self._then is not None:
+            self._then(value)
+
+
+class Trust:
+    """Reference to entrusted state.  Clone freely (it is just a handle)."""
+
+    def __init__(self, group: TrusteeGroup, state: Pytree,
+                 ops: Tuple[DelegatedOp, ...], resp_like: Pytree,
+                 state_specs: Pytree, cfg: ChannelConfig):
+        self.group = group
+        self._state = state
+        self.ops = ops
+        self.op_index = {o.name: i for i, o in enumerate(ops)}
+        self.resp_like = resp_like
+        self.state_specs = state_specs
+        self.cfg = cfg
+        self._pending: List[Tuple[int, jax.Array, Pytree, TrustFuture]] = []
+        self._exec_cache: Dict[Any, Callable] = {}
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def n_trustees(self) -> int:
+        return self.group.n_trustees
+
+    def state(self) -> Pytree:
+        """Debug/checkpoint access to the raw sharded state."""
+        return self._state
+
+    def set_state(self, state: Pytree) -> None:
+        self._state = state
+
+    # -- core API ------------------------------------------------------------
+    def apply(self, op: str, dst: jax.Array, payload: Pytree,
+              capacity: Optional[int] = None) -> Pytree:
+        """Synchronous delegation (paper apply()): blocks for the response."""
+        self.flush()
+        new_state, resp = self._run([(self.op_index[op], dst, payload)],
+                                    capacity)
+        self._state = new_state
+        return resp[0]
+
+    def submit(self, op: str, dst: jax.Array, payload: Pytree,
+               then: Optional[Callable] = None) -> TrustFuture:
+        """apply_then(): queue the request batch; executed at flush().
+        All queued batches ride ONE channel round (request batching, §5.3)."""
+        fut = TrustFuture(_then=then)
+        self._pending.append((self.op_index[op], dst, payload, fut))
+        return fut
+
+    def flush(self, capacity: Optional[int] = None) -> None:
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        new_state, resps = self._run([(o, d, p) for (o, d, p, _) in pending],
+                                     capacity)
+        self._state = new_state
+        for (_, _, _, fut), resp in zip(pending, resps):
+            fut._fulfil(resp)
+
+    # -- execution -----------------------------------------------------------
+    def _auto_capacity(self, r_total: int) -> int:
+        # mean load per (client, trustee) pair with 2x headroom, min 4 rows —
+        # the "primary block sized for the common case" rule (§5.3.1).
+        per_client = max(1, r_total // max(1, self.group.mesh.size))
+        mean = max(1, per_client // self.n_trustees)
+        return max(4, 2 * mean)
+
+    def _cfg_for(self, r_total: int, capacity: Optional[int]) -> ChannelConfig:
+        cap = capacity or (self.cfg.capacity if self.cfg.capacity > 1
+                           else self._auto_capacity(r_total))
+        over = cap if self.cfg.overflow == "second_round" else 0
+        return dataclasses.replace(
+            self.cfg, capacity=cap,
+            overflow_capacity=self.cfg.overflow_capacity or over)
+
+    def _run(self, batches: List[Tuple[int, jax.Array, Pytree]],
+             capacity: Optional[int]):
+        """Fuse all batches into one delegation round and execute."""
+        mesh = self.group.mesh
+        sizes = [b[1].shape[0] for b in batches]
+        r_total = sum(sizes)
+        cfg = self._cfg_for(r_total, capacity)
+
+        key = (tuple(b[0] for b in batches), tuple(sizes),
+               tuple(jax.tree.structure(b[2]) for b in batches),
+               cfg.capacity, cfg.overflow_capacity)
+        if key not in self._exec_cache:
+            self._exec_cache[key] = self._build_exec(batches, cfg)
+        new_state, resp_flat = self._exec_cache[key](
+            self._state, [b[1] for b in batches], [b[2] for b in batches])
+        # split fused responses back per batch
+        out, off = [], 0
+        for n in sizes:
+            out.append(jax.tree.map(lambda l: l[off:off + n], resp_flat))
+            off += n
+        return new_state, out
+
+    def _build_exec(self, batches, cfg: ChannelConfig):
+        mesh = self.group.mesh
+        ops = self.ops
+        resp_like = self.resp_like
+        op_ids = [b[0] for b in batches]
+        serve = ch.serve_optable(ops, active_ids=tuple(sorted(set(op_ids))))
+        # every device is a client: request batches are sharded over the whole
+        # mesh (the paper's shared mode — each core originates its own slice)
+        req_spec = P(tuple(mesh.axis_names))
+
+        def fused(state, dsts, payloads):
+            # concat batches, tag each row with its op id
+            dst = jnp.concatenate(dsts, 0)
+            rows = {"op": jnp.concatenate(
+                [jnp.full((d.shape[0],), oid, jnp.int32)
+                 for oid, d in zip(op_ids, dsts)], 0)}
+            names = set()
+            for p in payloads:
+                names |= set(p.keys())
+            for name in sorted(names):
+                parts = []
+                for p, d in zip(payloads, dsts):
+                    if name in p:
+                        parts.append(p[name])
+                    else:
+                        like = next(pp[name] for pp in payloads if name in pp)
+                        parts.append(jnp.zeros((d.shape[0],) + like.shape[1:],
+                                               like.dtype))
+                rows[name] = jnp.concatenate(parts, 0)
+
+            def shard_fn(state_shard, dst_l, rows_l):
+                new_state, resp, _ = ch.delegate(
+                    state_shard, dst_l, rows_l, serve, self.n_trustees, cfg)
+                return new_state, resp
+
+            in_specs = (self.state_specs, req_spec,
+                        jax.tree.map(lambda _: req_spec, rows))
+            out_specs = (self.state_specs,
+                         jax.tree.map(lambda _: req_spec, resp_like))
+            f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+            return f(state, dst, rows)
+
+        return jax.jit(fused)
+
+
+# ---------------------------------------------------------------------------
+# Convenience: entrust with the current mesh context
+# ---------------------------------------------------------------------------
+
+def local_trustees(axis="model") -> TrusteeGroup:
+    from . import meshctx
+    return TrusteeGroup(meshctx.current_mesh(), axis)

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the perf-critical compute layers, with pure-jnp
+# oracles (ref.py) and jit'd wrappers (ops.py).  Validated in interpret mode
+# on CPU; drop-in on real TPU via impl="pallas".
+from . import ops, ref

@@ -1,0 +1,106 @@
+"""Delegation-pack Pallas kernel — the channel's client-side pack phase.
+
+Bins R requests into per-trustee capacity-limited slots (paper §5.1/§5.3).
+The CPU implementation is pointer-chasing per request; the TPU adaptation
+reformulates binning as two MXU matmuls per tile (DESIGN.md §2 "hardware
+adaptation"):
+
+  1. position-in-group: a lower-triangular ones matmul against the one-hot
+     destination matrix gives each request its running rank within its
+     destination group (prefix count), offset by a per-trustee counter
+     carried in VMEM scratch across grid steps.
+  2. scatter: the slot one-hot (T*C x bR) transposed-matmul against the
+     payload tile accumulates rows directly into the slot buffer — a
+     scatter expressed as dense MXU work, which beats per-row dynamic
+     stores on a systolic machine.
+
+Outputs match ``ref.delegation_pack`` bit-for-bit (FIFO within destination).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pack_kernel(dst_ref, payload_ref, slots_ref, counts_ref, reqslot_ref,
+                 running_ref, *, n_trustees: int, capacity: int, br: int,
+                 n_tiles: int):
+    ti = pl.program_id(0)
+    t, c = n_trustees, capacity
+
+    @pl.when(ti == 0)
+    def _init():
+        slots_ref[...] = jnp.zeros_like(slots_ref)
+        running_ref[...] = jnp.zeros_like(running_ref)
+
+    dst = dst_ref[0]                                        # (br,) int32
+    active = dst >= 0
+    dst_c = jnp.where(active, dst, 0)
+    onehot = (dst_c[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (br, t), 1)) & active[:, None]           # (br, T)
+    oh = onehot.astype(jnp.float32)
+
+    # 1) prefix count within tile via lower-triangular matmul (MXU)
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (br, br), 0) >=
+            jax.lax.broadcasted_iota(jnp.int32, (br, br), 1)).astype(jnp.float32)
+    prefix = jnp.dot(tril, oh, preferred_element_type=jnp.float32)  # (br, T)
+    base = running_ref[0]                                   # (T,) f32 counts
+    pos = jnp.sum(oh * (prefix - 1.0 + base[None, :]), axis=1).astype(jnp.int32)
+    running_ref[0] = base + jnp.sum(oh, axis=0)
+
+    ok = active & (pos < c)
+    slot_idx = dst_c * c + jnp.minimum(pos, c - 1)          # (br,)
+    reqslot_ref[0] = jnp.where(ok, slot_idx, -1)
+
+    # 2) scatter rows into slots via one-hot transpose matmul (MXU)
+    slot_oh = ((slot_idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (br, t * c), 1)) & ok[:, None]).astype(jnp.float32)
+    payload = payload_ref[0].astype(jnp.float32)            # (br, W)
+    slots_ref[...] += jnp.dot(slot_oh.T, payload,
+                              preferred_element_type=jnp.float32
+                              ).astype(slots_ref.dtype)
+
+    @pl.when(ti == n_tiles - 1)
+    def _done():
+        counts_ref[0] = jnp.minimum(running_ref[0], float(c)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_trustees", "capacity", "br", "interpret"))
+def delegation_pack(dst: jax.Array, payload: jax.Array, *, n_trustees: int,
+                    capacity: int, br: int = 256, interpret: bool = True):
+    """dst: (R,) int32 in [-1, T); payload: (R, W).
+    Returns (slots (T*C, W) f32, counts (T,) i32, request_slot (R,) i32)."""
+    r, w = payload.shape
+    br = min(br, r)
+    assert r % br == 0
+    n_tiles = r // br
+    grid = (n_tiles,)
+    t, c = n_trustees, capacity
+
+    slots, counts, request_slot = pl.pallas_call(
+        functools.partial(_pack_kernel, n_trustees=t, capacity=c, br=br,
+                          n_tiles=n_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br), lambda i: (0, i)),
+            pl.BlockSpec((1, br, w), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t * c, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((1, br), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t * c, w), jnp.float32),
+            jax.ShapeDtypeStruct((1, t), jnp.int32),
+            jax.ShapeDtypeStruct((1, r), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, t), jnp.float32)],
+        interpret=interpret,
+    )(dst.reshape(1, r), payload.reshape(1, r, w))
+    return slots, counts.reshape(t), request_slot.reshape(r)

@@ -1,0 +1,114 @@
+"""Causal flash attention (forward) Pallas kernel.
+
+Blockwise softmax with running (m, l) statistics held in VMEM scratch —
+the standard memory-hierarchy adaptation: no (Sq, Skv) score matrix ever
+touches HBM.  GQA is handled in the K/V index maps (query head h reads kv
+head h // rep), so K/V are never materialized per-query-head.
+
+Supports a query-position offset (as a tiny SMEM-style operand) so the same
+kernel serves sequence-sharded (delegated) attention, where shard s's query
+block starts at global position s * Sq_local, and single-token decode.
+Fully-masked K/V blocks are skipped via ``pl.when`` (causal block skip).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+               bq: int, bk: int, n_kv: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qoff_ref[0, 0] + i * bq
+    k_start = j * bk
+    # causal block skip: the whole K block is in the future of every query row
+    run = (q_start + bq - 1 >= k_start) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_offset=None, *, causal: bool = True,
+                    scale: float | None = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    rep = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    n_kv = skv // bk
+    grid = (b * hq, sq // bq, n_kv)
+
+    qr = q.reshape(b * hq, sq, d)
+    kr = k.reshape(b * hkv, skv, d)
+    vr = v.reshape(b * hkv, skv, d)
+    if q_offset is None:
+        q_offset = jnp.zeros((), jnp.int32)
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape(1, 1)
+
+    def kv_index(bh, i, j):
+        # GQA: query head bh -> kv head (bh % hq) // rep on the same batch
+        return ((bh // hq) * hkv + (bh % hq) // rep, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, i, j: (0, 0)),       # q offset
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qoff, qr, kr, vr)
+    return out.reshape(b, hq, sq, d)

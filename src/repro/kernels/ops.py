@@ -1,0 +1,81 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Every op takes ``impl`` in {"ref", "pallas"}:
+  * "ref"    — pure-jnp oracle from ``ref.py`` (default; runs on any backend;
+               the multi-pod dry-run lowers this path).
+  * "pallas" — the Pallas TPU kernel; on CPU it executes in interpret mode
+               (kernel body evaluated in Python), which is how tests validate
+               kernel semantics without hardware.
+
+Wrappers also handle shape padding so callers may use unaligned sizes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .delegation_pack import delegation_pack as _pack_pallas
+from .flash_attention import flash_attention as _fa_pallas
+from .grouped_matmul import grouped_matmul as _gmm_pallas
+from .selective_scan import selective_scan as _scan_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def delegation_pack(dst, payload, n_trustees: int, capacity: int,
+                    impl: str = "ref", interpret: bool = True):
+    if impl == "ref":
+        return ref.delegation_pack(dst, payload, n_trustees, capacity)
+    dstp, r = _pad_to(dst, 0, 256)
+    if dstp.shape[0] != r:
+        dstp = dstp.at[r:].set(-1)
+    payloadp, _ = _pad_to(payload, 0, 256)
+    payloadp, w = _pad_to(payloadp, 1, 128)
+    slots, counts, req = _pack_pallas(
+        dstp, payloadp, n_trustees=n_trustees, capacity=capacity,
+        interpret=interpret)
+    return (slots[:, :w].astype(payload.dtype), counts, req[:r])
+
+
+def grouped_matmul(x, w, impl: str = "ref", interpret: bool = True,
+                   bc: int = 128, bf: int = 128, bd: int = 512):
+    if impl == "ref":
+        return ref.grouped_matmul(x, w)
+    xp, c = _pad_to(x, 1, 8)
+    xp, d = _pad_to(xp, 2, 128)
+    wp, _ = _pad_to(w, 1, 128)
+    wp, f = _pad_to(wp, 2, 128)
+    out = _gmm_pallas(xp, wp, bc=min(bc, xp.shape[1]), bf=min(bf, wp.shape[2]),
+                      bd=min(bd, xp.shape[2]), interpret=interpret)
+    return out[:, :c, :f]
+
+
+def flash_attention(q, k, v, q_offset=None, causal: bool = True,
+                    scale: Optional[float] = None, impl: str = "ref",
+                    interpret: bool = True, bq: int = 128, bk: int = 128):
+    if impl == "ref":
+        off = 0 if q_offset is None else q_offset
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   q_offset=off)
+    return _fa_pallas(q, k, v, q_offset, causal=causal, scale=scale,
+                      bq=bq, bk=bk, interpret=interpret)
+
+
+def selective_scan(x, dt, a, b, c, d, h0=None, impl: str = "ref",
+                   interpret: bool = True, bdi: int = 256, bs: int = 64):
+    if impl == "ref":
+        return ref.selective_scan_assoc(x, dt, a, b, c, d, h0=h0)
+    return _scan_pallas(x, dt, a, b, c, d, h0, bdi=bdi, bs=bs,
+                        interpret=interpret)

@@ -1,0 +1,236 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for kernel tests (assert_allclose, shape/dtype
+sweeps) AND the default execution path on non-TPU backends — the dry-run
+lowers these, so the roofline is computed over the same math the kernels
+implement.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# delegation_pack — channel pack phase (capacity-limited binning)
+# ---------------------------------------------------------------------------
+
+def delegation_pack(dst: jax.Array, payload: jax.Array, n_trustees: int,
+                    capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bin rows by destination with per-destination capacity.
+
+    dst: (R,) int32 in [-1, T); payload: (R, W).
+    Returns (slots (T*C, W), counts (T,), request_slot (R,) [-1 if dropped]).
+    FIFO within destination (stable order).
+    """
+    r = dst.shape[0]
+    key = jnp.where(dst < 0, n_trustees, dst).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    starts = jnp.searchsorted(key_s, jnp.arange(n_trustees + 1, dtype=jnp.int32))
+    pos_s = jnp.arange(r, dtype=jnp.int32) - starts[key_s]
+    ok = (key_s < n_trustees) & (pos_s < capacity)
+    rows = key_s * capacity + jnp.minimum(pos_s, capacity - 1)
+    idx = jnp.where(ok, rows, n_trustees * capacity)
+    slots = jnp.zeros((n_trustees * capacity, payload.shape[1]), payload.dtype)
+    slots = slots.at[idx].set(payload[order], mode="drop")
+    counts = jnp.minimum(starts[1:] - starts[:-1], capacity).astype(jnp.int32)
+    request_slot = jnp.zeros((r,), jnp.int32).at[order].set(
+        jnp.where(ok, rows, -1))
+    return slots, counts, request_slot
+
+
+# ---------------------------------------------------------------------------
+# grouped_matmul — trustee-side expert FFN over slotted token groups
+# ---------------------------------------------------------------------------
+
+def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (E, C, D), w: (E, D, F) -> (E, C, F).  Batched per-expert matmul —
+    the serve phase of MoE delegation on capacity-packed token slots.
+    bf16 operands with an f32 accumulator (MXU semantics): upcasting the
+    operands would materialize f32 copies of every expert weight."""
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """Full gated expert FFN on slotted tokens: (E, C, D) -> (E, C, D)."""
+    g = grouped_matmul(x, w_gate)
+    u = grouped_matmul(x, w_up)
+    a = jax.nn.silu(g.astype(jnp.float32)) if act == "silu" else \
+        jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+    h = (a * u.astype(jnp.float32)).astype(x.dtype)
+    return grouped_matmul(h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal (optionally windowed) attention forward
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: Optional[float] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+    GQA: Hq must be a multiple of Hkv.  ``q_offset`` shifts query positions
+    (sequence-sharded attention / decode)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[2])
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_stats(q, k, v, causal=True, scale=None, q_offset=0):
+    """Partial-softmax form returning (out_unnorm, m, l) for cross-shard
+    merging (delegated / sequence-parallel attention)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[2])
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    m = jnp.max(logits, axis=-1)                       # (B, H, Sq)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)                            # (B, H, Sq)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def merge_attention_stats(os, ms, ls):
+    """Merge per-shard (o, m, l) partials along a leading shard axis."""
+    m = jnp.max(ms, axis=0)                            # (B, H, Sq)
+    w = jnp.exp(ms - m[None])                          # (T, B, H, Sq)
+    l = jnp.sum(ls * w, axis=0)
+    o = jnp.sum(os * w[..., None], axis=0)
+    return (o / jnp.maximum(l[..., None], 1e-30)), m, l
+
+
+# ---------------------------------------------------------------------------
+# selective_scan — Mamba-1 SSM recurrence
+# ---------------------------------------------------------------------------
+
+def selective_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array, d: jax.Array,
+                   h0: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-scan oracle.
+
+    x, dt: (B, S, DI); a: (DI, N); b, c: (B, S, N); d: (DI,)
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * b_t * x_t;  y_t = c_t . h_t + d*x_t
+    Returns (y (B, S, DI), h_final (B, DI, N)).
+    """
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a[None, None])            # (B, S, DI, N)
+    dbx = dtf[..., None] * bf[:, :, None, :] * xf[..., None]  # (B, S, DI, N)
+    h = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h, (da.swapaxes(0, 1), dbx.swapaxes(0, 1), cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + d[None, None] * xf
+    return y.astype(x.dtype), h_final
+
+
+def selective_scan_assoc(x, dt, a, b, c, d, h0=None):
+    """Parallel (associative-scan) formulation — same math, O(log S) depth.
+    Used as the fast jnp path for training; also a second oracle."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a[None, None])
+    dbx = dtf[..., None] * b.astype(jnp.float32)[:, :, None, :] * xf[..., None]
+    if h0 is not None:
+        # fold h0 into the first step: h_1 = da_1 h0 + dbx_1
+        dbx = dbx.at[:, 0].add(da[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, h_all = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, c.astype(jnp.float32))
+    y = y + d[None, None] * xf
+    return y.astype(x.dtype), h_all[:, -1]
+
+
+def selective_scan_chunked(x, dt, a, b, c, d, h0=None, chunk=512,
+                           unroll=False):
+    """Chunked scan: lax.scan over S/chunk chunks, associative scan inside.
+    Peak memory is (B, chunk, DI, N) instead of (B, S, DI, N) — the jnp
+    analog of the Pallas kernel's VMEM-resident chunking.  ``unroll``
+    python-loops the chunks (dry-run cost probes: exact counting)."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        return selective_scan_assoc(x, dt, a, b, c, d, h0=h0)
+    nc = s // chunk
+    h = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(h, inp):
+        xc, dtc, bc, cc = inp
+        y, h = selective_scan_assoc(xc, dtc, a, bc, cc, d, h0=h)
+        return h, y
+
+    to_chunks = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(b), to_chunks(c))
+    if unroll:
+        ys = []
+        for i in range(nc):
+            h, y = step(h, jax.tree.map(lambda t: t[i], xs))
+            ys.append(y)
+        h_final, ys = h, jnp.stack(ys)
+    else:
+        h_final, ys = jax.lax.scan(step, h, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di)
+    return y, h_final
+
+
+def selective_scan_step(x, dt, a, b, c, d, h):
+    """Single decode step: x,dt (B, DI); b,c (B, N); h (B, DI, N)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a[None])
+    dbx = dtf[..., None] * b.astype(jnp.float32)[:, None, :] * xf[..., None]
+    h = da * h.astype(jnp.float32) + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c.astype(jnp.float32)) + d[None] * xf
+    return y.astype(x.dtype), h

@@ -1,0 +1,95 @@
+"""Selective scan (Mamba-1 SSM) Pallas kernel.
+
+The recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is elementwise over
+(d_inner, d_state) — bandwidth-bound, not MXU-bound.  The TPU adaptation is
+therefore a *chunked fusion* kernel: grid (B, DI/bdi, S/bs) with the chunk
+dimension sequential; the running state h (bdi, N) lives in VMEM scratch
+across chunk steps, and exp / gating / reduction are fused so x, dt, b, c
+stream HBM->VMEM exactly once and y streams back once.  The sequential
+dependency runs over the chunk loop inside the kernel (lax.fori_loop over
+VMEM-resident rows), never touching HBM.
+
+Layout note: inputs arrive time-major per block (bs, bdi) so the minor dim
+is the (128-aligned) channel dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                 y_ref, hout_ref, h_ref, *, bs: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)          # (bdi, N)
+    d = d_ref[...].astype(jnp.float32)          # (1, bdi)
+
+    def step(t, _):
+        x_t = x_ref[0, t].astype(jnp.float32)    # (bdi,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)  # (bdi,)
+        b_t = b_ref[0, t].astype(jnp.float32)    # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)    # (N,)
+        da = jnp.exp(dt_t[:, None] * a)                    # (bdi, N)
+        h = da * h_ref[...] + (dt_t * x_t)[:, None] * b_t[None, :]
+        h_ref[...] = h
+        y = jnp.sum(h * c_t[None, :], axis=-1) + d[0] * x_t
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bs, step, 0)
+
+    @pl.when(ci == n_chunks - 1)
+    def _done():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bdi", "bs", "interpret"))
+def selective_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array, d: jax.Array, h0: jax.Array | None = None,
+                   *, bdi: int = 256, bs: int = 64, interpret: bool = True):
+    """x, dt: (B, S, DI); a: (DI, N); b, c: (B, S, N); d: (DI,);
+    h0: (B, DI, N) or None.  Returns (y (B, S, DI), h_final (B, DI, N))."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    bdi = min(bdi, di)
+    bs = min(bs, s)
+    assert di % bdi == 0 and s % bs == 0
+    n_chunks = s // bs
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    d2 = d.reshape(1, di)
+    grid = (bsz, di // bdi, n_chunks)
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_scan_kernel, bs=bs, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bdi), lambda bi, gi, ci: (bi, ci, gi)),  # x
+            pl.BlockSpec((1, bs, bdi), lambda bi, gi, ci: (bi, ci, gi)),  # dt
+            pl.BlockSpec((bdi, n), lambda bi, gi, ci: (gi, 0)),           # a
+            pl.BlockSpec((1, bs, n), lambda bi, gi, ci: (bi, ci, 0)),     # b
+            pl.BlockSpec((1, bs, n), lambda bi, gi, ci: (bi, ci, 0)),     # c
+            pl.BlockSpec((1, bdi), lambda bi, gi, ci: (0, gi)),           # d
+            pl.BlockSpec((1, bdi, n), lambda bi, gi, ci: (bi, gi, 0)),    # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bdi), lambda bi, gi, ci: (bi, ci, gi)),
+            pl.BlockSpec((1, bdi, n), lambda bi, gi, ci: (bi, gi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
+            jax.ShapeDtypeStruct((bsz, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bdi, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d2, h0)
+    return y, h_final

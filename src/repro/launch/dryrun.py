@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Dry-run only — tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+Protocol per cell:
+  1. FULL compile — jax.jit(step).lower(ShapeDtypeStructs).compile(); its
+     success IS the deliverable; memory_analysis() proves residency.
+  2. cost extrapolation — XLA's cost_analysis counts a scanned (while-loop)
+     layer group ONCE (measured, see EXPERIMENTS.md §Dry-run), so we also
+     compile 1-group and 2-group reduced variants: body = c2 - c1,
+     base = c1 - body, total = base + n_groups * body.  Same for the parsed
+     collective bytes.  This gives exact linear scaling because every
+     scanned group is identical by construction.
+
+Results are cached as JSON per cell in benchmarks/artifacts/dryrun/ so an
+interrupted sweep resumes.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+from typing import Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+# per-arch run overrides for the production cells
+RUN_OVERRIDES = {
+    # 480B on 16 GB/chip: bf16 moments + bf16 grad accumulation + deeper
+    # microbatching.  Single-pod residency is marginal BY DESIGN — the
+    # multi-pod pass is where this model actually trains (EXPERIMENTS.md).
+    "arctic-480b": {"opt_dtype": "bfloat16", "grad_accum": 8,
+                    "grad_accum_dtype": "bfloat16",
+                    # 960 GB of bf16 weights cannot replicate over the data
+                    # axis at serve time: shard them (gather per layer)
+                    "fsdp_inference": True},
+}
+TRAIN_REMAT = "full"      # production default at this scale
+
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def cell_runnable(cfg, shape) -> (bool, str):
+    if shape.name == "long_500k" and not cfg.has_subquadratic_context:
+        return False, ("skipped: pure full-attention arch; 500k decode "
+                       "requires sub-quadratic context (DESIGN.md §4)")
+    return True, ""
+
+
+def cell_path(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(ARTIFACT_DIR,
+                        f"{arch}__{shape}__{mesh}{suffix}.json".replace("/", "_"))
+
+
+def _measure(plan, want_memory: bool):
+    """lower + compile one plan; return (costs, collectives, memory, times)."""
+    from . import rooflines
+    t0 = time.monotonic()
+    lowered = plan.step_fn.lower(*plan.lower_args)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(cost.get(k, 0.0)) for k in _COST_KEYS}
+    coll = rooflines.collective_bytes(compiled.as_text())
+    mem_fields = {}
+    if want_memory:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    mem_fields[k] = int(v)
+    del compiled, lowered
+    gc.collect()
+    return cost, coll, mem_fields, t_lower, t_compile
+
+
+def _reduced(cfg, groups: int):
+    """Config with n_groups == groups (prefix preserved)."""
+    from ..models.transformer import layer_descs
+    if cfg.is_encoder_decoder:
+        return cfg.with_overrides(n_layers=groups, n_encoder_layers=groups)
+    descs, prefix_len, n_groups = layer_descs(cfg)
+    return cfg.with_overrides(n_layers=prefix_len + groups * len(descs))
+
+
+def _n_groups(cfg) -> int:
+    from ..models.transformer import layer_descs
+    if cfg.is_encoder_decoder:
+        return cfg.n_layers
+    return layer_descs(cfg)[2]
+
+
+def _lin(base, body, n):
+    return {k: base[k] + n * body[k] for k in base}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, tag: str = "",
+             run_overrides: Optional[dict] = None, force: bool = False,
+             verbose: bool = True, skip_extrapolation: bool = False) -> dict:
+    path = cell_path(arch, shape_name, mesh_kind, tag)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    import jax
+    from ..configs.base import RunConfig, SHAPES_BY_NAME
+    from ..configs.registry import get_arch
+    from . import rooflines
+    from .mesh import make_production_mesh, mesh_config
+    from .steps import build_cell
+
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "tag": tag, "status": "ok"}
+
+    ok, reason = cell_runnable(cfg, shape)
+    if not ok:
+        result.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: skipped",
+                  flush=True)
+        return result
+
+    multi = mesh_kind == "multi"
+    if multi:
+        # multi-pod pass proves the "pod" axis shards; roofline table is
+        # single-pod only (per spec) — skip the extrapolation compiles
+        skip_extrapolation = True
+    mesh = make_production_mesh(multi_pod=multi)
+    mcfg = mesh_config(multi_pod=multi)
+    overrides = dict(RUN_OVERRIDES.get(arch, {}))
+    if shape.kind == "train":
+        overrides.setdefault("remat", TRAIN_REMAT)
+        overrides.setdefault("grad_accum", 4)
+    overrides.update(run_overrides or {})
+    # model-level knobs ("moe_*" prefixed) apply to the ModelConfig
+    moe_over = {k[4:]: overrides.pop(k) for k in list(overrides)
+                if k.startswith("moe_")}
+    if moe_over:
+        cfg = cfg.with_overrides(moe=dataclasses.replace(cfg.moe, **moe_over))
+
+    def make_run(c):
+        return RunConfig(model=c, shape=shape, mesh=mcfg, **overrides)
+
+    try:
+        # 1) FULL compile (the deliverable) + memory analysis
+        plan = build_cell(cfg, shape, mesh, make_run(cfg))
+        cost1x, coll1x, mem, t_lower, t_compile = _measure(plan, True)
+        n_groups = _n_groups(cfg)
+        result.update(
+            n_params=plan.n_params, n_active_params=plan.n_active_params,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=mem)
+        arg_b = mem.get("argument_size_in_bytes", 0)
+        tmp_b = mem.get("temp_size_in_bytes", 0)
+        result["hbm_bytes_per_device"] = arg_b + tmp_b
+        result["fits_hbm"] = bool((arg_b + tmp_b) <= 16e9)
+
+        # 2) scan-extrapolated costs from 1-group / 2-group UNROLLED variants
+        if skip_extrapolation or n_groups <= 2:
+            cost = cost1x
+            coll = coll1x
+            result["extrapolation"] = "none (counted as compiled)"
+        else:
+            def probe_run(c):
+                # accum=1: same total tokens => same per-step flops/bytes;
+                # FSDP weight re-gathers are restored analytically below
+                return dataclasses.replace(make_run(c), unroll_layers=True,
+                                           grad_accum=1)
+
+            r1 = _reduced(cfg, 1)
+            c1p = build_cell(r1, shape, mesh, probe_run(r1))
+            cost1, coll1, _, _, _ = _measure(c1p, False)
+            r2 = _reduced(cfg, 2)
+            c2p = build_cell(r2, shape, mesh, probe_run(r2))
+            cost2, coll2, _, _, _ = _measure(c2p, False)
+            body = {k: cost2[k] - cost1[k] for k in _COST_KEYS}
+            base = {k: cost1[k] - body[k] for k in _COST_KEYS}
+            cost = _lin(base, body, n_groups)
+            coll = {}
+            for kind in _COLL_KINDS:
+                b_body = coll2[kind]["bytes"] - coll1[kind]["bytes"]
+                c_body = coll2[kind]["count"] - coll1[kind]["count"]
+                coll[kind] = {
+                    "bytes": coll1[kind]["bytes"] - b_body + n_groups * b_body,
+                    "count": coll1[kind]["count"] - c_body + n_groups * c_body,
+                }
+            # analytic correction for the attention kv-block inner scan
+            # (still a lax.scan inside the unrolled probes)
+            dp_world = mesh.size // mcfg.model_size
+            attn_fix = rooflines.attention_scan_correction(
+                cfg, shape, mcfg.model_size, dp_world)
+            cost = {k: cost.get(k, 0.0) + attn_fix.get(k, 0.0) for k in cost}
+            # FSDP weight re-gathers: accum microbatches re-gather sharded
+            # params (fwd + remat) — probes ran accum=1
+            accum = overrides.get("grad_accum", 1)
+            if shape.kind == "train" and accum > 1:
+                # per-chip AG result bytes: FSDP gathers over the data axis,
+                # so each chip receives its model-shard = global/model_size
+                regather = ((accum - 1) * 2.0 * plan.n_params * 2
+                            / mcfg.model_size)
+                coll["all-gather"]["bytes"] += regather
+            result["extrapolation"] = {
+                "n_groups": n_groups, "cost_base": base, "cost_body": body,
+                "attn_scan_correction": attn_fix,
+                "cost_as_compiled": cost1x, "coll_as_compiled": coll1x}
+
+        n_chips = mesh.size
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind in ("train", "prefill")
+                  else shape.global_batch)
+        terms = rooflines.derive(cost, coll, n_chips, shape.kind,
+                                 plan.n_active_params, tokens)
+        result.update(
+            cost=cost, collectives=coll, roofline=terms.as_dict(),
+            tokens_per_step=tokens)
+    except Exception as e:                                   # noqa: BLE001
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    if verbose:
+        s = result["status"]
+        extra = ""
+        if s == "ok":
+            r = result["roofline"]
+            extra = (f" compile={result['compile_s']}s"
+                     f" bottleneck={r['bottleneck']}"
+                     f" useful={r['useful_ratio']:.2f}"
+                     f" fits_hbm={result['fits_hbm']}")
+        elif s == "error":
+            extra = " " + result["error"][:120]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: {s}{extra}",
+              flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-extrapolation", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for §Perf runs")
+    ap.add_argument("--set", action="append", default=[],
+                    help="RunConfig override key=value (repeatable), e.g. "
+                         "--set sp_residual=true --set grad_accum=8")
+    args = ap.parse_args()
+
+    def parse_val(v):
+        if v.lower() in ("true", "false"):
+            return v.lower() == "true"
+        try:
+            return int(v)
+        except ValueError:
+            try:
+                return float(v)
+            except ValueError:
+                return v
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    from ..configs.base import SHAPES
+    from ..configs.registry import list_archs
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                r = run_cell(arch, shape_name, mesh_kind, tag=args.tag,
+                             force=args.force, run_overrides=overrides,
+                             skip_extrapolation=args.no_extrapolation)
+                n_err += r["status"] == "error"
+    print(f"[dryrun] done, {n_err} errors", flush=True)
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

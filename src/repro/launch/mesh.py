@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required by the dry-run protocol)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig((2, 16, 16), ("pod", "data", "model"))
+    return MeshConfig((16, 16), ("data", "model"))
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(tuple(cfg.shape), tuple(cfg.axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,167 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds (EXPERIMENTS.md
+§Roofline):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-partition
+module).  collective_bytes is parsed out of the optimized HLO text: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we take max(result bytes, operand bytes) — a deliberate, conservative,
+*consistent* convention (ring traffic is (T-1)/T of this; what matters for
+the perf loop is the trend under a fixed convention).
+
+Hardware constants (TPU v5e per system spec): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI (dense nearest-neighbor torus links).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(([^)]*(?:\([^)]*\))?[^)]*)\)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from optimized HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _LINE_RE.finditer(hlo_text):
+        result_type, op, operands = m.group(1), m.group(2), m.group(3)
+        kind = op.replace("-start", "")
+        if kind not in out:
+            continue
+        rb = _type_bytes(result_type)
+        ob = _type_bytes(operands)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += max(rb, ob)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_per_chip: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPS
+    bottleneck: str
+
+    def as_dict(self):
+        return dict(self.__dict__)
+
+
+def model_flops(kind: str, n_active: int, tokens: int) -> float:
+    """6ND (train: fwd+bwd), 2ND (prefill/decode fwd)."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def attention_scan_correction(cfg, shape, mesh_model: int, dp_world: int,
+                              block_k: int = 1024) -> Dict[str, float]:
+    """Missing per-chip cost of the blockwise-attention inner scan.
+
+    The reduced-variant probes unroll the LAYER loop, but the attention
+    kv-block loop stays a lax.scan whose body XLA costs once.  Its true cost
+    is known in closed form, so we add the missing (nb-1)/nb fraction:
+
+      fwd flops/layer = 4 B H_loc Sq Skv (Dh + 1.5)   [qk^T, pv, softmax]
+      train mult      = 4  (fwd + remat recompute + ~2x bwd)
+      bytes/layer     ~ 8 B H_loc Sq Skv               [f32 score blocks]
+                        + 3 (q+k+v+o streams)
+
+    Decode steps and sub-threshold sequences need no correction.
+    """
+    from ..models.attention import BLOCKWISE_THRESHOLD, padded_heads
+    if cfg.n_heads == 0 or shape.kind == "decode":
+        return {"flops": 0.0, "bytes accessed": 0.0, "transcendentals": 0.0}
+    s = shape.seq_len
+    if s < BLOCKWISE_THRESHOLD:
+        return {"flops": 0.0, "bytes accessed": 0.0, "transcendentals": 0.0}
+    nb = max(1, s // min(block_k, s))
+    missing = (nb - 1) / nb
+    if missing == 0.0:
+        return {"flops": 0.0, "bytes accessed": 0.0, "transcendentals": 0.0}
+
+    hqp, hkvp = padded_heads(cfg)
+    h_loc = max(1, hqp // mesh_model)
+    b_loc = max(1, shape.global_batch // dp_world)
+    if cfg.attn_kind == "mla":
+        dh_eff = cfg.mla_q_nope_dim + cfg.mla_q_rope_dim + cfg.mla_v_head_dim
+    else:
+        dh_eff = 2 * cfg.resolved_head_dim
+    # layer counts: decoder-only uses block pattern; enc-dec has enc + self
+    # + cross attention rows, all with Skv = S here (src_len == tgt_len)
+    if cfg.is_encoder_decoder:
+        n_attn = cfg.n_encoder_layers + 2 * cfg.n_layers
+    else:
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_kind(i) == "attn")
+    mult = 4.0 if shape.kind == "train" else 1.0
+    per_layer_flops = 2.0 * b_loc * h_loc * s * s * (dh_eff + 3.0)
+    per_layer_trans = 1.0 * b_loc * h_loc * s * s
+    per_layer_bytes = (8.0 * b_loc * h_loc * s * s
+                       + 3.0 * (2 * b_loc * (h_loc + hkvp) * s
+                                * cfg.resolved_head_dim * 2))
+    return {
+        "flops": missing * mult * n_attn * per_layer_flops,
+        "bytes accessed": missing * mult * n_attn * per_layer_bytes,
+        "transcendentals": missing * mult * n_attn * per_layer_trans,
+    }
+
+
+def derive(cost: Dict[str, float], coll: Dict[str, Dict[str, float]],
+           n_chips: int, kind: str, n_active: int, tokens: int
+           ) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(v["bytes"] for v in coll.values()))
+    mf_total = model_flops(kind, n_active, tokens)
+    mf_chip = mf_total / n_chips
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(compute_s, memory_s, collective_s, flops, byts,
+                         cbytes, mf_chip,
+                         (mf_chip / flops) if flops else 0.0, bottleneck)

@@ -1,0 +1,91 @@
+"""Serving driver: batched prefill + delegated paged-KV decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --batch 8 --prompt-len 32 --gen 32
+
+Implements the memcached-shaped pipeline of the paper's §7 at the model
+level: a request batch is prefilled, then decoded token-by-token with the
+KV pages entrusted to owners along the model axis; each step's (k, v) write
+is a delegated PUT and the query broadcast + stat merge is the response
+combine.  Greedy sampling (argmax) keeps runs deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from ..configs.base import MeshConfig, RunConfig, ShapeConfig
+    from ..configs.registry import get_arch, get_smoke_arch
+    from ..models import model as M
+    from .mesh import make_local_mesh
+    from .steps import build_cell
+
+    cfg = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    max_len = args.prompt_len + args.gen
+    # pad cache length to a multiple of the model axis (page divisibility)
+    max_len = ((max_len + args.mesh_model - 1)
+               // args.mesh_model) * args.mesh_model
+    shape = ShapeConfig("cli", max_len, args.batch, "decode")
+    mesh = make_local_mesh(args.mesh_data, args.mesh_model)
+    mcfg = MeshConfig((args.mesh_data, args.mesh_model), ("data", "model"))
+    run = RunConfig(model=cfg, shape=shape, mesh=mcfg, remat="none")
+    plan = build_cell(cfg, shape, mesh, run)
+
+    key = jax.random.PRNGKey(0)
+    params = jax.jit(lambda k: M.init_params(k, cfg, run),
+                     out_shardings=plan.param_shardings)(key)
+    cache = jax.jit(lambda: M.init_cache(cfg, args.batch, max_len, run),
+                    out_shardings=plan.cache_shardings)()
+    print(f"[serve] {cfg.name}: {M.count_params(params)/1e6:.2f}M params, "
+          f"cache len {max_len}, batch {args.batch}", flush=True)
+
+    # "prefill" by teacher-forcing the prompt through decode steps (keeps one
+    # code path; a bulk prefill kernel is the production fast path)
+    rng = np.random.default_rng(0)
+    if cfg.input_mode == "embeds" and not M.is_encdec(cfg):
+        prompt = jnp.asarray(
+            rng.normal(size=(args.prompt_len, args.batch, cfg.d_model))
+            * 0.02, jnp.bfloat16)
+        tok_of = lambda t, prev: prompt[t]
+    else:
+        prompt_ids = rng.integers(0, cfg.vocab_size,
+                                  size=(args.prompt_len, args.batch))
+        tok_of = lambda t, prev: jnp.asarray(prompt_ids[t], jnp.int32)
+
+    t0 = time.monotonic()
+    prev = None
+    outputs = []
+    for t in range(args.prompt_len + args.gen - 1):
+        tok = tok_of(t, prev) if t < args.prompt_len else prev
+        pos = jnp.full((args.batch,), t, jnp.int32)
+        prev, cache = plan.step_fn(params, cache, tok, pos)
+        if t >= args.prompt_len - 1:
+            outputs.append(np.asarray(prev))
+    dt = time.monotonic() - t0
+    total_steps = args.prompt_len + args.gen - 1
+    print(f"[serve] {total_steps} steps in {dt:.2f}s "
+          f"({1e3*dt/total_steps:.1f} ms/step, "
+          f"{args.batch*total_steps/dt:.0f} tok/s)", flush=True)
+    gen = np.stack(outputs, 1)
+    print(f"[serve] generated {gen.shape} tokens; sample: {gen[0][:10]}",
+          flush=True)
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Step builders: jit'd train_step / serve_step with full sharding trees.
+
+These are the functions the dry-run lowers and the drivers execute; they are
+built once per (arch, shape, mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..core import meshctx
+from ..models import model as M
+from ..models.layers import dtype_of
+from ..optim import (AdamWConfig, AdamWState, adamw_update, fsdp_specs,
+                     init_adamw)
+
+Pytree = Any
+
+
+class CellPlan(NamedTuple):
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    cfg: ModelConfig
+    shape: ShapeConfig
+    run: RunConfig
+    mesh: Mesh
+    param_sds: Pytree            # ShapeDtypeStructs with shardings
+    param_shardings: Pytree
+    opt_sds: Optional[Pytree]
+    opt_shardings: Optional[Pytree]
+    cache_sds: Optional[Pytree]
+    cache_shardings: Optional[Pytree]
+    batch_sds: Pytree
+    batch_shardings: Pytree
+    step_fn: Any                 # the jitted function to lower
+    lower_args: Tuple            # args (SDS) for .lower()
+    n_params: int
+    n_active_params: int
+
+
+def _sds_with_sharding(tree_sds, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, shardings)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def adamw_config(run: RunConfig) -> AdamWConfig:
+    return AdamWConfig(learning_rate=run.learning_rate,
+                       weight_decay=run.weight_decay,
+                       grad_clip=run.grad_clip)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               run: Optional[RunConfig] = None) -> CellPlan:
+    """Construct the jitted step + sharded ShapeDtypeStruct inputs for a cell.
+    No device allocation happens here (eval_shape only)."""
+    from ..configs.base import MeshConfig
+    mesh_cfg = MeshConfig(tuple(int(s) for s in mesh.devices.shape),
+                          tuple(mesh.axis_names))
+    if run is None:
+        run = RunConfig(model=cfg, shape=shape, mesh=mesh_cfg)
+    n_data_total = mesh_cfg.data_size
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names) \
+        if shape.global_batch % n_data_total == 0 else ()
+    meshctx.set_context(mesh, batch_axes)
+
+    key = jax.random.PRNGKey(run.seed)
+    param_sds_raw = jax.eval_shape(
+        functools.partial(M.init_params, cfg=cfg, run=run), key)
+    pspecs = M.param_specs(cfg)
+    n_data = mesh_cfg.data_size
+    if run.zero_sharding and n_data > 1 and (
+            shape.kind == "train" or run.fsdp_inference):
+        pspecs = fsdp_specs(pspecs, param_sds_raw, n_data, axis="data")
+    param_shardings = _named(mesh, pspecs)
+    param_sds = _sds_with_sharding(param_sds_raw, param_shardings)
+    n_params = int(sum(np.prod(l.shape) for l in jax.tree.leaves(param_sds_raw)))
+    n_active = M.active_param_count(cfg, n_params)
+
+    batch_sds_raw = M.input_specs(cfg, shape, run)
+    batch_shardings = _named(mesh, M.batch_specs_sharding(cfg, shape))
+    batch_sds = _sds_with_sharding(batch_sds_raw, batch_shardings)
+
+    acfg = adamw_config(run)
+
+    if shape.kind == "train":
+        opt_sds_raw = jax.eval_shape(
+            functools.partial(init_adamw, dtype=dtype_of(run.opt_dtype)),
+            param_sds_raw)
+        ospecs = AdamWState(P(), pspecs, pspecs)
+        opt_shardings = _named(mesh, ospecs)
+        opt_sds = _sds_with_sharding(opt_sds_raw, opt_shardings)
+
+        accum = max(1, run.grad_accum)
+        assert shape.global_batch % accum == 0
+
+        def _stack_micro(batch):
+            """(B, ...) -> (accum, B/accum, ...); M-RoPE positions carry
+            batch on axis 1."""
+            mb = shape.global_batch // accum
+
+            def stk(k, v):
+                if k == "positions" and v.ndim == 3:
+                    return v.reshape(v.shape[0], accum, mb,
+                                     v.shape[2]).swapaxes(0, 1)
+                return v.reshape((accum, mb) + v.shape[1:])
+
+            return {k: stk(k, v) for k, v in batch.items()}
+
+        def train_step(params, opt_state, batch):
+            meshctx.set_context(mesh, batch_axes)
+
+            def loss_fn(p, b):
+                return M.forward_loss(p, b, cfg, run)
+
+            if accum == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                # gradient accumulation via scan: activation memory is one
+                # microbatch; the f32 grad accumulator is params-sharded
+                micro = _stack_micro(batch)
+                g_dtype = dtype_of(run.grad_accum_dtype)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, g_dtype), params)
+
+                def acc_fn(carry, b):
+                    g_acc, l_acc, m_acc = carry
+                    (l, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, b)
+                    g_acc = jax.tree.map(
+                        lambda a, c: a + c.astype(a.dtype), g_acc, g)
+                    m_acc = jax.tree.map(lambda a, c: a + c, m_acc, m)
+                    return (g_acc, l_acc + l, m_acc), None
+
+                zero_metrics = {
+                    "nll": 0.0, "accuracy": 0.0, "moe_aux_loss": 0.0,
+                    "moe_dropped_frac": 0.0, "moe_max_load": 0.0}
+                zero_metrics = jax.tree.map(jnp.float32, zero_metrics)
+                (grads, loss, metrics), _ = jax.lax.scan(
+                    acc_fn, (zeros, jnp.float32(0.0), zero_metrics), micro)
+                grads = jax.tree.map(
+                    lambda g_: g_.astype(jnp.float32) / accum, grads)
+                loss = loss / accum
+                metrics = jax.tree.map(lambda m_: m_ / accum, metrics)
+            new_params, new_opt, om = adamw_update(acfg, opt_state, params,
+                                                   grads)
+            return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+        step_fn = jax.jit(
+            train_step,
+            in_shardings=(param_shardings, opt_shardings, batch_shardings),
+            out_shardings=(param_shardings, opt_shardings, None),
+            donate_argnums=(0, 1))
+        lower_args = (param_sds, opt_sds, batch_sds)
+        return CellPlan(cfg, shape, run, mesh, param_sds, param_shardings,
+                        opt_sds, opt_shardings, None, None, batch_sds,
+                        batch_shardings, step_fn, lower_args, n_params,
+                        n_active)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            meshctx.set_context(mesh, batch_axes)
+            return M.prefill(params, batch, cfg, run)
+
+        step_fn = jax.jit(prefill_step,
+                          in_shardings=(param_shardings, batch_shardings),
+                          out_shardings=None)
+        lower_args = (param_sds, batch_sds)
+        return CellPlan(cfg, shape, run, mesh, param_sds, param_shardings,
+                        None, None, None, None, batch_sds, batch_shardings,
+                        step_fn, lower_args, n_params, n_active)
+
+    # decode: serve_step(params, cache, tokens, pos) -> (next_token, cache)
+    cache_sds_raw = jax.eval_shape(
+        functools.partial(M.init_cache, cfg=cfg,
+                          batch=shape.global_batch,
+                          max_len=shape.seq_len, run=run))
+    cspecs = M.cache_specs(cfg)
+    cache_shardings = _named(mesh, cspecs)
+    cache_sds = _sds_with_sharding(cache_sds_raw, cache_shardings)
+
+    def serve_step(params, cache, tokens, pos):
+        meshctx.set_context(mesh, batch_axes)
+        logits, new_cache = M.decode_step(params, cache, tokens, pos, cfg,
+                                          run)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    step_fn = jax.jit(
+        serve_step,
+        in_shardings=(param_shardings, cache_shardings,
+                      batch_shardings["tokens"], batch_shardings["pos"]),
+        out_shardings=(None, cache_shardings),
+        donate_argnums=(1,))
+    lower_args = (param_sds, cache_sds, batch_sds["tokens"], batch_sds["pos"])
+    return CellPlan(cfg, shape, run, mesh, param_sds, param_shardings, None,
+                    None, cache_sds, cache_shardings, batch_sds,
+                    batch_shardings, step_fn, lower_args, n_params, n_active)

@@ -1,0 +1,4 @@
+# Model definitions for the 10 assigned architectures: shared layers,
+# attention (GQA/MLA + delegated paged decode), delegated MoE, Mamba SSM,
+# decoder-only assembly, encoder-decoder assembly, and the model facade.
+from . import model

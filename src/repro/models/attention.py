@@ -1,0 +1,473 @@
+"""Attention layers: GQA (MHA/MQA as special cases), DeepSeek MLA, and the
+delegated paged-KV decode path.
+
+Sharding policy (DESIGN.md §5):
+  * train/prefill — tensor-parallel over heads.  Architectures whose head
+    count does not divide the model axis (qwen2-vl 12H, qwen1.5 40H, arctic
+    56H) get zero-initialized padding heads: w_q rows and w_o columns for
+    pad heads are zero, so they contribute nothing while keeping one clean
+    TP code path.  The waste is visible (intentionally) in the roofline's
+    MODEL_FLOPS / HLO_FLOPS ratio and is a §Perf hillclimb target.
+  * decode — the KV cache is sequence-sharded over the model axis: pages
+    entrusted to owners.  The new token's (k, v) is a delegated PUT to the
+    owning page; the query is broadcast-delegated to all owners, which
+    answer with partial softmax stats (o, m, l); the merge is the response
+    combine.  This is the paper's trustee pattern applied to KV state.
+
+Long sequences use a blockwise (flash-style) jnp attention with per-block
+rematerialization so activations never hold an (S, S) score matrix — the
+same math the Pallas kernel implements on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..configs.base import ModelConfig, ATTN_MLA
+from ..core import meshctx
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import apply_rope, dp_axes, init_rmsnorm, rmsnorm
+
+BLOCKWISE_THRESHOLD = 2048
+NEG_INF = -1e30
+
+
+def padded_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_q_heads_padded, n_kv_heads_padded) for the current mesh."""
+    t = meshctx.axis_size("model")
+    hq = cfg.n_heads
+    hqp = ((hq + t - 1) // t) * t
+    hkv = cfg.n_kv_heads
+    if hkv == hq:                      # MHA: pad kv alongside q
+        hkvp = hqp
+    else:
+        hkvp = hkv                     # GQA: keep kv; require hqp % hkv == 0
+        assert hqp % hkvp == 0, (hqp, hkvp)
+    return hqp, hkvp
+
+
+def kv_sharded(cfg: ModelConfig) -> bool:
+    t = meshctx.axis_size("model")
+    _, hkvp = padded_heads(cfg)
+    return hkvp % t == 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    if cfg.attn_kind == ATTN_MLA:
+        return _init_mla(key, cfg, dtype)
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+
+    def proj(k_, hout, live):
+        w = jax.random.normal(k_, (d, hout * dh)) * s
+        if live < hout:                # zero the padding heads
+            w = w.reshape(d, hout, dh).at[:, live:].set(0.0).reshape(d, hout * dh)
+        return w.astype(dtype)
+
+    p = {"w_q": proj(ks[0], hqp, cfg.n_heads),
+         "w_k": proj(ks[1], hkvp, cfg.n_kv_heads),
+         "w_v": proj(ks[2], hkvp, cfg.n_kv_heads),
+         "w_o": proj(ks[3], hqp, cfg.n_heads).T.reshape(hqp * dh, d)}
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((hqp * dh,), dtype)
+        p["b_k"] = jnp.zeros((hkvp * dh,), dtype)
+        p["b_v"] = jnp.zeros((hkvp * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def attention_specs(cfg: ModelConfig):
+    if cfg.attn_kind == ATTN_MLA:
+        return _mla_specs(cfg)
+    kv = P(None, "model") if kv_sharded(cfg) else P(None, None)
+    s = {"w_q": P(None, "model"), "w_k": kv, "w_v": kv,
+         "w_o": P("model", None)}
+    if cfg.qkv_bias:
+        s["b_q"] = P("model")
+        s["b_k"] = P("model") if kv_sharded(cfg) else P(None)
+        s["b_v"] = s["b_k"]
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": P(None)}
+        s["k_norm"] = {"scale": P(None)}
+    return s
+
+
+def _init_mla(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.mla_q_nope_dim, cfg.mla_q_rope_dim, cfg.mla_v_head_dim
+    r = cfg.mla_kv_lora_rank
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    sr = 1.0 / np.sqrt(r)
+    return {
+        "w_q": (jax.random.normal(ks[0], (d, h * (dn + dr))) * s).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[1], (d, r)) * s).astype(dtype),
+        "latent_norm": init_rmsnorm(r),
+        "w_kr": (jax.random.normal(ks[2], (d, dr)) * s).astype(dtype),
+        "w_uk": (jax.random.normal(ks[3], (r, h * dn)) * sr).astype(dtype),
+        "w_uv": (jax.random.normal(ks[4], (r, h * dv)) * sr).astype(dtype),
+        "w_o": (jax.random.normal(ks[5], (h * dv, d)) /
+                np.sqrt(h * dv)).astype(dtype),
+    }
+
+
+def _mla_specs(cfg: ModelConfig):
+    return {"w_q": P(None, "model"), "w_dkv": P(None, None),
+            "latent_norm": {"scale": P(None)}, "w_kr": P(None, None),
+            "w_uk": P(None, "model"), "w_uv": P(None, "model"),
+            "w_o": P("model", None)}
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) jnp attention — O(S) memory, differentiable
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, causal=True, scale=None, q_offset=0,
+                        block_k=1024, kv_valid_len=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).  Scans KV blocks carrying
+    running (m, l, acc); each block is rematerialized in the backward pass."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    block_k = min(block_k, skv)
+    assert skv % block_k == 0
+    nb = skv // block_k
+    qf = q.astype(jnp.float32) * scale
+    kb = k.reshape(b, hkv, nb, block_k, dh).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nb, block_k, dh).transpose(2, 0, 1, 3, 4)
+
+    qpos = jnp.arange(sq) + q_offset
+
+    @jax.checkpoint
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = inp
+        if rep > 1:
+            kj = jnp.repeat(kj, rep, axis=1)
+            vj = jnp.repeat(vj, rep, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj.astype(jnp.float32))
+        kpos = j * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if kv_valid_len is not None:
+            mask &= kpos[None, :] < kv_valid_len
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _core_attention(q, k, v, run, causal=True, q_offset=0):
+    """q: (B, S, H, D) -> (B, S, H, D); dispatches kernel / blockwise / ref."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if run is not None and run.use_pallas:
+        out = kops.flash_attention(qt, kt, vt, q_offset=jnp.int32(q_offset),
+                                   causal=causal, impl="pallas")
+    elif q.shape[1] >= BLOCKWISE_THRESHOLD or k.shape[1] >= BLOCKWISE_THRESHOLD:
+        out = blockwise_attention(qt, kt, vt, causal=causal, q_offset=q_offset)
+    else:
+        out = kref.flash_attention(qt, kt, vt, causal=causal,
+                                   q_offset=q_offset)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention(params, x, positions, cfg: ModelConfig, run=None):
+    """x: (B, S, D); positions: (B, S) or (3, B, S) for M-RoPE."""
+    if cfg.attn_kind == ATTN_MLA:
+        return mla_attention(params, x, positions, cfg, run)
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    b, s, _ = x.shape
+
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"])
+    k = jnp.einsum("bsd,de->bse", x, params["w_k"])
+    v = jnp.einsum("bsd,de->bse", x, params["w_v"])
+    if cfg.qkv_bias:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    q = q.reshape(b, s, hqp, dh)
+    k = k.reshape(b, s, hkvp, dh)
+    v = v.reshape(b, s, hkvp, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    q = meshctx.constrain(q, dp_axes(), None, "model" if hqp else None, None)
+    kspec = "model" if kv_sharded(cfg) else None
+    k = meshctx.constrain(k, dp_axes(), None, kspec, None)
+    v = meshctx.constrain(v, dp_axes(), None, kspec, None)
+
+    out = _core_attention(q, k, v, run)
+    out = out.reshape(b, s, hqp * dh)
+    y = jnp.einsum("be,ed->bd", out.reshape(b * s, hqp * dh),
+                   params["w_o"]).reshape(b, s, cfg.d_model)
+    return meshctx.constrain(y, dp_axes(), None, None)
+
+
+def mla_attention(params, x, positions, cfg: ModelConfig, run=None):
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_q_nope_dim, cfg.mla_q_rope_dim, cfg.mla_v_head_dim
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    latent = rmsnorm(params["latent_norm"],
+                     jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
+                     cfg.norm_eps)
+    k_nope = jnp.einsum("bsr,re->bse", latent,
+                        params["w_uk"]).reshape(b, s, h, dn)
+    v = jnp.einsum("bsr,re->bse", latent,
+                   params["w_uv"]).reshape(b, s, h, dv)
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :],
+        positions, cfg.rope_theta)                      # (B, S, 1, dr)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, h, dr))
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    kk = jnp.concatenate([k_nope, k_rope], -1)
+    scale = 1.0 / np.sqrt(dn + dr)
+    # pad v head dim up to qk head dim so one attention primitive serves both
+    if dv < dn + dr:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    else:
+        v_p = v
+    out = _core_attention(qq, kk, v_p, run)[..., :dv]
+    y = jnp.einsum("bshe,hed->bsd",
+                   out.reshape(b, s, h, dv),
+                   params["w_o"].reshape(h, dv, cfg.d_model))
+    return meshctx.constrain(y, dp_axes(), None, None)
+
+
+# ---------------------------------------------------------------------------
+# Decode with delegated (sequence-sharded) KV pages
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.attn_kind == ATTN_MLA:
+        r, dr = cfg.mla_kv_lora_rank, cfg.mla_q_rope_dim
+        return {"latent": jnp.zeros((batch, max_len, r), dtype),
+                "k_rope": jnp.zeros((batch, max_len, dr), dtype)}
+    _, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, hkvp, max_len, dh), dtype),
+            "v": jnp.zeros((batch, hkvp, max_len, dh), dtype)}
+
+
+def kv_cache_specs(cfg: ModelConfig):
+    """Pages sharded along the sequence dim over the trustee axis."""
+    if cfg.attn_kind == ATTN_MLA:
+        return {"latent": P(dp_axes(), "model", None),
+                "k_rope": P(dp_axes(), "model", None)}
+    return {"k": P(dp_axes(), None, "model", None),
+            "v": P(dp_axes(), None, "model", None)}
+
+
+def _merge_stats(o, m, l):
+    """o: (T, B, H, D) unnormalized; m, l: (T, B, H) -> (B, H, D)."""
+    m_g = jnp.max(m, axis=0)
+    w = jnp.exp(m - m_g[None])
+    l_g = jnp.sum(l * w, axis=0)
+    o_g = jnp.sum(o * w[..., None], axis=0)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def decode_attention(params, x, pos, cache, cfg: ModelConfig, run=None):
+    """One-token decode against sequence-sharded KV pages.
+
+    x: (B, D) new-token activations; pos: (B,) its position; cache: see
+    ``init_kv_cache`` (seq dim sharded over "model").  Returns (y (B, D),
+    new_cache).  The shard_map island is the delegation round: PUT the new
+    kv row to the page owner, broadcast the query, merge partial stats.
+    """
+    mesh = meshctx.current_mesh()
+    dp = dp_axes()
+    if cfg.attn_kind == ATTN_MLA:
+        return _mla_decode(params, x, pos, cache, cfg, run, mesh, dp)
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    b, _ = x.shape
+    xs = x[:, None, :]
+    q = jnp.einsum("bsd,de->bse", xs, params["w_q"])
+    k = jnp.einsum("bsd,de->bse", xs, params["w_k"])
+    v = jnp.einsum("bsd,de->bse", xs, params["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(b, 1, hqp, dh)
+    k = k.reshape(b, 1, hkvp, dh)
+    v = v.reshape(b, 1, hkvp, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)[:, 0]       # (B, Hq, Dh)
+    k = apply_rope(k, posb, cfg.rope_theta)[:, 0]       # (B, Hkv, Dh)
+    v = v[:, 0]
+    rep = hqp // hkvp
+
+    s_total = cache["k"].shape[2]
+    t = int(mesh.shape["model"])
+    s_loc = s_total // t
+
+    def island(q_l, k_l, v_l, pos_l, ck, cv):
+        # ck/cv: (b, Hkv, s_loc, dh) — this trustee's pages
+        my = jax.lax.axis_index("model")
+        local_pos = pos_l - my * s_loc
+        mine = (local_pos >= 0) & (local_pos < s_loc)
+        lp = jnp.clip(local_pos, 0, s_loc - 1)
+        # delegated PUT of the kv row to the page owner
+        bidx = jnp.arange(k_l.shape[0])
+        ck = jnp.where(mine[:, None, None, None],
+                       ck.at[bidx, :, lp].set(k_l), ck)
+        cv = jnp.where(mine[:, None, None, None],
+                       cv.at[bidx, :, lp].set(v_l), cv)
+        # partial attention over local pages (owner answers the query)
+        kpos = my * s_loc + jnp.arange(s_loc)
+        valid = kpos[None] <= pos_l[:, None]             # (b, s_loc)
+        kr = jnp.repeat(ck, rep, axis=1) if rep > 1 else ck
+        vr = jnp.repeat(cv, rep, axis=1) if rep > 1 else cv
+        s = jnp.einsum("bhd,bhsd->bhs", q_l.astype(jnp.float32),
+                       kr.astype(jnp.float32)) / np.sqrt(dh)
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        m = jnp.max(s, -1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, -1)
+        o = jnp.einsum("bhs,bhsd->bhd", p, vr.astype(jnp.float32))
+        # response combine across owners
+        og = jax.lax.all_gather(o, "model")              # (T, b, H, Dh)
+        mg = jax.lax.all_gather(m, "model")
+        lg = jax.lax.all_gather(l, "model")
+        out = _merge_stats(og, mg, lg).astype(q_l.dtype)
+        return out, ck, cv
+
+    out, nk, nv = shard_map(
+        island, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, None, None), P(dp, None, None),
+                  P(dp), P(dp, None, "model", None), P(dp, None, "model", None)),
+        out_specs=(P(dp, None, None), P(dp, None, "model", None),
+                   P(dp, None, "model", None)),
+        check_rep=False)(q, k, v, pos, cache["k"], cache["v"])
+
+    y = jnp.einsum("be,ed->bd", out.reshape(b, hqp * dh), params["w_o"])
+    return meshctx.constrain(y, dp, None), {"k": nk, "v": nv}
+
+
+def _mla_decode(params, x, pos, cache, cfg, run, mesh, dp):
+    """MLA decode over sequence-sharded latent pages.
+
+    baseline (mla_absorb=False in RunConfig): owners expand k/v from their
+    latent pages every step.  absorbed (True): scores computed directly in
+    latent space — the §Perf optimization."""
+    absorb = bool(run is not None and getattr(run, "mla_absorb", False))
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_q_nope_dim, cfg.mla_q_rope_dim, cfg.mla_v_head_dim
+    r = cfg.mla_kv_lora_rank
+    b, _ = x.shape
+    xs = x[:, None, :]
+    q = jnp.einsum("bsd,de->bse", xs, params["w_q"]).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posb = pos[:, None]
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)[:, 0]      # (B, H, dr)
+    q_nope = q_nope[:, 0]                                        # (B, H, dn)
+    latent_new = rmsnorm(params["latent_norm"],
+                         jnp.einsum("bsd,dr->bsr", xs, params["w_dkv"]),
+                         cfg.norm_eps)[:, 0]                     # (B, r)
+    k_rope_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", xs, params["w_kr"])[:, :, None, :],
+        posb, cfg.rope_theta)[:, 0, 0]                           # (B, dr)
+
+    s_total = cache["latent"].shape[1]
+    t = int(mesh.shape["model"])
+    s_loc = s_total // t
+    w_uk = params["w_uk"].reshape(r, h, dn)
+    w_uv = params["w_uv"].reshape(r, h, dv)
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    def island(qn, qr, lat_new, kr_new, pos_l, lat, krope):
+        my = jax.lax.axis_index("model")
+        local_pos = pos_l - my * s_loc
+        mine = (local_pos >= 0) & (local_pos < s_loc)
+        lp = jnp.clip(local_pos, 0, s_loc - 1)
+        bidx = jnp.arange(qn.shape[0])
+        lat = jnp.where(mine[:, None, None],
+                        lat.at[bidx, lp].set(lat_new), lat)
+        krope = jnp.where(mine[:, None, None],
+                          krope.at[bidx, lp].set(kr_new), krope)
+        kpos = my * s_loc + jnp.arange(s_loc)
+        valid = kpos[None] <= pos_l[:, None]
+        latf = lat.astype(jnp.float32)
+        if absorb:
+            # score in latent space: q_eff = q_nope @ W_uk  (B, H, r)
+            q_eff = jnp.einsum("bhn,rhn->bhr", qn.astype(jnp.float32), w_uk)
+            s_nope = jnp.einsum("bhr,bsr->bhs", q_eff, latf)
+        else:
+            k_nope = jnp.einsum("bsr,rhn->bshn", latf, w_uk)
+            s_nope = jnp.einsum("bhn,bshn->bhs", qn.astype(jnp.float32),
+                                k_nope)
+        s_rope = jnp.einsum("bhr,bsr->bhs", qr.astype(jnp.float32),
+                            krope.astype(jnp.float32))
+        s = (s_nope + s_rope) * scale
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        m = jnp.max(s, -1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, -1)
+        if absorb:
+            ctx = jnp.einsum("bhs,bsr->bhr", p, latf)
+            o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)
+        else:
+            v_full = jnp.einsum("bsr,rhv->bshv", latf, w_uv)
+            o = jnp.einsum("bhs,bshv->bhv", p, v_full)
+        og = jax.lax.all_gather(o, "model")
+        mg = jax.lax.all_gather(m, "model")
+        lg = jax.lax.all_gather(l, "model")
+        out = _merge_stats(og, mg, lg).astype(qn.dtype)
+        return out, lat, krope
+
+    out, nlat, nkr = shard_map(
+        island, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, None, None), P(dp, None),
+                  P(dp, None), P(dp), P(dp, "model", None),
+                  P(dp, "model", None)),
+        out_specs=(P(dp, None, None), P(dp, "model", None),
+                   P(dp, "model", None)),
+        check_rep=False)(q_nope, q_rope, latent_new, k_rope_new, pos,
+                         cache["latent"], cache["k_rope"])
+
+    y = jnp.einsum("bhv,hvd->bd", out,
+                   params["w_o"].reshape(h, dv, cfg.d_model))
+    return meshctx.constrain(y, dp, None), {"latent": nlat, "k_rope": nkr}

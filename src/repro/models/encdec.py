@@ -1,0 +1,263 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2 text/unit backbone).
+
+Encoder: non-causal self-attention + MLP layers over precomputed frame
+embeddings (the audio frontend is a stub per the assignment — input_specs
+provides (B, S_src, D) frames).  Decoder: causal self-attention + cross
+attention over encoder memory + MLP.  Decode uses the delegated paged KV
+cache for self-attention and a sequence-sharded static cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..configs.base import ModelConfig
+from ..core import meshctx
+from . import attention as attn_mod
+from .layers import (delegated_softmax_xent, dp_axes, dtype_of, embed_lookup,
+                     init_mlp, init_rmsnorm, init_embed, embed_specs,
+                     lm_logits, mlp, mlp_specs, rmsnorm, unembed_weight)
+from .attention import (NEG_INF, _core_attention, _merge_stats, padded_heads)
+
+
+def _init_xattn(key, cfg: ModelConfig, dtype):
+    """Cross-attention: q from decoder stream, k/v from encoder memory."""
+    return attn_mod.init_attention(key, cfg, dtype)
+
+
+def init_params(key, cfg: ModelConfig, run=None):
+    dtype = dtype_of(run.param_dtype) if run is not None else jnp.bfloat16
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    ke, kd, kemb, kf = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "attn": attn_mod.init_attention(k1, cfg, dtype),
+                "ln2": init_rmsnorm(cfg.d_model),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "attn": attn_mod.init_attention(k1, cfg, dtype),
+                "ln_x": init_rmsnorm(cfg.d_model),
+                "xattn": _init_xattn(k2, cfg, dtype),
+                "ln2": init_rmsnorm(cfg.d_model),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+    enc_keys = jax.random.split(ke, n_enc)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": init_embed(kemb, cfg, dtype),
+        "encoder": jax.vmap(enc_layer)(enc_keys),
+        "decoder": jax.vmap(dec_layer)(dec_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    a = attn_mod.attention_specs(cfg)
+
+    def stk(tree):
+        return jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), tree,
+                            is_leaf=lambda v: isinstance(v, P))
+
+    enc = stk({"ln1": {"scale": P(None)}, "attn": a,
+               "ln2": {"scale": P(None)}, "mlp": mlp_specs()})
+    dec = stk({"ln1": {"scale": P(None)}, "attn": a,
+               "ln_x": {"scale": P(None)}, "xattn": a,
+               "ln2": {"scale": P(None)}, "mlp": mlp_specs()})
+    return {"embed": embed_specs(cfg), "encoder": enc, "decoder": dec,
+            "enc_norm": {"scale": P(None)},
+            "final_norm": {"scale": P(None)}}
+
+
+def _xattn_apply(p, x, memory, cfg, run):
+    """Cross attention (non-causal) against encoder memory."""
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    q = jnp.einsum("bsd,de->bse", x, p["w_q"]).reshape(b, s, hqp, dh)
+    k = jnp.einsum("bsd,de->bse", memory, p["w_k"]).reshape(b, sm, hkvp, dh)
+    v = jnp.einsum("bsd,de->bse", memory, p["w_v"]).reshape(b, sm, hkvp, dh)
+    out = _core_attention(q, k, v, run, causal=False)
+    y = jnp.einsum("be,ed->bd", out.reshape(b * s, hqp * dh),
+                   p["w_o"]).reshape(b, s, cfg.d_model)
+    return meshctx.constrain(y, dp_axes(), None, None)
+
+
+def encode(params, frames, cfg: ModelConfig, run=None):
+    """frames: (B, S_src, D) stub frontend embeddings -> encoder memory."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = frames
+
+    def layer(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        hqp, hkvp = padded_heads(cfg)
+        dh = cfg.resolved_head_dim
+        q = jnp.einsum("bsd,de->bse", h, p["attn"]["w_q"]).reshape(
+            b, s, hqp, dh)
+        k = jnp.einsum("bsd,de->bse", h, p["attn"]["w_k"]).reshape(
+            b, s, hkvp, dh)
+        v = jnp.einsum("bsd,de->bse", h, p["attn"]["w_v"]).reshape(
+            b, s, hkvp, dh)
+        from .layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = _core_attention(q, k, v, run, causal=False)
+        y = jnp.einsum("be,ed->bd", o.reshape(b * s, hqp * dh),
+                       p["attn"]["w_o"]).reshape(b, s, cfg.d_model)
+        x = x + meshctx.constrain(y, dp_axes(), None, None)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + mlp(p["mlp"], h2, cfg.act), None
+
+    if run is not None and run.unroll_layers:
+        n_enc = jax.tree.leaves(params["encoder"])[0].shape[0]
+        for i in range(n_enc):
+            x, _ = layer(x, jax.tree.map(lambda l: l[i], params["encoder"]))
+    else:
+        x, _ = jax.lax.scan(lambda c, p: layer(c, p), x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_loss(params, batch, cfg: ModelConfig, run=None):
+    """batch: {src_embeds (B, S, D), tokens (B, S), labels (B, S)}."""
+    memory = encode(params, batch["src_embeds"], cfg, run)
+    x = embed_lookup(params["embed"], batch["tokens"], cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def layer(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + attn_mod.attention(p["attn"], h, positions, cfg, run)
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + _xattn_apply(p["xattn"], hx, memory, cfg, run)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + mlp(p["mlp"], h2, cfg.act), None
+
+    fn = lambda c, p: layer(c, p)
+    if run is not None and run.remat != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if run.remat == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        fn = jax.checkpoint(fn, policy=policy, prevent_cse=False)
+    if run is not None and run.unroll_layers:
+        n_dec = jax.tree.leaves(params["decoder"])[0].shape[0]
+        for i in range(n_dec):
+            x, _ = fn(x, jax.tree.map(lambda l: l[i], params["decoder"]))
+    else:
+        x, _ = jax.lax.scan(fn, x, params["decoder"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w_out = unembed_weight(params["embed"], cfg)
+    nll, acc = delegated_softmax_xent(
+        x, w_out, batch["labels"], cfg, batch.get("mask"),
+        chunk=run.xent_chunk if run is not None else 512,
+        unroll=bool(run is not None and run.unroll_layers))
+    return nll, {"nll": nll, "accuracy": acc,
+                 "moe_aux_loss": jnp.zeros((), jnp.float32),
+                 "moe_dropped_frac": jnp.zeros((), jnp.float32),
+                 "moe_max_load": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# decode: self-attn paged KV + static cross K/V cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, run=None):
+    dtype = dtype_of(run.activation_dtype) if run is not None else jnp.bfloat16
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    n = cfg.n_layers
+    self_c = attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+    return {
+        "self": jax.tree.map(
+            lambda l: jnp.zeros((n,) + l.shape, l.dtype), self_c),
+        # cross K/V precomputed from encoder memory at prefill time
+        "cross_k": jnp.zeros((n, batch, hkvp, max_len, dh), dtype),
+        "cross_v": jnp.zeros((n, batch, hkvp, max_len, dh), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    dp = dp_axes()
+    sc = attn_mod.kv_cache_specs(cfg)
+    return {
+        "self": jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), sc,
+                             is_leaf=lambda v: isinstance(v, P)),
+        "cross_k": P(None, dp, None, "model", None),
+        "cross_v": P(None, dp, None, "model", None),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, run=None):
+    """One decoder token against paged self-KV + sharded cross-KV."""
+    mesh = meshctx.current_mesh()
+    dp = dp_axes()
+    x = embed_lookup(params["embed"], tokens[:, None], cfg)[:, 0]
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    rep = hqp // hkvp
+    b = x.shape[0]
+
+    def xattn_decode(p, h, ck, cv):
+        q = jnp.einsum("bd,de->be", h, p["w_q"]).reshape(b, hqp, dh)
+        t = int(mesh.shape["model"])
+
+        def island(q_l, ck_l, cv_l):
+            kr = jnp.repeat(ck_l, rep, axis=1) if rep > 1 else ck_l
+            vr = jnp.repeat(cv_l, rep, axis=1) if rep > 1 else cv_l
+            s = jnp.einsum("bhd,bhsd->bhs", q_l.astype(jnp.float32),
+                           kr.astype(jnp.float32)) / np.sqrt(dh)
+            m = jnp.max(s, -1)
+            p_ = jnp.exp(s - m[..., None])
+            l = jnp.sum(p_, -1)
+            o = jnp.einsum("bhs,bhsd->bhd", p_, vr.astype(jnp.float32))
+            og = jax.lax.all_gather(o, "model")
+            mg = jax.lax.all_gather(m, "model")
+            lg = jax.lax.all_gather(l, "model")
+            return _merge_stats(og, mg, lg).astype(q_l.dtype)
+
+        o = shard_map(island, mesh=mesh,
+                      in_specs=(P(dp, None, None),
+                                P(dp, None, "model", None),
+                                P(dp, None, "model", None)),
+                      out_specs=P(dp, None, None),
+                      check_rep=False)(q, ck, cv)
+        return jnp.einsum("be,ed->bd", o.reshape(b, hqp * dh), p["w_o"])
+
+    def layer(x, scanned):
+        p, self_c, ck, cv = scanned
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, new_self = attn_mod.decode_attention(p["attn"], h, pos, self_c,
+                                                cfg, run)
+        x = x + y
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + xattn_decode(p["xattn"], hx, ck, cv)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.act)
+        return x, new_self
+
+    scanned = (params["decoder"], cache["self"],
+               cache["cross_k"], cache["cross_v"])
+    if run is not None and run.unroll_layers:
+        n_dec = jax.tree.leaves(params["decoder"])[0].shape[0]
+        outs = []
+        for i in range(n_dec):
+            x, ns = layer(x, jax.tree.map(lambda l: l[i], scanned))
+            outs.append(ns)
+        new_self = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+    else:
+        x, new_self = jax.lax.scan(layer, x, scanned)
+    new_cache = {**cache, "self": new_self}
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w_out = unembed_weight(params["embed"], cfg)
+    return lm_logits(x, w_out, cfg), new_cache

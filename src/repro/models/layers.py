@@ -1,0 +1,257 @@
+"""Shared layer library: norms, RoPE/M-RoPE, gated MLPs, embeddings, and the
+delegated (vocab-sharded) softmax cross-entropy.
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; init fns take (key, cfg) and return
+  the dict.  A parallel ``*_specs`` fn returns the PartitionSpec tree.
+* activations are bf16 (cfg.activation_dtype); all reductions / softmax /
+  norms run in f32.
+* "model" is the tensor/trustee mesh axis; "data"/"pod" shard the batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ACT_GELU, ACT_SILU
+from ..core import meshctx
+
+DP = ("pod", "data")   # logical batch axes (subset present in mesh is used)
+
+
+def dp_axes():
+    override = meshctx.batch_axes()
+    if override != "default":
+        return tuple(override)
+    mesh = meshctx.current_mesh()
+    return tuple(a for a in DP if a in mesh.axis_names)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, offset: float = 0.0):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Tuple[int, ...] = ()) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) or (3, ..., S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the D/2 frequency dims are split into sections that
+    take their rotation angle from the (t, h, w) position streams
+    respectively.  With all three streams equal this reduces to plain RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    if mrope_sections:
+        assert positions.ndim >= 2 and positions.shape[0] == len(mrope_sections)
+        sec_id = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.asarray(mrope_sections),
+            total_repeat_length=d // 2)                # (D/2,) section of dim
+        # angle[..., s, f] = positions[sec_id[f], ..., s] * freqs[f]
+        pos = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)  # (..., S, 3)
+        angle = pos[..., sec_id] * freqs[None, :]
+    else:
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos = jnp.cos(angle)[..., None, :]                 # (..., S, 1, D/2)
+    sin = jnp.sin(angle)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_ff = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def mlp_specs():
+    return {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+            "w_down": P("model", None)}
+
+
+def mlp(params, x, act: str = ACT_SILU):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    # keep batch dims data-sharded, hidden dim tensor-parallel
+    spec = (dp_axes(),) + (None,) * (g.ndim - 2) + ("model",)
+    g = meshctx.constrain(g, *spec)
+    gf = g.astype(jnp.float32)
+    a = jax.nn.silu(gf) if act == ACT_SILU else jax.nn.gelu(gf, approximate=True)
+    h = (a.astype(x.dtype) * u)
+    y = jnp.einsum("...f,fd->...d", h, params["w_down"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding + delegated (vocab-sharded) read and cross-entropy
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    t = meshctx.axis_size("model")
+    mult = max(t, 128)
+    return ((cfg.vocab_size + mult - 1) // mult) * mult
+
+
+def init_embed(key, cfg: ModelConfig, dtype):
+    v = padded_vocab(cfg)
+    scale = 0.02
+    emb = (jax.random.normal(key, (v, cfg.d_model)) * scale).astype(dtype)
+    params = {"embedding": emb}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        params["unembed"] = (jax.random.normal(k2, (v, cfg.d_model))
+                             * 0.02).astype(dtype)
+    return params
+
+
+def embed_specs(cfg: ModelConfig):
+    s = {"embedding": P("model", None)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = P("model", None)
+    return s
+
+
+def embed_lookup(params, ids: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Vocab-sharded table read.  Under GSPMD this is a delegated read: each
+    vocab shard's owner answers the ids it owns; psum combines (XLA emits the
+    gather + reduce).  ids: (B, S) -> (B, S, D)."""
+    x = jnp.take(params["embedding"], ids, axis=0)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(x.dtype)
+    return meshctx.constrain(x, dp_axes(), None, None)
+
+
+def unembed_weight(params, cfg: ModelConfig) -> jax.Array:
+    return params.get("unembed", params["embedding"])
+
+
+def delegated_softmax_xent(x: jax.Array, w_out: jax.Array, labels: jax.Array,
+                           cfg: ModelConfig, mask: Optional[jax.Array] = None,
+                           chunk: int = 512, unroll: bool = False
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy with vocab-sharded logits, never materializing the full
+    (B, S, V) replicated.  The label logit is a delegated GET answered by the
+    owning vocab shard; logsumexp is combined with psums over "model".
+    Sequence-chunked + rematerialized so the f32 logits buffer is bounded by
+    (b, chunk, V/t) in both passes.  ``unroll`` python-loops the chunks
+    (dry-run cost probes: scan bodies are counted once by XLA).
+
+    x: (B, S, D) [dp-sharded]; w_out: (V, D) [vocab-sharded]; labels: (B, S).
+    Returns (mean nll, correct-token accuracy).
+    """
+    mesh = meshctx.current_mesh()
+    dp = dp_axes()
+    t = int(mesh.shape["model"])
+    v = w_out.shape[0]
+
+    def chunk_fn(x_c, w_l, labels_c, off):
+        # x_c: (b, c, D); w_l: (V/t, D); labels_c: (b, c)
+        logits = jnp.einsum("bsd,vd->bsv", x_c, w_l,
+                            preferred_element_type=jnp.float32)
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        m_loc = jnp.max(logits, axis=-1)
+        # max-shift is gradient-neutral; pmax has no JVP rule, so detach the
+        # operand BEFORE the collective (zero tangent -> no rule needed)
+        m = jax.lax.pmax(jax.lax.stop_gradient(m_loc), "model")
+        se = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+        lse = jnp.log(jax.lax.psum(se, "model")) + m
+        lab = labels_c - off
+        mine = (lab >= 0) & (lab < v // t)
+        lab_c = jnp.clip(lab, 0, v // t - 1)
+        lab_logit = jnp.take_along_axis(logits, lab_c[..., None],
+                                        axis=-1)[..., 0]
+        lab_logit = jax.lax.psum(jnp.where(mine, lab_logit, 0.0), "model")
+        nll = lse - lab_logit
+        # accuracy: global argmax via (value, index) max-reduction (detached)
+        m_det = jax.lax.stop_gradient(m_loc)
+        am_loc = jnp.argmax(jax.lax.stop_gradient(logits), axis=-1) + off
+        is_best = m_det >= m
+        am = jax.lax.pmax(jnp.where(is_best, am_loc, -1), "model")
+        acc = jax.lax.stop_gradient((am == labels_c).astype(jnp.float32))
+        return nll, acc
+
+    def local_fn(x_l, w_l, labels_l):
+        my = jax.lax.axis_index("model")
+        off = my * (v // t)
+        b, s, d = x_l.shape
+        c = min(chunk, s)
+        if s % c != 0:
+            c = s
+        n_chunks = s // c
+        if n_chunks == 1:
+            return chunk_fn(x_l, w_l, labels_l, off)
+        xc = x_l.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+        lc = labels_l.reshape(b, n_chunks, c).swapaxes(0, 1)
+        f = jax.checkpoint(lambda xi, li: chunk_fn(xi, w_l, li, off),
+                           prevent_cse=False)
+        if unroll:
+            outs = [f(xc[i], lc[i]) for i in range(n_chunks)]
+            nll = jnp.stack([o[0] for o in outs])
+            acc = jnp.stack([o[1] for o in outs])
+        else:
+            nll, acc = jax.lax.map(lambda args: f(*args), (xc, lc))
+        return (nll.swapaxes(0, 1).reshape(b, s),
+                acc.swapaxes(0, 1).reshape(b, s))
+
+    from jax.experimental.shard_map import shard_map
+    nll, acc = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P("model", None), P(dp, None)),
+        out_specs=(P(dp, None), P(dp, None)),
+        check_rep=False)(x, w_out, labels)
+    if mask is None:
+        return jnp.mean(nll), jnp.mean(acc)
+    mf = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mf), 1.0)
+    return jnp.sum(nll * mf) / denom, jnp.sum(acc * mf) / denom
+
+
+def lm_logits(x: jax.Array, w_out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Decode-time logits (B, V) for the last position; vocab stays sharded."""
+    logits = jnp.einsum("bd,vd->bv", x, w_out,
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return meshctx.constrain(logits, dp_axes(), "model")

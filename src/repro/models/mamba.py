@@ -1,0 +1,159 @@
+"""Mamba-1 selective-SSM block (falcon-mamba, jamba hybrid layers).
+
+d_inner is tensor-parallel over the "model" axis; the scan itself is then
+fully trustee-local (each shard owns its slice of the recurrent state — the
+delegation framing is that SSM state is *born* entrusted; no channel is
+needed, which DESIGN.md §4 records as the inapplicability note for the scan).
+B/C projections contract over the sharded d_inner (XLA inserts the psum);
+dt_proj is column-parallel back to d_inner.
+
+Train path uses the associative-scan oracle (or the chunked Pallas kernel
+with ``use_pallas``); decode keeps (conv, ssm) state caches.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core import meshctx
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import dp_axes
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.resolved_dt_rank(cfg.d_model)
+    return d_inner, dt_rank, m.d_state, m.d_conv
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, dt_rank, n, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    # S4D-real initialization for A (negative, stable)
+    a = -jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :],
+                  (d_inner, 1))
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * d_inner)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner))
+                   / np.sqrt(d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_x": (jax.random.normal(ks[2], (d_inner, dt_rank + 2 * n))
+                / np.sqrt(d_inner)).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (dt_rank, d_inner))
+                 / np.sqrt(dt_rank)).astype(dtype),
+        "b_dt": jnp.full((d_inner,), np.log(np.expm1(0.01)), jnp.float32),
+        "log_a": jnp.log(-a),          # stored as log(-A), f32
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": (jax.random.normal(ks[4], (d_inner, d))
+                  / np.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig):
+    return {"w_in": P(None, "model"), "conv_w": P(None, "model"),
+            "conv_b": P("model"), "w_x": P("model", None),
+            "w_dt": P(None, "model"), "b_dt": P("model"),
+            "log_a": P("model", None), "d_skip": P("model"),
+            "w_out": P("model", None)}
+
+
+def _ssm_inputs(params, xz, cfg):
+    """Shared projection math.  xz: (..., 2*d_inner) -> (x, z, dt, b, c)."""
+    d_inner, dt_rank, n, _ = _dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z
+
+
+def mamba_block(params, x_in: jax.Array, cfg: ModelConfig, run=None,
+                ) -> jax.Array:
+    """Train/prefill path.  x_in: (B, S, D) -> (B, S, D)."""
+    d_inner, dt_rank, n, d_conv = _dims(cfg)
+    b, s, _ = x_in.shape
+    dp = dp_axes()
+
+    xz = jnp.einsum("bsd,de->bse", x_in, params["w_in"])
+    xz = meshctx.constrain(xz, dp, None, "model")
+    x, z = jnp.split(xz, 2, axis=-1)                    # (B, S, DI)
+
+    # causal depthwise conv over time
+    xp = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(xp[:, i:i + s] * params["conv_w"][i][None, None]
+               for i in range(d_conv)) + params["conv_b"]
+    x = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bse,ef->bsf", x, params["w_x"])  # contract DI (psum)
+    dt_r, bb, cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("bsr,re->bse", dt_r, params["w_dt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["b_dt"])
+    a = -jnp.exp(params["log_a"])                       # (DI, N)
+
+    if run is not None and run.use_pallas:
+        y, _h = kops.selective_scan(x, dt.astype(x.dtype), a,
+                                    bb.astype(jnp.float32),
+                                    cc.astype(jnp.float32),
+                                    params["d_skip"], impl="pallas")
+    elif run is not None and run.mamba_chunked:
+        y, _h = kref.selective_scan_chunked(
+            x, dt.astype(x.dtype), a, bb.astype(jnp.float32),
+            cc.astype(jnp.float32), params["d_skip"], chunk=run.mamba_chunk,
+            unroll=run.unroll_layers)
+    else:
+        y, _h = kops.selective_scan(x, dt.astype(x.dtype), a,
+                                    bb.astype(jnp.float32),
+                                    cc.astype(jnp.float32),
+                                    params["d_skip"], impl="ref")
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return meshctx.constrain(out, dp, None, None)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, _, n, d_conv = _dims(cfg)
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+            "ssm": jnp.zeros((batch, d_inner, n), jnp.float32)}
+
+
+def mamba_cache_specs(cfg: ModelConfig):
+    return {"conv": P(dp_axes(), None, "model"),
+            "ssm": P(dp_axes(), "model", None)}
+
+
+def mamba_decode(params, x_in: jax.Array, cache: Dict, cfg: ModelConfig,
+                 run=None) -> Tuple[jax.Array, Dict]:
+    """One-token decode.  x_in: (B, D); cache: {conv (B, dc-1, DI),
+    ssm (B, DI, N)} -> (y (B, D), new cache)."""
+    d_inner, dt_rank, n, d_conv = _dims(cfg)
+    bsz = x_in.shape[0]
+    dp = dp_axes()
+
+    xz = jnp.einsum("bd,de->be", x_in, params["w_in"])
+    xz = meshctx.constrain(xz, dp, "model")
+    x, z = jnp.split(xz, 2, axis=-1)                    # (B, DI)
+
+    hist = jnp.concatenate([cache["conv"], x[:, None]], axis=1)  # (B, dc, DI)
+    conv = jnp.einsum("bce,ce->be", hist, params["conv_w"]) + params["conv_b"]
+    x = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    proj = jnp.einsum("be,ef->bf", x, params["w_x"])
+    dt_r, bb, cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("br,re->be", dt_r, params["w_dt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["b_dt"])
+    a = -jnp.exp(params["log_a"])
+
+    y, h = kref.selective_scan_step(x, dt.astype(x.dtype), a,
+                                    bb.astype(jnp.float32),
+                                    cc.astype(jnp.float32),
+                                    params["d_skip"], cache["ssm"])
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])
+    return meshctx.constrain(out, dp, None), {"conv": new_conv, "ssm": h}

@@ -1,0 +1,143 @@
+"""Model facade: dispatches decoder-only vs encoder-decoder, builds input
+specs (ShapeDtypeStructs) per (arch x shape) cell, and exposes the uniform
+step functions consumed by launch/ (train_step, serve_step) and tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..core import meshctx
+from . import encdec, transformer
+from .layers import dp_axes, dtype_of
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.is_encoder_decoder
+
+
+def init_params(key, cfg: ModelConfig, run: Optional[RunConfig] = None):
+    mod = encdec if is_encdec(cfg) else transformer
+    return mod.init_params(key, cfg, run)
+
+
+def param_specs(cfg: ModelConfig):
+    mod = encdec if is_encdec(cfg) else transformer
+    return mod.param_specs(cfg)
+
+
+def forward_loss(params, batch, cfg: ModelConfig, run=None):
+    mod = encdec if is_encdec(cfg) else transformer
+    return mod.forward_loss(params, batch, cfg, run)
+
+
+def prefill(params, batch, cfg: ModelConfig, run=None):
+    if is_encdec(cfg):
+        memory = encdec.encode(params, batch["src_embeds"], cfg, run)
+        return memory
+    return transformer.prefill(params, batch, cfg, run)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, run=None):
+    mod = encdec if is_encdec(cfg) else transformer
+    return mod.init_cache(cfg, batch, max_len, run)
+
+
+def cache_specs(cfg: ModelConfig):
+    mod = encdec if is_encdec(cfg) else transformer
+    return mod.cache_specs(cfg)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, run=None):
+    mod = encdec if is_encdec(cfg) else transformer
+    return mod.decode_step(params, cache, tokens, pos, cfg, run)
+
+
+def count_params(params) -> int:
+    return transformer.count_params(params)
+
+
+def active_param_count(cfg: ModelConfig, total: int,
+                       params_tree=None) -> int:
+    """Approximate active params per token (MoE: top-k of routed experts)."""
+    if cfg.ffn_kind == "dense" or cfg.moe.num_experts == 0:
+        return total
+    m = cfg.moe
+    # routed expert params per layer
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = sum(
+        1 for i in range(cfg.n_layers)
+        if cfg.layer_ffn_kind(i) in ("moe", "moe+dense"))
+    routed_total = per_expert * m.num_experts * n_moe_layers
+    routed_active = per_expert * m.top_k * n_moe_layers
+    return total - routed_total + routed_active
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape) — ShapeDtypeStructs, no allocation
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                run: Optional[RunConfig] = None) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given cell (weak-type-correct,
+    shardable, no device allocation).  [vlm]/[audio] archs get precomputed
+    patch/frame embeddings per the assignment."""
+    b, s = shape.global_batch, shape.seq_len
+    adt = dtype_of(run.activation_dtype) if run is not None else jnp.bfloat16
+
+    if shape.kind in ("train", "prefill"):
+        if is_encdec(cfg):
+            batch = {
+                "src_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), adt),
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        elif cfg.input_mode == "embeds":
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), adt),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+            if cfg.mrope_sections:
+                batch["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            batch.pop("labels", None)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache.  Note enc-dec
+    # decodes TEXT tokens (the embeds stub feeds the encoder only).
+    if cfg.input_mode == "embeds" and not is_encdec(cfg):
+        tok = jax.ShapeDtypeStruct((b, cfg.d_model), adt)
+    else:
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {"tokens": tok, "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def batch_specs_sharding(cfg: ModelConfig, shape: ShapeConfig):
+    """PartitionSpecs matching input_specs (batch over pod+data)."""
+    dp = dp_axes()
+    if shape.kind in ("train", "prefill"):
+        if is_encdec(cfg):
+            sp = {"src_embeds": P(dp, None, None), "tokens": P(dp, None),
+                  "labels": P(dp, None)}
+        elif cfg.input_mode == "embeds":
+            sp = {"embeds": P(dp, None, None), "labels": P(dp, None)}
+            if cfg.mrope_sections:
+                sp["positions"] = P(None, dp, None)
+        else:
+            sp = {"tokens": P(dp, None), "labels": P(dp, None)}
+        if shape.kind == "prefill":
+            sp.pop("labels", None)
+        return sp
+    tok = P(dp, None) if (cfg.input_mode == "embeds"
+                          and not is_encdec(cfg)) else P(dp)
+    return {"tokens": tok, "pos": P(dp)}

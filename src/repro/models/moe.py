@@ -1,0 +1,216 @@
+"""Mixture-of-Experts via the Trust<T> delegation channel.
+
+Experts are properties entrusted to the devices of the "model" (trustee)
+axis.  Token -> expert routing produces delegation requests whose payload is
+the token's hidden vector; the channel's capacity IS the MoE capacity factor
+(paper: slot size), the two-part slot IS the overflow round, and the
+trustee's serve phase is the grouped expert FFN (Pallas ``grouped_matmul``
+on TPU).  Responses return FFN outputs to the requesting client, which
+combines them with the router weights.  The same ``core.channel`` code that
+backs the KV store moves the tokens — that is the point of the framework.
+
+Client partitioning: with S divisible by the trustee count, tokens are
+sequence-sharded so every chip originates its own requests (paper's shared
+mode).  At decode (S == 1) tokens are mask-partitioned round-robin over the
+trustee axis and results psum-combined.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..configs.base import ModelConfig, ACT_SILU
+from ..core import channel as ch
+from ..core import meshctx
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import dp_axes, init_mlp, mlp, mlp_specs
+
+
+def _round8(x: int) -> int:
+    return max(8, ((x + 7) // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    e, d, f = m.num_experts, cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s_in, s_ff = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * s_ff).astype(dtype),
+    }
+    if m.num_shared > 0:
+        p["shared"] = init_mlp(ks[4], d, m.num_shared * f, dtype)
+    return p
+
+
+def moe_specs(cfg: ModelConfig):
+    s = {"router": P(None, None),
+         "w_gate": P("model", None, None),
+         "w_up": P("model", None, None),
+         "w_down": P("model", None, None)}
+    if cfg.moe.num_shared > 0:
+        s["shared"] = mlp_specs()
+    return s
+
+
+def _expert_serve(weights, e_local: int, cap2: int, act: str, use_pallas: bool):
+    """Trustee-side: regroup received token rows by local expert (second-level
+    slot pack) and run the grouped gated FFN."""
+
+    def serve(state, received: ch.Received):
+        rows = received.rows
+        h = rows["h"]                                   # (N, D)
+        el = jnp.where(received.valid, rows["el"], -1)
+        slots, counts, req_slot = kref.delegation_pack(el, h, e_local, cap2)
+        x_e = slots.reshape(e_local, cap2, h.shape[1])
+        if use_pallas:
+            g = kops.grouped_matmul(x_e, weights["w_gate"], impl="pallas")
+            u = kops.grouped_matmul(x_e, weights["w_up"], impl="pallas")
+            a = jax.nn.silu(g.astype(jnp.float32)) if act == ACT_SILU else \
+                jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+            hh = (a * u.astype(jnp.float32)).astype(x_e.dtype)
+            y_e = kops.grouped_matmul(hh, weights["w_down"], impl="pallas")
+        else:
+            y_e = kref.moe_ffn(x_e, weights["w_gate"], weights["w_up"],
+                               weights["w_down"], act)
+        flat = y_e.reshape(e_local * cap2, h.shape[1])
+        safe = jnp.where(req_slot >= 0, req_slot, 0)
+        y = jnp.where((req_slot >= 0)[:, None], flat[safe],
+                      jnp.zeros_like(h))
+        return state, {"y": y}
+
+    return serve
+
+
+def moe_block(params, x: jax.Array, cfg: ModelConfig, run=None
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (y (B, S, D), aux metrics incl. load-balance loss)."""
+    mesh = meshctx.current_mesh()
+    dp = dp_axes()
+    t = int(mesh.shape["model"])
+    m = cfg.moe
+    e, k = m.num_experts, m.top_k
+    e_local = e // t
+    b, s, d = x.shape
+    act = cfg.act
+
+    # ---- routing (f32) ----------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)              # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (switch-style): E * sum_e f_e * pbar_e
+    ohot = jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(2)   # (B, S, E)
+    f_e = ohot.mean((0, 1)) / k
+    pbar = probs.mean((0, 1))
+    aux_loss = e * jnp.sum(f_e * pbar) * m.aux_loss_weight
+
+    seq_mode = (s % t == 0) and s >= t
+    n_dp = max(1, np.prod([int(mesh.shape[a]) for a in dp]).item()) if dp else 1
+    b_loc = max(1, b // n_dp)
+    # requests ORIGINATED per client: seq mode shards tokens by sequence;
+    # mask-partition mode (decode) round-robins tokens over the t clients
+    r_local = (b_loc * (s // t) * k) if seq_mode \
+        else max(1, -(-b_loc * s * k // t))
+
+    cap = _round8(int(np.ceil(m.capacity_factor * max(1, r_local) / t)))
+    over_cap = _round8(int(np.ceil(m.overflow_factor * max(1, r_local) / t))) \
+        if m.overflow == "second_round" else 0
+    cfg_ch = ch.ChannelConfig(
+        axis="model", capacity=cap, overflow=m.overflow,
+        overflow_capacity=over_cap,
+        local_shortcut=bool(run is None or run.local_shortcut))
+    use_pallas = bool(run is not None and run.use_pallas)
+    # trustee-side per-expert slots: sized on EXPECTED load (balanced routing
+    # sends ~r_local real rows per trustee), not on the allocated channel
+    # buffer — 4x-mean headroom; skew beyond that drops at the second level
+    # (same trade-off as the paper's slot size, tunable via capacity_factor)
+    cap2 = _round8(int(np.ceil(4.0 * max(1, r_local) / e_local)))
+    serve_builder = lambda w: _expert_serve(
+        w, e_local, cap2=cap2, act=act, use_pallas=use_pallas)
+
+    def dispatch(x_l, w_l, e_l, weights, partition_mask=None):
+        """One client's delegation round.  x_l: (R_tok, D); w_l/e_l: (R_tok, K)."""
+        r_tok = x_l.shape[0]
+        h_rows = jnp.repeat(x_l, k, axis=0)             # (R_tok*K, D)
+        e_flat = e_l.reshape(-1)
+        dst = (e_flat // e_local).astype(jnp.int32)
+        el_flat = (e_flat % e_local).astype(jnp.int32)
+        if partition_mask is not None:
+            pm = jnp.repeat(partition_mask, k, axis=0)
+            dst = jnp.where(pm, dst, -1)
+        payload = {"h": h_rows, "el": el_flat}
+        state, resp, info = ch.delegate(
+            None, dst, payload, serve_builder(weights), t, cfg_ch)
+        y_rows = resp["y"].reshape(r_tok, k, d)
+        y_tok = jnp.sum(y_rows * w_l[..., None].astype(y_rows.dtype), axis=1)
+        dropped = info.dropped.reshape(r_tok, k).any(-1)
+        return y_tok, info.group_sizes, dropped
+
+    if seq_mode:
+        def island(x_l, w_l, e_l, wg, wu, wd):
+            bb, ss, _ = x_l.shape
+            weights = {"w_gate": wg, "w_up": wu, "w_down": wd}
+            y, gs, drop = dispatch(x_l.reshape(bb * ss, d),
+                                   w_l.reshape(bb * ss, k),
+                                   e_l.reshape(bb * ss, k), weights)
+            max_load = jax.lax.pmax(jnp.max(gs).astype(jnp.float32),
+                                    "model").reshape(1)
+            return y.reshape(bb, ss, d), max_load, drop.reshape(bb, ss)
+
+        y, max_load, dropped = shard_map(
+            island, mesh=mesh,
+            in_specs=(P(dp, "model", None), P(dp, "model", None),
+                      P(dp, "model", None), P("model", None, None),
+                      P("model", None, None), P("model", None, None)),
+            out_specs=(P(dp, "model", None), P(dp), P(dp, "model")),
+            check_rep=False,
+        )(x, top_w.astype(x.dtype), top_e, params["w_gate"], params["w_up"],
+          params["w_down"])
+    else:
+        def island(x_l, w_l, e_l, wg, wu, wd):
+            bb, ss, _ = x_l.shape
+            weights = {"w_gate": wg, "w_up": wu, "w_down": wd}
+            my = jax.lax.axis_index("model")
+            tok_idx = jnp.arange(bb * ss)
+            pmask = (tok_idx % t) == my
+            y, gs, drop = dispatch(x_l.reshape(bb * ss, d),
+                                   w_l.reshape(bb * ss, k),
+                                   e_l.reshape(bb * ss, k), weights, pmask)
+            y = jnp.where(pmask[:, None], y, 0.0)
+            y = jax.lax.psum(y, "model")
+            drop = jax.lax.psum(jnp.where(pmask, drop, False
+                                          ).astype(jnp.int32), "model") > 0
+            max_load = jax.lax.pmax(jnp.max(gs).astype(jnp.float32),
+                                    "model").reshape(1)
+            return y.reshape(bb, ss, d), max_load, drop.reshape(bb, ss)
+
+        y, max_load, dropped = shard_map(
+            island, mesh=mesh,
+            in_specs=(P(dp, None, None), P(dp, None, None),
+                      P(dp, None, None), P("model", None, None),
+                      P("model", None, None), P("model", None, None)),
+            out_specs=(P(dp, None, None), P(dp), P(dp, None)),
+            check_rep=False,
+        )(x, top_w.astype(x.dtype), top_e, params["w_gate"], params["w_up"],
+          params["w_down"])
+
+    y = meshctx.constrain(y, dp, None, None)
+    if m.num_shared > 0:
+        y = y + mlp(params["shared"], x, act)
+
+    aux = {"moe_aux_loss": aux_loss,
+           "moe_dropped_frac": jnp.mean(dropped.astype(jnp.float32)),
+           "moe_max_load": jnp.max(max_load)}
+    return y, aux

@@ -1,0 +1,381 @@
+"""Decoder-only LM assembly for all pool architectures.
+
+Layers are organized as ``prefix`` (unstacked, e.g. deepseek's dense first
+layer) plus ``groups``: the architecture's repeating pattern (1 layer for
+uniform stacks, 8 for jamba's mamba/attn 1:7 interleave), stacked over
+repeats and driven by ``lax.scan`` — one group of HLO regardless of depth,
+which is what keeps 512-way SPMD compiles tractable and is standard practice
+at scale anyway.
+
+Each layer is pre-norm residual: x += Block(norm(x)); FFN kind per layer is
+dense / moe / moe+dense (arctic).  MoE layers route through the delegation
+channel (models/moe.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import (BLOCK_ATTN, BLOCK_MAMBA, FFN_DENSE, FFN_MOE,
+                            FFN_MOE_DENSE, ModelConfig)
+from ..core import meshctx
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .layers import (delegated_softmax_xent, dp_axes, dtype_of, embed_lookup,
+                     embed_specs, init_embed, init_mlp, init_rmsnorm,
+                     lm_logits, mlp, mlp_specs, rmsnorm, unembed_weight)
+
+
+class LayerDesc(NamedTuple):
+    block: str    # attn | mamba
+    ffn: str      # dense | moe | moe+dense | none (mamba blocks have no ffn)
+
+
+def layer_descs(cfg: ModelConfig) -> Tuple[List[LayerDesc], int, int]:
+    """Returns (descs for one group, prefix_len, n_groups)."""
+    prefix_len = 1 if cfg.first_layer_dense else 0
+    group_len = len(cfg.block_pattern) if cfg.block_pattern else 1
+    if cfg.ffn_kind != FFN_DENSE:
+        group_len = int(np.lcm(group_len, cfg.moe_every))
+    n_scanned = cfg.n_layers - prefix_len
+    assert n_scanned % group_len == 0, (cfg.name, n_scanned, group_len)
+    descs = []
+    for j in range(group_len):
+        i = prefix_len + j
+        block = cfg.block_kind(i)
+        if block == BLOCK_MAMBA and cfg.ffn_kind == FFN_DENSE:
+            # pure-SSM archs (falcon-mamba): the mamba mixer IS the layer
+            ffn = "none"
+        else:
+            # jamba: mamba layers still carry their (dense/moe) FFN sublayer
+            ffn = cfg.layer_ffn_kind(i)
+        descs.append(LayerDesc(block, ffn))
+    return descs, prefix_len, n_scanned // group_len
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / specs / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, desc: LayerDesc, dtype):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model)}
+    if desc.block == BLOCK_ATTN:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = mamba_mod.init_mamba(ks[1], cfg, dtype)
+    if desc.ffn != "none":
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        if desc.ffn in (FFN_MOE, FFN_MOE_DENSE):
+            p["moe"] = moe_mod.init_moe(ks[2], cfg, dtype)
+        if desc.ffn in (FFN_DENSE, FFN_MOE_DENSE):
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _layer_specs(cfg: ModelConfig, desc: LayerDesc):
+    s: Dict[str, Any] = {"ln1": {"scale": P(None)}}
+    if desc.block == BLOCK_ATTN:
+        s["attn"] = attn_mod.attention_specs(cfg)
+    else:
+        s["mamba"] = mamba_mod.mamba_specs(cfg)
+    if desc.ffn != "none":
+        s["ln2"] = {"scale": P(None)}
+        if desc.ffn in (FFN_MOE, FFN_MOE_DENSE):
+            s["moe"] = moe_mod.moe_specs(cfg)
+        if desc.ffn in (FFN_DENSE, FFN_MOE_DENSE):
+            s["mlp"] = mlp_specs()
+    return s
+
+
+def _apply_layer(p, x, positions, cfg, desc: LayerDesc, run):
+    if run is not None and run.sp_residual:
+        # sequence-parallel residual (Megatron-SP): the stream lives
+        # seq-sharded over the trustee axis; XLA turns the per-sublayer
+        # replicate->shard boundaries into reduce-scatter/all-gather pairs
+        # instead of all-reduces (half the bytes, bf16)
+        from ..core import meshctx as _mc
+        from .layers import dp_axes as _dp
+        x = _mc.constrain(x, _dp(), "model", None)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if desc.block == BLOCK_ATTN:
+        x = x + attn_mod.attention(p["attn"], h, positions, cfg, run)
+    else:
+        x = x + mamba_mod.mamba_block(p["mamba"], h, cfg, run)
+    aux = {}
+    if desc.ffn != "none":
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y = 0.0
+        if desc.ffn in (FFN_MOE, FFN_MOE_DENSE):
+            y_moe, aux = moe_mod.moe_block(p["moe"], h, cfg, run)
+            y = y + y_moe
+        if desc.ffn in (FFN_DENSE, FFN_MOE_DENSE):
+            y = y + mlp(p["mlp"], h, cfg.act)
+        x = x + y
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# model init / specs
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, run=None):
+    dtype = dtype_of(run.param_dtype) if run is not None else jnp.bfloat16
+    descs, prefix_len, n_groups = layer_descs(cfg)
+    k_embed, k_prefix, k_groups, k_final = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"embed": init_embed(k_embed, cfg, dtype)}
+    if prefix_len:
+        dense_desc = LayerDesc(cfg.block_kind(0), FFN_DENSE)
+        params["prefix"] = [
+            _init_layer(jax.random.fold_in(k_prefix, i), cfg, dense_desc, dtype)
+            for i in range(prefix_len)]
+    groups = {}
+    for j, desc in enumerate(descs):
+        keys = jax.random.split(jax.random.fold_in(k_groups, j), n_groups)
+        groups[f"pos{j}"] = jax.vmap(
+            lambda kk: _init_layer(kk, cfg, desc, dtype))(keys)
+    params["groups"] = groups
+    params["final_norm"] = init_rmsnorm(cfg.d_model)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    descs, prefix_len, _ = layer_descs(cfg)
+    specs: Dict[str, Any] = {"embed": embed_specs(cfg)}
+    if prefix_len:
+        dense_desc = LayerDesc(cfg.block_kind(0), FFN_DENSE)
+        specs["prefix"] = [_layer_specs(cfg, dense_desc)
+                           for _ in range(prefix_len)]
+    groups = {}
+    for j, desc in enumerate(descs):
+        ls = _layer_specs(cfg, desc)
+        groups[f"pos{j}"] = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))), ls,
+            is_leaf=lambda v: isinstance(v, P))
+    specs["groups"] = groups
+    specs["final_norm"] = {"scale": P(None)}
+    return specs
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _stack_forward(params, x, positions, cfg, run):
+    descs, prefix_len, n_groups = layer_descs(cfg)
+    aux_acc = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+               "moe_dropped_frac": jnp.zeros((), jnp.float32),
+               "moe_max_load": jnp.zeros((), jnp.float32)}
+
+    def add_aux(acc, aux):
+        if not aux:
+            return acc
+        return {"moe_aux_loss": acc["moe_aux_loss"] + aux["moe_aux_loss"],
+                "moe_dropped_frac": acc["moe_dropped_frac"]
+                                    + aux["moe_dropped_frac"],
+                "moe_max_load": jnp.maximum(acc["moe_max_load"],
+                                            aux["moe_max_load"])}
+
+    for i in range(prefix_len):
+        dense_desc = LayerDesc(cfg.block_kind(i), FFN_DENSE)
+        x, aux = _apply_layer(params["prefix"][i], x, positions, cfg,
+                              dense_desc, run)
+        aux_acc = add_aux(aux_acc, aux)
+
+    # nested remat: with multi-layer groups (jamba's period-8), checkpoint
+    # each layer inside the group too, so the group backward holds one
+    # layer's internals at a time instead of all eight
+    nest_remat = (run is not None and run.remat == "full" and len(descs) > 1)
+
+    def group_fn(carry, group_params):
+        x, acc = carry
+        for j, desc in enumerate(descs):
+            def layer_fn(p, xx, _desc=desc):
+                return _apply_layer(p, xx, positions, cfg, _desc, run)
+            if nest_remat:
+                layer_fn = jax.checkpoint(layer_fn, prevent_cse=False)
+            x, aux = layer_fn(group_params[f"pos{j}"], x)
+            acc = add_aux(acc, aux)
+        return (x, acc), None
+
+    if run is not None and run.remat != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if run.remat == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        group_fn = jax.checkpoint(group_fn, policy=policy,
+                                  prevent_cse=False)
+    if run is not None and run.unroll_layers:
+        carry = (x, aux_acc)
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda l: l[g], params["groups"])
+            carry, _ = group_fn(carry, gp)
+        x, aux_acc = carry
+    else:
+        (x, aux_acc), _ = jax.lax.scan(group_fn, (x, aux_acc),
+                                       params["groups"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_acc
+
+
+def _inputs_to_hidden(params, batch, cfg):
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"]
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"], cfg)
+    b, s = x.shape[:2]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return x, positions
+
+
+def forward_loss(params, batch, cfg: ModelConfig, run=None):
+    """Training objective.  batch: tokens/embeds (+positions) + labels."""
+    x, positions = _inputs_to_hidden(params, batch, cfg)
+    x, aux = _stack_forward(params, x, positions, cfg, run)
+    w_out = unembed_weight(params["embed"], cfg)
+    mask = batch.get("mask")
+    nll, acc = delegated_softmax_xent(
+        x, w_out, batch["labels"], cfg, mask,
+        chunk=run.xent_chunk if run is not None else 512,
+        unroll=bool(run is not None and run.unroll_layers))
+    loss = nll + aux["moe_aux_loss"]
+    metrics = {"nll": nll, "accuracy": acc, **aux}
+    return loss, metrics
+
+
+def prefill(params, batch, cfg: ModelConfig, run=None):
+    """Inference prefill: hidden states for all positions; returns last-token
+    logits (vocab-sharded).  KV-cache installation is handled by serve.py
+    (it re-runs attention layers in cache-write mode for the paged layout)."""
+    x, positions = _inputs_to_hidden(params, batch, cfg)
+    x, _aux = _stack_forward(params, x, positions, cfg, run)
+    w_out = unembed_weight(params["embed"], cfg)
+    last = x[:, -1, :]
+    return lm_logits(last, w_out, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, delegated KV pages)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, run=None):
+    dtype = dtype_of(run.activation_dtype) if run is not None else jnp.bfloat16
+    descs, prefix_len, n_groups = layer_descs(cfg)
+
+    def layer_cache(desc):
+        if desc.block == BLOCK_ATTN:
+            return attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+
+    cache: Dict[str, Any] = {}
+    if prefix_len:
+        cache["prefix"] = [layer_cache(LayerDesc(cfg.block_kind(i), FFN_DENSE))
+                           for i in range(prefix_len)]
+    groups = {}
+    for j, desc in enumerate(descs):
+        c = layer_cache(desc)
+        groups[f"pos{j}"] = jax.tree.map(
+            lambda l: jnp.zeros((n_groups,) + l.shape, l.dtype), c)
+    cache["groups"] = groups
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    descs, prefix_len, _ = layer_descs(cfg)
+
+    def layer_spec(desc):
+        if desc.block == BLOCK_ATTN:
+            return attn_mod.kv_cache_specs(cfg)
+        return mamba_mod.mamba_cache_specs(cfg)
+
+    spec: Dict[str, Any] = {}
+    if prefix_len:
+        spec["prefix"] = [layer_spec(LayerDesc(cfg.block_kind(i), FFN_DENSE))
+                          for i in range(prefix_len)]
+    groups = {}
+    for j, desc in enumerate(descs):
+        ls = layer_spec(desc)
+        groups[f"pos{j}"] = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))), ls,
+            is_leaf=lambda v: isinstance(v, P))
+    spec["groups"] = groups
+    return spec
+
+
+def _apply_layer_decode(p, cache_l, x, pos, cfg, desc: LayerDesc, run):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if desc.block == BLOCK_ATTN:
+        y, new_cache = attn_mod.decode_attention(p["attn"], h, pos, cache_l,
+                                                 cfg, run)
+    else:
+        y, new_cache = mamba_mod.mamba_decode(p["mamba"], h, cache_l, cfg, run)
+    x = x + y
+    if desc.ffn != "none":
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y = 0.0
+        if desc.ffn in (FFN_MOE, FFN_MOE_DENSE):
+            y_moe, _aux = moe_mod.moe_block(p["moe"], h[:, None, :], cfg, run)
+            y = y + y_moe[:, 0]
+        if desc.ffn in (FFN_DENSE, FFN_MOE_DENSE):
+            y = y + mlp(p["mlp"], h, cfg.act)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, run=None):
+    """One decode step.  tokens: (B,) int32 (or embeds (B, D)); pos: (B,).
+    Returns (logits (B, V-sharded), new_cache)."""
+    descs, prefix_len, n_groups = layer_descs(cfg)
+    if cfg.input_mode == "embeds":
+        x = tokens
+    else:
+        x = embed_lookup(params["embed"], tokens[:, None], cfg)[:, 0]
+
+    new_cache: Dict[str, Any] = {}
+    if prefix_len:
+        new_cache["prefix"] = []
+        for i in range(prefix_len):
+            desc = LayerDesc(cfg.block_kind(i), FFN_DENSE)
+            x, c = _apply_layer_decode(params["prefix"][i],
+                                       cache["prefix"][i], x, pos, cfg,
+                                       desc, run)
+            new_cache["prefix"].append(c)
+
+    def group_fn(x, scanned):
+        group_params, group_cache = scanned
+        new_gc = {}
+        for j, desc in enumerate(descs):
+            x, c = _apply_layer_decode(group_params[f"pos{j}"],
+                                       group_cache[f"pos{j}"], x, pos,
+                                       cfg, desc, run)
+            new_gc[f"pos{j}"] = c
+        return x, new_gc
+
+    if run is not None and run.unroll_layers:
+        gcs = []
+        for g in range(n_groups):
+            scanned_g = jax.tree.map(lambda l: l[g],
+                                     (params["groups"], cache["groups"]))
+            x, gc = group_fn(x, scanned_g)
+            gcs.append(gc)
+        group_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *gcs)
+    else:
+        x, group_caches = jax.lax.scan(group_fn, x,
+                                       (params["groups"], cache["groups"]))
+    new_cache["groups"] = group_caches
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w_out = unembed_weight(params["embed"], cfg)
+    logits = lm_logits(x, w_out, cfg)
+    return logits, new_cache

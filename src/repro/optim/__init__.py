@@ -1,0 +1,4 @@
+from .optimizer import (AdamWConfig, AdamWState, adamw_update, init_adamw,
+                        clip_by_global_norm, global_norm, schedule)
+from .delegated import (GradChannelCombiner, fsdp_specs, opt_state_specs,
+                        int8_quantize, int8_dequantize)

@@ -1,0 +1,2 @@
+from .fault_tolerance import (ElasticPlan, FailureInjector, SimulatedFailure,
+                              StragglerMonitor, TrainLoop, TrainLoopConfig)

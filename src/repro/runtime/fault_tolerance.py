@@ -1,0 +1,153 @@
+"""Fault-tolerant training driver: checkpoint/restart, failure injection,
+straggler mitigation, elastic rescale hooks.
+
+At thousand-node scale the failure model is: (a) hard node loss -> the SPMD
+program dies -> the job restarts from the newest checkpoint (possibly on a
+different mesh — elastic); (b) stragglers -> per-step deadline accounting
+decides between waiting, re-issuing the step (deterministic data pipeline
+makes re-issue exact), or excluding the slow host at the next restart.
+
+This module implements the control plane as testable host-side logic:
+  * TrainLoop — step loop with periodic atomic checkpoints + resume.
+  * FailureInjector — deterministic fault schedule for tests/examples.
+  * StragglerMonitor — EWMA step-time tracker with deadline policy.
+  * ElasticPlan — decides the new mesh when the healthy-device count drops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule: fail when step in ``at_steps``."""
+    at_steps: Tuple[int, ...] = ()
+    fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA of step times; flags steps exceeding ``deadline_factor`` x EWMA.
+
+    Mitigation at single-controller scale is re-issue (the deterministic
+    pipeline regenerates the identical batch); at multi-controller scale the
+    flag feeds the ElasticPlan to exclude the slow host on restart."""
+    deadline_factor: float = 3.0
+    alpha: float = 0.1
+    ewma: Optional[float] = None
+    flagged: List[int] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = dt > self.deadline_factor * self.ewma
+        if is_straggler:
+            self.flagged.append(step)
+        else:
+            # only track healthy steps so one straggler doesn't poison the EWMA
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+@dataclass
+class ElasticPlan:
+    """Mesh-downsize ladder: given healthy device count, pick the largest
+    (data, model) grid from the allowed ladder that fits."""
+    ladder: Tuple[Tuple[int, int], ...] = ((16, 16), (8, 16), (4, 16), (2, 16),
+                                           (1, 16), (1, 8), (1, 4), (1, 2),
+                                           (1, 1))
+
+    def choose(self, healthy_devices: int) -> Tuple[int, int]:
+        for shape in self.ladder:
+            if shape[0] * shape[1] <= healthy_devices:
+                return shape
+        raise RuntimeError("no viable mesh")
+
+
+@dataclass
+class TrainLoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_retries: int = 5
+
+
+class TrainLoop:
+    """Generic fault-tolerant step loop.
+
+    step_fn(state, step) -> (state, metrics) must be pure w.r.t. the step
+    index (deterministic data by step).  save_fn/restore_fn adapt the state
+    pytree to the checkpoint module.
+    """
+
+    def __init__(self, cfg: TrainLoopConfig, step_fn: Callable,
+                 state: Any, injector: Optional[FailureInjector] = None,
+                 monitor: Optional[StragglerMonitor] = None,
+                 on_metrics: Optional[Callable] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.injector = injector
+        self.monitor = monitor or StragglerMonitor()
+        self.on_metrics = on_metrics
+        self.restarts = 0
+
+    def resume_step(self) -> int:
+        s = ckpt.latest_step(self.cfg.ckpt_dir)
+        return 0 if s is None else s
+
+    def run(self, n_steps: int, start_step: Optional[int] = None) -> Dict:
+        step = self.resume_step() if start_step is None else start_step
+        if step > 0:
+            self.state, step, _ = ckpt.restore(self.cfg.ckpt_dir, self.state)
+        history = []
+        while step < n_steps:
+            try:
+                t0 = time.monotonic()
+                if self.injector is not None:
+                    self.injector.maybe_fail(step)
+                self.state, metrics = self.step_fn(self.state, step)
+                dt = time.monotonic() - t0
+                straggler = self.monitor.observe(step, dt)
+                if self.on_metrics:
+                    self.on_metrics(step, metrics, dt, straggler)
+                history.append((step, metrics))
+                step += 1
+                if step % self.cfg.ckpt_every == 0 or step == n_steps:
+                    ckpt.save(self.cfg.ckpt_dir, step, self.state,
+                              extra={"restarts": self.restarts})
+                    ckpt.prune_old(self.cfg.ckpt_dir, self.cfg.keep)
+            except SimulatedFailure:
+                # restart-from-checkpoint path (same process in tests; in
+                # production this is a fresh job incarnation)
+                self.restarts += 1
+                if self.restarts > self.cfg.max_retries:
+                    raise
+                resumed = ckpt.latest_step(self.cfg.ckpt_dir)
+                if resumed is None:
+                    step = 0
+                else:
+                    self.state, step, _ = ckpt.restore(self.cfg.ckpt_dir,
+                                                       self.state)
+        return {"final_step": step, "restarts": self.restarts,
+                "history": history,
+                "stragglers": list(self.monitor.flagged)}

@@ -1,0 +1,320 @@
+"""Multi-device test battery — executed as a SUBPROCESS with
+--xla_force_host_platform_device_count=8 so the main pytest process keeps a
+single device (per the dry-run protocol).  Prints one JSON dict of named
+check results; tests/test_multidevice.py asserts on them."""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def mesh1x8():
+    return Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+@check("kvstore_ops")
+def _kvstore():
+    from repro.core import DelegatedKVStore
+    mesh = mesh2x4()
+    n_keys = 53
+    vals = np.arange(n_keys * 2, dtype=np.float32).reshape(n_keys, 2)
+    keys_np = np.random.default_rng(0).integers(0, n_keys, 64)
+    keys = jnp.array(keys_np)
+    cnt = np.bincount(keys_np, minlength=n_keys)
+    for shortcut in (True, False):
+        st = DelegatedKVStore(mesh, n_keys, 2, capacity=10,
+                              local_shortcut=shortcut)
+        st.prefill(vals)
+        np.testing.assert_allclose(np.asarray(st.get(keys)), vals[keys_np])
+        st.put(keys, jnp.ones((64, 2)) * 7)
+        d = st.dump()
+        for k in np.unique(keys_np):
+            np.testing.assert_allclose(d[k], [7, 7])
+        st.add(keys, jnp.ones((64, 2)))
+        d2 = st.dump()
+        for k in range(n_keys):
+            exp = 7 + cnt[k] if cnt[k] else vals[k][0]
+            np.testing.assert_allclose(d2[k][0], exp)
+
+
+@check("kvstore_cas")
+def _cas():
+    from repro.core import DelegatedKVStore
+    mesh = mesh1x8()
+    st = DelegatedKVStore(mesh, 16, 1, capacity=16)
+    st.prefill(np.zeros((16, 1), np.float32))
+    keys = jnp.array([3] * 8 + [5] * 8)
+    expect = jnp.zeros((16, 1))
+    newv = jnp.arange(16, dtype=jnp.float32).reshape(16, 1)
+    flag, old = st.cas(keys, expect, newv)
+    flags = np.asarray(flag)
+    # per key: at least the first same-key CAS succeeds against value 0
+    assert flags.sum() >= 2
+    d = st.dump()
+    assert d[3, 0] in np.arange(16) and d[5, 0] in np.arange(16)
+
+
+@check("lock_vs_delegation_equivalence")
+def _lock_equiv():
+    from repro.core import (AtomicAddStore, DelegatedKVStore, FetchRMWStore,
+                            conflict_ranks)
+    mesh = mesh2x4()
+    n_keys = 24
+    vals = np.zeros((n_keys, 1), np.float32)
+    keys_np = np.random.default_rng(3).integers(0, n_keys, 64)
+    keys = jnp.array(keys_np)
+    ones = jnp.ones((64, 1))
+    cnt = np.bincount(keys_np, minlength=n_keys).astype(np.float32)
+
+    deleg = DelegatedKVStore(mesh, n_keys, 1, capacity=16)
+    deleg.prefill(vals)
+    deleg.add(keys, ones)
+    lock = FetchRMWStore(mesh, n_keys, 1)
+    lock.prefill(vals)
+    ranks, n_rounds = conflict_ranks(keys_np, 8)
+    lock.rmw(keys, lambda v, p: v + 1.0, ranks, n_rounds)
+    atom = AtomicAddStore(mesh, n_keys, 1)
+    atom.prefill(vals)
+    atom.add(keys, ones)
+    np.testing.assert_allclose(deleg.dump()[:, 0], cnt)
+    np.testing.assert_allclose(lock.dump()[:, 0], cnt)
+    np.testing.assert_allclose(atom.dump()[:, 0], cnt)
+    assert lock.n_rounds_executed == n_rounds > 1
+
+
+@check("moe_delegation_matches_dense")
+def _moe_equiv():
+    """Delegated MoE == dense one-hot computation of the same experts."""
+    from repro.configs.registry import SMOKE_ARCHS
+    from repro.configs.base import RunConfig, ShapeConfig, MeshConfig
+    from repro.core import meshctx
+    from repro.models import moe as moe_mod
+    from repro.models import model as M
+    cfg = SMOKE_ARCHS["arctic-480b"].with_overrides(n_layers=1)
+    mesh = mesh2x4()
+    meshctx.set_context(mesh, ("data",))
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 16, 4, "train"),
+                    mesh=MeshConfig((2, 4), ("data", "model")), remat="none")
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, cfg.d_model),
+                          jnp.float32) * 0.3
+    y, aux = jax.jit(lambda p_, x_: moe_mod.moe_block(p_, x_, cfg, run))(p, x)
+    # dense reference: route, then compute every expert on every token
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    w, e_idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    y_ref = jnp.zeros_like(x)
+    for ei in range(cfg.moe.num_experts):
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"][ei]))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"][ei])
+        o = jnp.einsum("bsf,fd->bsd", g * u, p["w_down"][ei])
+        sel = (e_idx == ei).astype(jnp.float32) * w
+        y_ref = y_ref + o * sel.sum(-1)[..., None]
+    assert float(aux["moe_dropped_frac"]) == 0.0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@check("grad_channel_combiner_int8")
+def _combiner():
+    """Compressed delegated gradient combine: error feedback keeps the
+    optimizer trajectory close to the exact all-reduce trajectory."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import jax.flatten_util
+    from repro.optim import AdamWConfig
+    from repro.optim.delegated import GradChannelCombiner
+    mesh = mesh1x8()
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    params = {"w": jnp.zeros((64, 32), jnp.float32)}
+
+    comb = GradChannelCombiner(mesh, AdamWConfig(learning_rate=0.05,
+                                                 weight_decay=0.0),
+                               axis="data2" if False else "data", chunk=64)
+    mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+    comb.mesh = mesh
+    opt, err = comb.init(params)
+    upd = comb.step_fn()
+
+    xs = jnp.asarray(rng.normal(size=(8, 128, 64)), jnp.float32)
+
+    def grads_of(w, x):   # per-client local gradient (least squares)
+        pred = jnp.einsum("nd,dk->nk", x, w)
+        res = pred - jnp.einsum("nd,dk->nk", x, target)
+        return jnp.einsum("nd,nk->dk", x, res) / x.shape[0]
+
+    def step(opt, err, xs):
+        def local(opt_shard, err_l, x_l):
+            w = comb_params(opt_shard)
+            g = grads_of(w, x_l[0])
+            gflat = flat_of(g)
+            return upd(opt_shard, err_l, gflat)
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=({"p": P("data", None), "m": P("data", None),
+                       "v": P("data", None), "step": P()},
+                      P(None, None), P("data", None, None)),
+            out_specs=({"p": P("data", None), "m": P("data", None),
+                        "v": P("data", None), "step": P()}, P(None, None)),
+            check_rep=False)(opt, err, xs)
+
+    rows, t, chunk = comb._rows, comb._t, comb.chunk
+
+    def comb_params(opt_shard):
+        # reconstruct local w from the owner shard requires the full table;
+        # inside shard_map each owner has rows/t rows -> all_gather
+        tbl = jax.lax.all_gather(opt_shard["p"], "data", tiled=True)
+        flat = tbl.reshape(t, rows // t, chunk).swapaxes(0, 1).reshape(-1)
+        return flat[: 64 * 32].reshape(64, 32)
+
+    def flat_of(g):
+        flat = jnp.zeros((rows * chunk,)).at[: 64 * 32].set(g.reshape(-1))
+        return flat.reshape(rows // t, t, chunk).swapaxes(0, 1).reshape(-1)
+
+    for i in range(60):
+        opt, err = step(opt, err, xs)
+    w_final = comb.params_of(opt)["w"] if False else None
+    # evaluate: reconstructed params close to target
+    tbl = np.asarray(opt["p"])
+    flat = tbl.reshape(t, rows // t, chunk).swapaxes(0, 1).reshape(-1)
+    w = flat[: 64 * 32].reshape(64, 32)
+    err_final = float(np.abs(w - np.asarray(target)).mean())
+    assert err_final < 0.05, err_final
+
+
+@check("fsdp_train_two_meshes_agree")
+def _fsdp_agree():
+    """Same seed + same data: (1,1)-mesh and (2,4)-mesh training produce the
+    same loss trajectory (SPMD correctness end to end)."""
+    from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+    from repro.configs.registry import SMOKE_ARCHS
+    from repro.launch.steps import build_cell
+    from repro.models import model as M
+    from repro.models.layers import dtype_of
+    from repro.optim import init_adamw
+    from repro.core import meshctx
+
+    cfg = SMOKE_ARCHS["qwen2.5-3b"].with_overrides(
+        d_model=64, n_layers=2, d_ff=128, vocab_size=512)
+    shape = ShapeConfig("t", 32, 8, "train")
+    losses = {}
+    for shape_mesh in ((1, 1), (2, 4)):
+        devs = np.array(jax.devices()[: shape_mesh[0] * shape_mesh[1]])
+        mesh = Mesh(devs.reshape(shape_mesh), ("data", "model"))
+        run = RunConfig(model=cfg, shape=shape,
+                        mesh=MeshConfig(shape_mesh, ("data", "model")),
+                        remat="none", param_dtype="float32",
+                        zero_sharding=shape_mesh[0] > 1, grad_accum=2)
+        plan = build_cell(cfg, shape, mesh, run)
+        key = jax.random.PRNGKey(0)
+        params = jax.jit(lambda k: M.init_params(k, cfg, run),
+                         out_shardings=plan.param_shardings)(key)
+        opt = jax.jit(lambda p: init_adamw(p),
+                      out_shardings=plan.opt_shardings)(params)
+        rng = np.random.default_rng(42)
+        traj = []
+        batch = None
+        for i in range(3):
+            toks = rng.integers(0, 512, size=(8, 33))
+            batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                     "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+            params, opt, m = plan.step_fn(params, opt, batch)
+            traj.append(float(m["loss"]))
+        losses[shape_mesh] = traj
+    a, b = losses[(1, 1)], losses[(2, 4)]
+    np.testing.assert_allclose(a, b, rtol=2e-2)
+
+
+@check("elastic_checkpoint_reshard")
+def _elastic():
+    """Save params on a (1,8) mesh, restore onto (2,4) — elastic rescale."""
+    import tempfile
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import restore, save
+    m1 = mesh1x8()
+    m2 = mesh2x4()
+    tree = {"w": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8),
+            "b": jnp.arange(8, dtype=jnp.bfloat16)}
+    sharded = {
+        "w": jax.device_put(tree["w"], NamedSharding(m1, P("model", None))),
+        "b": jax.device_put(tree["b"], NamedSharding(m1, P("model"))),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, sharded, extra={"note": "x"})
+        new_sh = {
+            "w": NamedSharding(m2, P(("data", "model"), None)),
+            "b": NamedSharding(m2, P(None)),
+        }
+        out, step, extra = restore(d, tree, shardings=new_sh)
+        assert step == 7 and extra["note"] == "x"
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]))
+        np.testing.assert_allclose(np.asarray(out["b"], np.float32),
+                                   np.asarray(tree["b"], np.float32))
+        assert out["w"].sharding == new_sh["w"]
+
+
+@check("decode_consistency_multidevice")
+def _decode_md():
+    from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+    from repro.configs.registry import SMOKE_ARCHS
+    from repro.core import meshctx
+    from repro.models import model as M
+    from repro.models import transformer as T
+    from repro.models.layers import unembed_weight
+    mesh = mesh2x4()
+    meshctx.set_context(mesh, ("data",))
+    for name in ("qwen3-4b", "jamba-v0.1-52b"):
+        cfg = SMOKE_ARCHS[name]
+        run = RunConfig(model=cfg, shape=ShapeConfig("d", 16, 2, "decode"),
+                        mesh=MeshConfig((2, 4), ("data", "model")),
+                        remat="none")
+        key = jax.random.PRNGKey(5)
+        params = M.init_params(key, cfg, run)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+        x, pos = T._inputs_to_hidden(params, {"tokens": toks}, cfg)
+        h, _ = T._stack_forward(params, x, pos, cfg, run)
+        w = unembed_weight(params["embed"], cfg)
+        full = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                          w.astype(jnp.float32))
+        cache = M.init_cache(cfg, 2, 16, run)
+        step = jax.jit(lambda p, c, t, q: M.decode_step(p, c, t, q, cfg, run))
+        for t in range(16):
+            logits, cache = step(params, cache, toks[:, t],
+                                 jnp.full((2,), t, jnp.int32))
+            np.testing.assert_allclose(np.asarray(logits),
+                                       np.asarray(full[:, t]), atol=0.4)
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) for the delegation channel invariants.
+
+All on the trivial 1-device mesh — pack/unpack math is device-count-agnostic
+per shard; multi-device semantics are covered by the subprocess battery in
+test_multidevice.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel as ch
+from repro.kernels import ref as kref
+
+
+def np_i32(x):
+    return np.asarray(x, np.int32)
+
+
+@st.composite
+def pack_case(draw):
+    t = draw(st.integers(1, 9))
+    r = draw(st.integers(1, 120))
+    cap = draw(st.integers(1, 20))
+    dst = draw(st.lists(st.integers(-1, t - 1), min_size=r, max_size=r))
+    return t, cap, np_i32(dst)
+
+
+@settings(max_examples=60, deadline=None)
+@given(pack_case())
+def test_pack_is_lossless_partition(case):
+    """Every active request is either placed in exactly one slot or marked
+    dropped; no duplicates, no inventions (paper: requests are never lost,
+    only deferred when the slot is full)."""
+    t, cap, dst = case
+    r = dst.shape[0]
+    payload = np.arange(r, dtype=np.float32).reshape(r, 1) + 1.0
+    cfg = ch.ChannelConfig(axis="model", capacity=cap, overflow="drop")
+    packed, group_sizes = jax.jit(
+        lambda d, p: ch.pack(d, p, t, cfg))(jnp.asarray(dst),
+                                            jnp.asarray(payload))
+    slots = np.asarray(packed.slots)
+    req_slot = np.asarray(packed.request_slot)
+    dropped = np.asarray(packed.dropped)
+    counts = np.asarray(packed.counts)
+
+    active = dst >= 0
+    # partition: active -> placed xor dropped; inactive -> neither
+    placed = req_slot >= 0
+    assert (placed & dropped).sum() == 0
+    assert np.array_equal(placed | dropped, active)
+    # each placed request occupies the slot holding its payload
+    for i in np.where(placed)[0]:
+        assert slots[req_slot[i], 0] == payload[i, 0]
+    # slot rows are unique per request
+    used = req_slot[placed]
+    assert len(np.unique(used)) == len(used)
+    # counts match placements per trustee
+    for k in range(t):
+        in_k = ((used >= k * cap) & (used < (k + 1) * cap)).sum()
+        assert counts[k] == in_k == min((dst == k).sum(), cap)
+    # demand (pre-capacity) is exact
+    assert np.array_equal(np.asarray(group_sizes),
+                          np.bincount(dst[active], minlength=t))
+
+
+@settings(max_examples=60, deadline=None)
+@given(pack_case())
+def test_pack_fifo_within_destination(case):
+    """FIFO per (client, trustee) pair — the paper's ordering guarantee."""
+    t, cap, dst = case
+    r = dst.shape[0]
+    payload = np.arange(r, dtype=np.float32).reshape(r, 1)
+    cfg = ch.ChannelConfig(axis="model", capacity=cap, overflow="drop")
+    packed, _ = jax.jit(lambda d, p: ch.pack(d, p, t, cfg))(
+        jnp.asarray(dst), jnp.asarray(payload))
+    req_slot = np.asarray(packed.request_slot)
+    for k in range(t):
+        mine = np.where((dst == k) & (req_slot >= 0))[0]
+        slots_k = req_slot[mine]
+        # earlier requests get earlier slots
+        assert np.all(np.diff(slots_k) > 0)
+        # and they are the FIRST requests to k (capacity cuts the tail)
+        all_k = np.where(dst == k)[0]
+        assert np.array_equal(mine, all_k[: len(mine)])
+
+
+@settings(max_examples=40, deadline=None)
+@given(pack_case(), st.integers(0, 20))
+def test_second_round_overflow_is_lossless_up_to_capacity(case, cap2):
+    t, cap, dst = case
+    r = dst.shape[0]
+    payload = np.arange(r, dtype=np.float32).reshape(r, 1)
+    cfg = ch.ChannelConfig(axis="model", capacity=cap,
+                           overflow="second_round", overflow_capacity=cap2)
+    packed, _ = jax.jit(lambda d, p: ch.pack(d, p, t, cfg))(
+        jnp.asarray(dst), jnp.asarray(payload))
+    req_slot = np.asarray(packed.request_slot)
+    dropped = np.asarray(packed.dropped)
+    for k in range(t):
+        n_k = (dst == k).sum()
+        served = ((dst == k) & (req_slot >= 0)).sum()
+        assert served == min(n_k, cap + cap2)
+        assert ((dst == k) & dropped).sum() == max(0, n_k - cap - cap2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(1, 64),
+       st.integers(0, 1000))
+def test_pack_kernel_matches_ref(t, cap, r, seed):
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(rng.integers(-1, t, size=r), jnp.int32)
+    payload = jnp.asarray(rng.normal(size=(r, 3)), jnp.float32)
+    s1, c1, q1 = kref.delegation_pack(dst, payload, t, cap)
+    from repro.kernels import ops as kops
+    s2, c2, q2 = kops.delegation_pack(dst, payload, t, cap, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 24), st.integers(0, 99))
+def test_roundtrip_identity_op(t_unused, r, seed):
+    """delegate() with an identity op returns each request's own payload —
+    pack -> transmit -> serve -> respond -> unpack composes to identity
+    (single-device mesh: T == 1, exercises the local+channel merge)."""
+    rng = np.random.default_rng(seed)
+    dst = jnp.zeros((r,), jnp.int32)
+    payload = {"x": jnp.asarray(rng.normal(size=(r, 2)), jnp.float32)}
+
+    def serve(state, received):
+        return state, {"x": received.rows["x"] * 2.0}
+
+    cfg = ch.ChannelConfig(axis="model", capacity=r, overflow="drop",
+                           local_shortcut=False)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
+    f = shard_map(
+        lambda d, p: ch.delegate(None, d, p, serve, 1, cfg)[1],
+        mesh=mesh, in_specs=(P(None), P(None)), out_specs=P(None),
+        check_rep=False)
+    out = f(dst, payload)
+    np.testing.assert_allclose(np.asarray(out["x"]),
+                               np.asarray(payload["x"]) * 2.0, atol=1e-6)

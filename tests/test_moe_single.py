@@ -1,0 +1,93 @@
+"""Single-device MoE correctness (the delegation channel with T=1) —
+complements the multi-device battery version."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+from repro.configs.registry import SMOKE_ARCHS
+from repro.core import meshctx
+from repro.models import moe as moe_mod
+
+
+@pytest.fixture(autouse=True)
+def _reset_mesh():
+    meshctx.set_context(meshctx._default_mesh(), "default")
+    yield
+
+
+def _dense_ref(p, x, cfg):
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    w, e_idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    y_ref = jnp.zeros_like(x)
+    for ei in range(cfg.moe.num_experts):
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"][ei]))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"][ei])
+        o = jnp.einsum("bsf,fd->bsd", g * u, p["w_down"][ei])
+        sel = (e_idx == ei).astype(jnp.float32) * w
+        y_ref = y_ref + o * sel.sum(-1)[..., None]
+    return y_ref
+
+
+@pytest.mark.parametrize("overflow", ["second_round", "drop"])
+def test_moe_matches_dense_t1(overflow):
+    cfg = SMOKE_ARCHS["arctic-480b"].with_overrides(n_layers=1)
+    cfg = cfg.with_overrides(
+        moe=dataclasses.replace(cfg.moe, capacity_factor=4.0,
+                                overflow=overflow))
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 16, 2, "train"),
+                    mesh=MeshConfig((1, 1), ("data", "model")), remat="none")
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (2, 16, cfg.d_model), jnp.float32) * 0.3
+    y, aux = jax.jit(lambda p_, x_: moe_mod.moe_block(p_, x_, cfg, run))(p, x)
+    # T=1 with generous capacity: nothing drops, exact match to dense compute
+    assert float(aux["moe_dropped_frac"]) == 0.0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(_dense_ref(p, x, cfg)),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_decode_single_token():
+    """S=1 (mask-partition client mode) matches dense reference too."""
+    cfg = SMOKE_ARCHS["deepseek-v2-lite-16b"].with_overrides(n_layers=3)
+    cfg = cfg.with_overrides(
+        moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    run = RunConfig(model=cfg, shape=ShapeConfig("d", 8, 2, "decode"),
+                    mesh=MeshConfig((1, 1), ("data", "model")), remat="none")
+    key = jax.random.PRNGKey(2)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 1, cfg.d_model), jnp.float32) * 0.3
+    y, aux = jax.jit(lambda p_, x_: moe_mod.moe_block(p_, x_, cfg, run))(p, x)
+    ref = _dense_ref(p, x, cfg)
+    if cfg.moe.num_shared:
+        from repro.models.layers import mlp
+        ref = ref + mlp(p["shared"], x, cfg.act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drop_degrades_gracefully():
+    """Tiny capacity with drop mode: output is still finite; dropped tokens
+    contribute zero (residual passes through) — the paper's slot-full case."""
+    cfg = SMOKE_ARCHS["arctic-480b"].with_overrides(n_layers=1)
+    cfg = cfg.with_overrides(
+        moe=dataclasses.replace(cfg.moe, capacity_factor=0.1,
+                                overflow="drop"))
+    # local_shortcut off: with T=1 every request is local and the channel
+    # (hence its capacity) is bypassed entirely — correct, but this test
+    # wants to exercise the drop path
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 16, 2, "train"),
+                    mesh=MeshConfig((1, 1), ("data", "model")), remat="none",
+                    local_shortcut=False)
+    key = jax.random.PRNGKey(3)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    y, aux = jax.jit(lambda p_, x_: moe_mod.moe_block(p_, x_, cfg, run))(p, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux["moe_dropped_frac"]) > 0.0

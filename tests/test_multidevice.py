@@ -1,0 +1,43 @@
+"""Multi-device integration tests.
+
+The checks run in ONE subprocess with 8 simulated host devices (the dry-run
+protocol forbids setting the device-count flag in this process); results are
+shared via a session fixture so the expensive startup happens once."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_md_battery.py")
+
+
+@pytest.fixture(scope="session")
+def battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "kvstore_ops",
+    "kvstore_cas",
+    "lock_vs_delegation_equivalence",
+    "moe_delegation_matches_dense",
+    "grad_channel_combiner_int8",
+    "fsdp_train_two_meshes_agree",
+    "elastic_checkpoint_reshard",
+    "decode_consistency_multidevice",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_multidevice(battery, name):
+    res = battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"

@@ -1,0 +1,215 @@
+"""Substrate tests: checkpoint atomicity/integrity, fault-tolerant loop,
+straggler monitor, elastic plan, data pipeline determinism, optimizer."""
+import json
+import os
+import shutil
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import SMOKE_ARCHS
+from repro.data import DataConfig, TokenPipeline
+from repro.optim import AdamWConfig, adamw_update, init_adamw
+from repro.runtime import (ElasticPlan, FailureInjector, SimulatedFailure,
+                           StragglerMonitor, TrainLoop, TrainLoopConfig)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+            "lst": [jnp.zeros((2, 2)), jnp.full((3,), 7, jnp.int32)]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t, extra={"k": 1})
+    out, step, extra = ckpt.restore(str(tmp_path), t)
+    assert step == 3 and extra == {"k": 1}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_pointer_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    ckpt.prune_old(str(tmp_path), keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 1, t)
+    # flip bytes in the arrays file
+    npz = os.path.join(path, "arrays.npz")
+    data = dict(np.load(npz))
+    data["a"] = data["a"] + 1.0
+    np.savez(npz, **data)
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_checkpoint_torn_write_invisible(tmp_path):
+    """A .tmp directory (crashed mid-save) is never considered a checkpoint."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    os.makedirs(os.path.join(tmp_path, "step_00000002.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant train loop
+# ---------------------------------------------------------------------------
+
+def test_trainloop_resumes_after_injected_failure(tmp_path):
+    state = {"x": jnp.zeros(())}
+    calls = []
+
+    def step_fn(state, step):
+        calls.append(step)
+        return {"x": state["x"] + 1}, {"loss": float(step)}
+
+    loop = TrainLoop(TrainLoopConfig(str(tmp_path), ckpt_every=5),
+                     step_fn, state,
+                     injector=FailureInjector(at_steps=(12,)))
+    summary = loop.run(20)
+    assert summary["final_step"] == 20
+    assert summary["restarts"] == 1
+    # state reflects exactly 20 effective steps (replay from step 10)
+    assert float(loop.state["x"]) == 20
+    # steps 10..11 were replayed after the failure at 12
+    assert calls.count(10) == 2 and calls.count(11) == 2
+
+
+def test_trainloop_gives_up_after_max_retries(tmp_path):
+    def step_fn(state, step):
+        raise SimulatedFailure("always")
+
+    loop = TrainLoop(TrainLoopConfig(str(tmp_path), ckpt_every=5,
+                                     max_retries=2),
+                     step_fn, {"x": jnp.zeros(())},
+                     injector=None)
+    loop.step_fn = step_fn
+    with pytest.raises(SimulatedFailure):
+        loop.run(5)
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(deadline_factor=3.0, alpha=0.5)
+    assert not m.observe(0, 1.0)
+    assert not m.observe(1, 1.1)
+    assert m.observe(2, 10.0)          # straggler
+    assert m.flagged == [2]
+    # EWMA not poisoned by the straggler
+    assert m.ewma < 1.2
+
+
+def test_elastic_plan():
+    p = ElasticPlan()
+    assert p.choose(256) == (16, 16)
+    assert p.choose(255) == (8, 16)
+    assert p.choose(16) == (1, 16)
+    assert p.choose(3) == (1, 2)
+    with pytest.raises(RuntimeError):
+        ElasticPlan(ladder=((2, 2),)).choose(1)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_determinism_and_resume():
+    cfg = SMOKE_ARCHS["qwen2.5-3b"]
+    shape = ShapeConfig("t", 16, 4, "train")
+    p1 = TokenPipeline(DataConfig(seed=9), cfg, shape)
+    p2 = TokenPipeline(DataConfig(seed=9), cfg, shape)
+    for step in (0, 5, 123):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    # labels are next-token shifted
+    b = p1.batch_at(3)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    # different seed -> different stream
+    p3 = TokenPipeline(DataConfig(seed=10), cfg, shape)
+    assert not np.array_equal(p3.batch_at(0)["tokens"], b1["tokens"])
+
+
+def test_pipeline_memmap(tmp_path):
+    toks = np.arange(1000, dtype=np.int32) % 97
+    path = str(tmp_path / "corpus.bin")
+    toks.tofile(path)
+    cfg = SMOKE_ARCHS["qwen2.5-3b"]
+    shape = ShapeConfig("t", 16, 2, "train")
+    p = TokenPipeline(DataConfig(seed=0, kind="memmap", path=path), cfg, shape)
+    b = p.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_embeds_batch():
+    cfg = SMOKE_ARCHS["qwen2-vl-2b"]
+    shape = ShapeConfig("t", 8, 2, "train")
+    p = TokenPipeline(DataConfig(seed=0), cfg, shape)
+    b = p.model_batch_at(0)
+    assert b["embeds"].shape == (2, 8, cfg.d_model)
+    assert b["positions"].shape == (3, 2, 8)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = init_adamw(params)
+    cfg = AdamWConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=300)
+
+    @jax.jit
+    def step(params, opt):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw_update(cfg, opt, params, g)
+
+    for _ in range(300):
+        params, opt, m = step(params, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+    assert int(opt.step) == 300
+
+
+def test_grad_clip():
+    from repro.optim import clip_by_global_norm
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_int8_error_feedback_unbiased():
+    from repro.optim.delegated import int8_dequantize, int8_quantize
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 256)), jnp.float32)
+    err = jnp.zeros_like(x)
+    acc_q = jnp.zeros_like(x)
+    for _ in range(64):
+        q, s = int8_quantize(x + err)
+        deq = int8_dequantize(q, s)
+        err = (x + err) - deq
+        acc_q = acc_q + deq
+    # time-averaged quantized signal converges to the true signal
+    np.testing.assert_allclose(np.asarray(acc_q / 64), np.asarray(x),
+                               atol=0.02)
