@@ -77,3 +77,13 @@ def run_in_subprocess(module: str, args: List[str], devices: int = 8,
 
 def artifact_path(name: str) -> str:
     return os.path.join(os.path.dirname(__file__), "artifacts", name)
+
+
+def trustee_mode_kwargs(mode: str, n_dedicated: int, n_dev: int) -> Dict:
+    """Store kwargs for a benchmark's --mode/--n-dedicated flags (empty in
+    shared mode; dedicated defaults to reserving half the mesh)."""
+    if mode != "dedicated":
+        return {}
+    from repro.core.routing import default_n_dedicated
+    return {"mode": "dedicated",
+            "n_dedicated": n_dedicated or default_n_dedicated(n_dev)}

@@ -42,6 +42,12 @@ def main(argv=None):
     ap.add_argument("--writes", default="5")
     ap.add_argument("--requests", type=int, default=8192)
     ap.add_argument("--iters", type=int, default=4)
+    ap.add_argument("--mode", default="shared",
+                    choices=["shared", "dedicated"],
+                    help="trustee runtime: every core serves (shared) or a "
+                         "reserved tail of cores serves the rest (dedicated)")
+    ap.add_argument("--n-dedicated", type=int, default=0,
+                    help="dedicated trustee cores (default: half the mesh)")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -50,10 +56,11 @@ def main(argv=None):
     from jax.sharding import Mesh
     from repro.core import DelegatedKVStore, FetchRMWStore, conflict_ranks
     from repro.core.routing import sample_keys
-    from benchmarks.common import Csv, V5E, bench, block
+    from benchmarks.common import Csv, V5E, bench, block, trustee_mode_kwargs
 
     n_dev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()).reshape(1, n_dev), ("data", "model"))
+    mode_kw = trustee_mode_kwargs(args.mode, args.n_dedicated, n_dev)
     R = args.requests
     W = 4                      # 4 x f32 = 16-byte values
     rng = np.random.default_rng(1)
@@ -65,7 +72,7 @@ def main(argv=None):
         tables = [int(args.tables.split(",")[0])]
         writes = [0, 5, 10, 25, 50, 100]
 
-    csv = Csv(["fig", "dist", "n_keys", "write_pct", "solution", "mops_wall",
+    csv = Csv(["fig", "dist", "mode", "n_keys", "write_pct", "solution", "mops_wall",
                "write_rounds", "mops_v5e_model"])
     csv.print_header()
 
@@ -79,7 +86,7 @@ def main(argv=None):
             vals = jnp.ones((R, W), jnp.float32)
 
             # --- delegated store (async GET + PUT fused in one round) ------
-            st = DelegatedKVStore(mesh, n_keys, W, capacity=0)
+            st = DelegatedKVStore(mesh, n_keys, W, capacity=0, **mode_kw)
             st.prefill(np.zeros((n_keys, W), np.float32))
 
             route = st.route(keys)
@@ -99,13 +106,13 @@ def main(argv=None):
             # channel bytes: GET req 4 + resp 16; PUT req 20 + resp 0
             b_op = (1 - wr / 100) * 20 + (wr / 100) * 20
             v5e = R / max(R * b_op / V5E["ici_bw"], 1e-9) / 1e6
-            csv.add(f"fig{args.fig}", args.dist, n_keys, wr, "trust",
+            csv.add(f"fig{args.fig}", args.dist, args.mode, n_keys, wr, "trust",
                     round(R / dt / 1e6, 3), 0, round(v5e, 1))
 
             # --- rw-lock analog --------------------------------------------
             wranks, wrounds = conflict_ranks(keys_np[is_write], n_dev)
             wrounds = min(wrounds, 32)
-            lock = FetchRMWStore(mesh, n_keys, W, rw_lock=True)
+            lock = FetchRMWStore(mesh, n_keys, W, rw_lock=True, **mode_kw)
             lock.prefill(np.zeros((n_keys, W), np.float32))
             if is_write.any():
                 wkeys, wvals_p, wr_ranks, _ = _pad_writes(
@@ -127,13 +134,13 @@ def main(argv=None):
                 (R * (1 - wr / 100) * 2 * W * 4
                  + R * (wr / 100) * 4 * W * 4 * max(1, wrounds))
                 / V5E["ici_bw"], 1e-9) / 1e6
-            csv.add(f"fig{args.fig}", args.dist, n_keys, wr, "rwlock",
+            csv.add(f"fig{args.fig}", args.dist, args.mode, n_keys, wr, "rwlock",
                     round(R / dt / 1e6, 3), wrounds, round(v5e_l, 1))
 
             # --- mutex analog (everything serializes) -----------------------
             ranks, rounds = conflict_ranks(keys_np, n_dev)
             rounds_c = min(rounds, 32)
-            mtx = FetchRMWStore(mesh, n_keys, W)
+            mtx = FetchRMWStore(mesh, n_keys, W, **mode_kw)
             mtx.prefill(np.zeros((n_keys, W), np.float32))
             rk = np.minimum(ranks, rounds_c - 1)
 
@@ -145,7 +152,7 @@ def main(argv=None):
             dt_scaled = dt * (rounds / rounds_c)
             v5e_m = R / max(R * 4 * W * 4 * rounds / V5E["ici_bw"],
                             1e-9) / 1e6
-            csv.add(f"fig{args.fig}", args.dist, n_keys, wr, "mutex",
+            csv.add(f"fig{args.fig}", args.dist, args.mode, n_keys, wr, "mutex",
                     round(R / dt_scaled / 1e6, 3), rounds, round(v5e_m, 1))
 
     if args.out:

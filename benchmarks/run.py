@@ -8,8 +8,13 @@ Prints ``name,us_per_call,derived`` CSV summary lines at the end.
 from __future__ import annotations
 
 import argparse
+import os
 import re
 import sys
+
+# allow "python benchmarks/run.py" from the repo root (script dir is on
+# sys.path then, but the benchmarks package itself is not)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import artifact_path, run_in_subprocess
 
@@ -74,8 +79,8 @@ def summarize(name: str, stdout: str):
             mops = float(row["mops_wall"])
             us = 1.0 / mops if mops > 0 else float("inf")
             key = "/".join(str(row.get(k, "")) for k in
-                           ("dist", "n_objects", "n_keys", "write_pct",
-                            "solution") if row.get(k))
+                           ("dist", "mode", "n_objects", "n_keys",
+                            "write_pct", "solution") if row.get(k))
             out.append((f"{name}:{key}", round(us, 3),
                         f"mops={row['mops_wall']}"))
         elif "mean_us_per_req" in row:
@@ -90,10 +95,21 @@ def summarize(name: str, stdout: str):
     return out
 
 
+# benchmarks that understand the shared/dedicated trustee-mode switch
+MODE_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--mode", default="shared",
+                    choices=["shared", "dedicated"],
+                    help="trustee runtime for the mode-aware benchmarks "
+                         "(fetch-add, kv-store); dedicated reserves trustee "
+                         "cores and restricts the run to those benchmarks")
+    ap.add_argument("--n-dedicated", type=int, default=0,
+                    help="dedicated trustee cores (default: half the mesh)")
     args = ap.parse_args()
     table = FULL if args.full else REDUCED
 
@@ -101,6 +117,12 @@ def main() -> None:
     for name, (module, margs) in table.items():
         if args.only and args.only not in name:
             continue
+        if args.mode == "dedicated" and module not in MODE_AWARE:
+            continue
+        if module in MODE_AWARE and args.mode != "shared":
+            margs = margs + ["--mode", args.mode]
+            if args.n_dedicated:
+                margs = margs + ["--n-dedicated", str(args.n_dedicated)]
         print(f"=== {name} ({module}) ===", flush=True)
         try:
             out = run_in_subprocess(module, margs, devices=8, timeout=2400)

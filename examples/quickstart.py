@@ -23,7 +23,10 @@ def main():
                 {"value": jnp.broadcast_to(state["ct"][0], m.shape)})
 
     group = TrusteeGroup(mesh, ("data", "model"))
-    trust = group.entrust({"ct": jnp.array([17.0])},
+    # one counter slot per trustee (state leading dim must divide over the
+    # group); trustee 0 owns the counter — every request routes to it
+    ct0 = jnp.zeros((group.n_trustees,)).at[0].set(17.0)
+    trust = group.entrust({"ct": ct0},
                           ops=[DelegatedOp("inc", inc)],
                           resp_like={"value": jnp.zeros((1,))}, capacity=8)
     trust.apply("inc", jnp.zeros((2,), jnp.int32), {"delta": jnp.ones((2,))})
@@ -49,6 +52,16 @@ def main():
     old = store.add(jnp.array([3, 3, 3]), jnp.ones((3, 4)))
     print("three racing fetch-and-adds on key 3 returned (FIFO):",
           np.asarray(old[:, 0]))
+
+    # --- dedicated mode: reserved trustee cores (paper's second runtime) ----
+    # needs >= 2 devices: the trailing cores hold the table and serve the
+    # rest; the client API is unchanged
+    if mesh.size >= 2:
+        ded = DelegatedKVStore(mesh, n_keys=1024, value_width=4,
+                               mode="dedicated", n_dedicated=mesh.size // 2)
+        ded.put(jnp.arange(8), jnp.tile(jnp.arange(8.0)[:, None], (1, 4)))
+        print("dedicated-mode GET [3, 5] ->",
+              np.asarray(ded.get(jnp.array([3, 5]))[:, 0]))
 
 
 if __name__ == "__main__":

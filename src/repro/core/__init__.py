@@ -12,8 +12,11 @@ from .channel import (ChannelConfig, DelegatedOp, DelegationFuture, Packed,
                       serve_optable, transmit, unpack)
 from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
 from .kvstore import DelegatedKVStore, make_kv_ops
-from .lockstore import AtomicAddStore, FetchRMWStore, conflict_ranks
-from .meshctx import constrain, current_mesh, use_mesh, set_mesh
+from .lockstore import (AtomicAddStore, FetchRMWStore, SequentialKVReference,
+                        conflict_ranks)
+from .meshctx import (constrain, current_mesh, delegation_mode,
+                      set_delegation_mode, set_mesh, use_mesh)
+from .routing import partition_clients_trustees, trustee_device_slot
 from .nested import launch_serve
 
 __all__ = [
@@ -21,6 +24,8 @@ __all__ = [
     "delegate", "delegate_async", "pack", "respond", "serve_optable",
     "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
     "local_trustees", "DelegatedKVStore", "make_kv_ops", "AtomicAddStore",
-    "FetchRMWStore", "conflict_ranks", "constrain", "current_mesh",
-    "use_mesh", "set_mesh", "launch_serve",
+    "FetchRMWStore", "SequentialKVReference", "conflict_ranks", "constrain",
+    "current_mesh", "delegation_mode", "set_delegation_mode", "use_mesh",
+    "set_mesh", "partition_clients_trustees", "trustee_device_slot",
+    "launch_serve",
 ]

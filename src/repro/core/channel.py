@@ -41,11 +41,26 @@ class ChannelConfig:
     overflow_capacity: int = 0     # rows per pair in the overflow round
     local_shortcut: bool = False   # apply self-addressed requests inline (§5.2.1)
     interpret: bool = False        # route pack through Pallas interpret kernel
+    mode: str = "shared"           # "shared" | "dedicated" (paper's two runtimes)
+    n_clients: int = 0             # dedicated only: client devices on the axis
 
     def total_capacity(self) -> int:
         if self.overflow == "second_round":
             return self.capacity + self.overflow_capacity
         return self.capacity
+
+    def n_slots(self, n_trustees: int) -> int:
+        """Destination slots per device in the all_to_all block layout.
+
+        Shared mode exchanges one block per trustee.  Dedicated mode keeps the
+        collective over the FULL axis (clients + trustees): trustee t lives at
+        device slot ``n_clients + t``, client slots carry zero-count blocks, so
+        the symmetric all_to_all degenerates into the asymmetric
+        client->trustee send (and its transpose routes responses back by
+        client id)."""
+        if self.mode == "dedicated":
+            return n_trustees + self.n_clients
+        return n_trustees
 
 
 class Packed(NamedTuple):
@@ -228,6 +243,32 @@ def _my_trustee_id(axis) -> jax.Array:
         return jnp.int32(0)
 
 
+def _flat_axis_index(axis) -> jax.Array:
+    """Flattened device index along ``axis`` (row-major over tuple axes),
+    matching how a leading dim sharded with ``P(axis)`` is laid out."""
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    try:
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * lax.psum(1, a) + lax.axis_index(a)
+        return idx
+    except NameError:
+        return jnp.int32(0)
+
+
+def _to_device_slots(dst: jax.Array, n_trustees: int,
+                     cfg: ChannelConfig) -> jax.Array:
+    """Dedicated mode: translate trustee ids [0, T) to device slots on the
+    axis and mask any request originating on a trustee shard (requests may
+    only come from client shards — the paper's reserved-core contract)."""
+    if cfg.mode != "dedicated":
+        return dst
+    assert cfg.n_clients > 0, "dedicated mode needs n_clients > 0"
+    from .routing import trustee_device_slot
+    is_client = _flat_axis_index(cfg.axis) < cfg.n_clients
+    return trustee_device_slot(jnp.where(is_client, dst, -1), cfg.n_clients)
+
+
 def _split_local(dst: jax.Array, payload: Pytree, axis):
     """Local-trustee shortcut (§5.2.1): requests addressed to self skip the
     channel; they are appended to the trustee's serve batch directly, so one
@@ -255,19 +296,27 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
 
     Must run inside shard_map over ``cfg.axis``.  Returns
     (new_state_shard, responses_in_request_order, info).
+
+    In dedicated mode (``cfg.mode == "dedicated"``) ``dst`` still holds
+    trustee ids in [0, n_trustees); they are translated to device slots past
+    the ``cfg.n_clients`` client shards, requests originating on trustee
+    shards are masked off, and the local shortcut is disabled (a client is
+    never its own trustee).
     """
     r = dst.shape[0]
+    n_slots = cfg.n_slots(n_trustees)
+    dst = _to_device_slots(dst, n_trustees, cfg)
     local_recv = local_mask = None
-    if cfg.local_shortcut:
+    if cfg.local_shortcut and cfg.mode != "dedicated":
         dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis)
-        if n_trustees == 1:
+        if n_slots == 1:
             new_state, local_resp = serve_fn(state, local_recv)
             info = ChannelInfo(jnp.zeros((1,), jnp.int32),
                                jnp.zeros((r,), bool), 0)
             return new_state, local_resp, info
 
-    packed, group_sizes = pack(dst, payload, n_trustees, cfg)
-    received = transmit(packed, n_trustees, cfg)
+    packed, group_sizes = pack(dst, payload, n_slots, cfg)
+    received = transmit(packed, n_slots, cfg)
     n_chan = received.valid.shape[0]
     if local_recv is not None:
         received = _concat_received(received, local_recv)
@@ -275,12 +324,12 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
-    resp_at_client = respond(resp_rows, n_trustees, cfg)
+    resp_at_client = respond(resp_rows, n_slots, cfg)
     responses = unpack(resp_at_client, packed.request_slot)
     if local_recv is not None:
         responses = _merge_local(responses, local_resp, local_mask)
     info = ChannelInfo(group_sizes, packed.dropped,
-                       n_trustees * cfg.total_capacity())
+                       n_slots * cfg.total_capacity())
     return new_state, responses, info
 
 
@@ -312,18 +361,20 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
                    ) -> Tuple[Pytree, DelegationFuture, ChannelInfo]:
     """apply_then(): returns immediately after the serve phase."""
     r = dst.shape[0]
+    n_slots = cfg.n_slots(n_trustees)
+    dst = _to_device_slots(dst, n_trustees, cfg)
     local_recv = local_mask = local_resp = None
-    if cfg.local_shortcut:
+    if cfg.local_shortcut and cfg.mode != "dedicated":
         dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis)
-        if n_trustees == 1:
+        if n_slots == 1:
             new_state, local_resp = serve_fn(state, local_recv)
             fut = DelegationFuture(None, None, 1, cfg, local_resp, local_mask)
             info = ChannelInfo(jnp.zeros((1,), jnp.int32),
                                jnp.zeros((r,), bool), 0)
             return new_state, fut, info
 
-    packed, group_sizes = pack(dst, payload, n_trustees, cfg)
-    received = transmit(packed, n_trustees, cfg)
+    packed, group_sizes = pack(dst, payload, n_slots, cfg)
+    received = transmit(packed, n_slots, cfg)
     n_chan = received.valid.shape[0]
     if local_recv is not None:
         received = _concat_received(received, local_recv)
@@ -331,10 +382,10 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
-    fut = DelegationFuture(resp_rows, packed.request_slot, n_trustees, cfg,
+    fut = DelegationFuture(resp_rows, packed.request_slot, n_slots, cfg,
                            local_resp, local_mask)
     info = ChannelInfo(group_sizes, packed.dropped,
-                       n_trustees * cfg.total_capacity())
+                       n_slots * cfg.total_capacity())
     return new_state, fut, info
 
 

@@ -107,15 +107,24 @@ def make_kv_ops(n_trustees: int, value_width: int,
 
 
 class DelegatedKVStore:
-    """High-level store facade used by the KV-store / memcached benchmarks."""
+    """High-level store facade used by the KV-store / memcached benchmarks.
+
+    ``mode="shared"`` (default) entrusts the table to every device; in
+    ``mode="dedicated"`` the last ``n_dedicated`` device slots of the mesh
+    hold the table and serve the remaining client devices (the paper's
+    reserved trustee cores).  The public GET/PUT/ADD/CAS API is identical in
+    both modes."""
 
     def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
                  axis: Any = None, dtype=jnp.float32, capacity: int = 0,
                  overflow: str = "second_round", overflow_capacity: int = 0,
-                 local_shortcut: bool = True):
+                 local_shortcut: bool = True, mode: str = "shared",
+                 n_dedicated: int = 0):
         axis = axis if axis is not None else tuple(mesh.axis_names)
-        group = TrusteeGroup(mesh, axis)
+        group = TrusteeGroup(mesh, axis, mode=mode, n_dedicated=n_dedicated)
         t = group.n_trustees
+        self.group = group
+        self.mode = mode
         self.n_keys = n_keys
         self.n_keys_padded = ((n_keys + t - 1) // t) * t
         self.value_width = value_width
@@ -185,6 +194,13 @@ class DelegatedKVStore:
         owner_major = np.concatenate(
             [padded[np.arange(i, self.n_keys_padded, t)] for i in range(t)], 0)
         state = self.trust.state()
+        pad_rows = state["table"].shape[0] - self.n_keys_padded
+        if pad_rows:
+            # dedicated mode: client shards hold no state — zero region ahead
+            # of the trustee-owned rows (the layout entrust installed)
+            owner_major = np.concatenate(
+                [np.zeros((pad_rows, self.value_width), owner_major.dtype),
+                 owner_major], 0)
         new_table = jax.device_put(owner_major.astype(padded.dtype),
                                    state["table"].sharding)
         self.trust.set_state({**state, "table": new_table})
@@ -192,10 +208,17 @@ class DelegatedKVStore:
     def dump(self) -> np.ndarray:
         """Gather table to host in key order (tests only)."""
         t = self.t
-        owner_major = np.asarray(self.trust.state()["table"])
+        owner_major = np.asarray(self.trust.trustee_state()["table"])
         n_local = self.n_keys_padded // t
         out = np.zeros_like(owner_major)
         for i in range(t):
             out[np.arange(i, self.n_keys_padded, t)] = \
                 owner_major[i * n_local:(i + 1) * n_local]
         return out[: self.n_keys]
+
+    def client_region(self) -> np.ndarray:
+        """Dedicated mode: the physical table rows living on client shards
+        (must stay zero — state lives only on trustee shards).  Tests only."""
+        full = np.asarray(self.trust.state()["table"])
+        n_trustee_rows = self.trust.trustee_state()["table"].shape[0]
+        return full[: full.shape[0] - n_trustee_rows]

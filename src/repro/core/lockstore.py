@@ -54,6 +54,77 @@ def conflict_ranks(keys: np.ndarray, n_clients: int) -> Tuple[np.ndarray, int]:
     return ranks.astype(np.int32), int(ranks.max(initial=0)) + 1
 
 
+class SequentialKVReference:
+    """Host-side sequential oracle for the delegated KV semantics.
+
+    Applies one *channel round* at a time.  Within a round the channel serves
+    rows in (client, slot) order, which — because the fused request batch is
+    sharded contiguously over clients — equals the original batch order, so
+    GET/PUT/ADD reduce to plain sequential application row by row.  CAS keeps
+    the round-batch semantics the channel has: every comparison reads the
+    round-START table (all CAS in one round race against the same snapshot),
+    then the successful rows commit last-writer-wins in request order.
+
+    Rows with ``key < 0`` are inactive and produce zero responses, mirroring
+    ``dst = -1`` masking on the channel.  Valid only when the channel round
+    incurs no second_round overflow: overflow rows are replayed after every
+    client's primary block, which permutes the inter-client conflict order
+    (see DESIGN.md §4)."""
+
+    def __init__(self, n_keys: int, value_width: int = 4, dtype=np.float32):
+        self.table = np.zeros((n_keys, value_width), dtype)
+        self.value_width = value_width
+        self.dtype = dtype
+
+    def prefill(self, values: np.ndarray) -> None:
+        self.table[: values.shape[0]] = values
+
+    def dump(self) -> np.ndarray:
+        return self.table.copy()
+
+    def _resp(self, n):
+        return np.zeros((n, self.value_width), self.dtype)
+
+    def get(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        out = self._resp(len(keys))
+        act = keys >= 0
+        out[act] = self.table[keys[act]]
+        return out
+
+    def put(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        for i in range(len(keys)):          # sequential == last-writer-wins
+            if keys[i] >= 0:
+                self.table[keys[i]] = values[i]
+        return self._resp(len(keys))
+
+    def add(self, keys: np.ndarray, deltas: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        out = self._resp(len(keys))
+        for i in range(len(keys)):
+            if keys[i] >= 0:
+                out[i] = self.table[keys[i]]
+                self.table[keys[i]] = self.table[keys[i]] + deltas[i]
+        return out
+
+    def cas(self, keys: np.ndarray, expect: np.ndarray, values: np.ndarray
+            ) -> Tuple[np.ndarray, np.ndarray]:
+        keys = np.asarray(keys)
+        snapshot = self.table.copy()        # round-start view for every row
+        flags = np.zeros((len(keys),), np.int32)
+        old = self._resp(len(keys))
+        for i in range(len(keys)):
+            if keys[i] < 0:
+                continue
+            old[i] = snapshot[keys[i]]
+            if np.array_equal(snapshot[keys[i]],
+                              np.asarray(expect[i], self.table.dtype)):
+                flags[i] = 1
+                self.table[keys[i]] = values[i]
+        return flags, old
+
+
 class FetchRMWStore:
     """General lock analog: fetch rows, mutate client-side, write back.
 

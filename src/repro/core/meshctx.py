@@ -54,6 +54,19 @@ def set_context(mesh: Mesh, axes="default") -> None:
     set_batch_axes(axes)
 
 
+def set_delegation_mode(mode: str = "shared", n_dedicated: int = 0) -> None:
+    """Session-wide default trustee mode (the paper's shared vs dedicated
+    runtimes).  Consumed by ``trust.local_trustees``; launch drivers set it
+    from their --delegation-mode CLI flag."""
+    if mode not in ("shared", "dedicated"):
+        raise ValueError(f"unknown delegation mode {mode!r}")
+    _state.delegation_mode = (mode, n_dedicated)
+
+
+def delegation_mode() -> Tuple[str, int]:
+    return getattr(_state, "delegation_mode", ("shared", 0))
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh):
     prev = getattr(_state, "mesh", None)

@@ -37,6 +37,38 @@ def hash_router(keys: jax.Array, n_trustees: int) -> jax.Array:
     return (x % jnp.uint32(n_trustees)).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Dedicated-mode partition (paper's reserved trustee cores)
+# ---------------------------------------------------------------------------
+
+def default_n_dedicated(axis_size: int) -> int:
+    """Default reserved-trustee count: half the mesh (the paper's balanced
+    dedicated split), at least one core."""
+    return max(1, axis_size // 2)
+
+
+def partition_clients_trustees(axis_size: int, n_dedicated: int
+                               ) -> tuple[np.ndarray, np.ndarray]:
+    """Split a flattened delegation axis into (client_slots, trustee_slots).
+
+    The LAST ``n_dedicated`` device slots are the reserved trustee cores; the
+    leading ``axis_size - n_dedicated`` slots are clients.  Slot order matches
+    the row-major flattening of the mesh axes, i.e. how a leading dim sharded
+    with ``P(axes)`` is laid out across devices."""
+    if not 0 < n_dedicated < axis_size:
+        raise ValueError(
+            f"n_dedicated must be in (0, {axis_size}), got {n_dedicated}")
+    n_clients = axis_size - n_dedicated
+    return (np.arange(n_clients, dtype=np.int32),
+            np.arange(n_clients, axis_size, dtype=np.int32))
+
+
+def trustee_device_slot(dst: jax.Array, n_clients: int) -> jax.Array:
+    """Dedicated mode: trustee id [0, T) -> device slot on the delegation
+    axis (trustees occupy the slots past the clients); -1 stays -1."""
+    return jnp.where(dst >= 0, dst + n_clients, -1).astype(jnp.int32)
+
+
 def local_index(keys: jax.Array, n_trustees: int, router: str = "mod",
                 n_keys_total: int = 0) -> jax.Array:
     """Index of a key within its owner's local shard, matching the router."""

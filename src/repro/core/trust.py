@@ -6,6 +6,8 @@ one or more mesh axes.  The state is then *only* reachable through the
 channel and returns responses in request order:
 
     group = TrusteeGroup(mesh, axis=("data", "model"))     # every chip serves
+    ded   = TrusteeGroup(mesh, axis=("data", "model"),     # reserved trustee
+                         mode="dedicated", n_dedicated=2)  # cores serve rest
     trust = group.entrust(table, ops=[GET, PUT], resp_like=...)
     vals  = trust.apply("get", keys, {})                   # sync apply()
     fut   = trust.submit("put", keys, {"value": v})        # apply_then()
@@ -44,25 +46,61 @@ def _axes_tuple(axis) -> Tuple[str, ...]:
 class TrusteeGroup:
     """A set of trustees: the devices along ``axis`` of ``mesh``.
 
-    With ``axis`` covering every mesh axis, every chip is both client and
-    trustee (the paper's *shared* mode — its default runtime).  With a subset
-    (e.g. just ``"model"``), state is replicated over the remaining axes and
-    must only be mutated in ways that keep replicas coherent (read-only serve,
-    or disjoint per-replica state such as batch-sharded KV pages).
+    Two runtime modes, matching the paper's evaluation:
+
+    * ``mode="shared"`` (default): every device along ``axis`` is both client
+      and trustee.  With ``axis`` covering every mesh axis, every chip serves;
+      with a subset (e.g. just ``"model"``), state is replicated over the
+      remaining axes and must only be mutated in ways that keep replicas
+      coherent (read-only serve, or disjoint per-replica state such as
+      batch-sharded KV pages).
+    * ``mode="dedicated"``: the LAST ``n_dedicated`` device slots along the
+      flattened ``axis`` are reserved trustee cores serving the remaining
+      ``n_clients`` client cores.  Entrusted state lives only on trustee
+      shards; requests originate only on client shards.  ``axis`` must cover
+      the whole mesh (the reserved-core split is a partition of all chips).
     """
     mesh: Mesh
     axis: Any = "model"
+    mode: str = "shared"
+    n_dedicated: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("shared", "dedicated"):
+            raise ValueError(f"unknown trustee mode {self.mode!r}")
+        if self.mode == "dedicated":
+            if self.axes != tuple(self.mesh.axis_names):
+                raise ValueError(
+                    "dedicated mode partitions the whole mesh: axis must be "
+                    f"{tuple(self.mesh.axis_names)}, got {self.axes}")
+            if not (0 < self.n_dedicated < self.axis_size):
+                raise ValueError(
+                    f"n_dedicated must be in (0, {self.axis_size}), "
+                    f"got {self.n_dedicated}")
 
     @property
     def axes(self) -> Tuple[str, ...]:
         return _axes_tuple(self.axis)
 
     @property
-    def n_trustees(self) -> int:
+    def axis_size(self) -> int:
         n = 1
         for a in self.axes:
             n *= int(self.mesh.shape[a])
         return n
+
+    @property
+    def n_trustees(self) -> int:
+        if self.mode == "dedicated":
+            return self.n_dedicated
+        return self.axis_size
+
+    @property
+    def n_clients(self) -> int:
+        """Devices that originate requests (== axis_size in shared mode)."""
+        if self.mode == "dedicated":
+            return self.axis_size - self.n_dedicated
+        return self.axis_size
 
     def entrust(self, state: Pytree, ops: Sequence[DelegatedOp],
                 resp_like: Pytree, state_specs: Optional[Pytree] = None,
@@ -72,17 +110,36 @@ class TrusteeGroup:
         """Move ``state`` under trustee ownership and return the Trust handle.
 
         state leaves must have a leading dim divisible by n_trustees (the
-        owner shard dim) unless ``state_specs`` overrides the layout.
+        owner shard dim) unless ``state_specs`` overrides the layout.  In
+        dedicated mode the default layout pads each leaf with a zero client
+        region so the physical array shards over the whole axis while the
+        logical state occupies only the trustee shards; ``Trust.trustee_state``
+        strips the padding back off.
         """
         if state_specs is None:
             state_specs = jax.tree.map(lambda _: P(self.axes), state)
+        if self.mode == "dedicated":
+            def pad_client_region(x):
+                x = jnp.asarray(x)
+                assert x.shape[0] % self.n_trustees == 0, \
+                    f"leading dim {x.shape[0]} not divisible by " \
+                    f"{self.n_trustees} trustees"
+                rows_per = x.shape[0] // self.n_trustees
+                z = jnp.zeros((self.n_clients * rows_per,) + x.shape[1:],
+                              x.dtype)
+                return jnp.concatenate([z, x], 0)
+            state = jax.tree.map(pad_client_region, state)
+            local_shortcut = False   # a client is never its own trustee
         sharded = jax.tree.map(
             lambda x, s: jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, s)),
             state, state_specs)
         cfg = ChannelConfig(axis=self.axis if len(self.axes) > 1 else self.axes[0],
                             capacity=max(capacity, 1), overflow=overflow,
                             overflow_capacity=overflow_capacity,
-                            local_shortcut=local_shortcut)
+                            local_shortcut=local_shortcut,
+                            mode=self.mode,
+                            n_clients=self.n_clients if self.mode == "dedicated"
+                            else 0)
         return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg)
 
 
@@ -133,6 +190,17 @@ class Trust:
     def set_state(self, state: Pytree) -> None:
         self._state = state
 
+    def trustee_state(self) -> Pytree:
+        """Logical state: strips the zero client region in dedicated mode."""
+        if self.group.mode != "dedicated":
+            return self._state
+        t, c = self.group.n_trustees, self.group.n_clients
+
+        def strip(x):
+            rows_per = x.shape[0] // (t + c)
+            return x[c * rows_per:]
+        return jax.tree.map(strip, self._state)
+
     # -- core API ------------------------------------------------------------
     def apply(self, op: str, dst: jax.Array, payload: Pytree,
               capacity: Optional[int] = None) -> Pytree:
@@ -165,7 +233,11 @@ class Trust:
     def _auto_capacity(self, r_total: int) -> int:
         # mean load per (client, trustee) pair with 2x headroom, min 4 rows —
         # the "primary block sized for the common case" rule (§5.3.1).
-        per_client = max(1, r_total // max(1, self.group.mesh.size))
+        # Dedicated mode concentrates all requests on the client shards, so
+        # the per-client share divides by n_clients, not the whole mesh.
+        n_origins = (self.group.n_clients if self.group.mode == "dedicated"
+                     else max(1, self.group.mesh.size))
+        per_client = max(1, r_total // n_origins)
         mean = max(1, per_client // self.n_trustees)
         return max(4, 2 * mean)
 
@@ -205,9 +277,15 @@ class Trust:
         resp_like = self.resp_like
         op_ids = [b[0] for b in batches]
         serve = ch.serve_optable(ops, active_ids=tuple(sorted(set(op_ids))))
-        # every device is a client: request batches are sharded over the whole
-        # mesh (the paper's shared mode — each core originates its own slice)
+        # Request batches are sharded over the whole mesh.  Shared mode: every
+        # device is a client and originates its own slice.  Dedicated mode:
+        # the fused batch is repacked so all real rows land on the leading
+        # n_clients shards and trustee shards see only dst=-1 padding —
+        # requests originate on client shards only.
         req_spec = P(tuple(mesh.axis_names))
+        dedicated = self.group.mode == "dedicated"
+        n_cli = self.group.n_clients
+        n_dev = self.group.axis_size
 
         def fused(state, dsts, payloads):
             # concat batches, tag each row with its op id
@@ -229,6 +307,22 @@ class Trust:
                                                like.dtype))
                 rows[name] = jnp.concatenate(parts, 0)
 
+            r_total = dst.shape[0]
+            # pad the fused batch so each ORIGIN shard gets an equal slice:
+            # dedicated mode packs all R rows onto the leading n_clients
+            # shards (trustee shards hold only inactive padding); shared mode
+            # pads ragged batches up to a multiple of the mesh size
+            n_origins = n_cli if dedicated else max(1, mesh.size)
+            r_dev = -(-r_total // n_origins)
+            pad = (n_dev if dedicated else mesh.size) * r_dev - r_total
+            if pad:
+                dst = jnp.concatenate(
+                    [dst, jnp.full((pad,), -1, dst.dtype)], 0)
+                rows = jax.tree.map(
+                    lambda l: jnp.concatenate(
+                        [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
+                    rows)
+
             def shard_fn(state_shard, dst_l, rows_l):
                 new_state, resp, _ = ch.delegate(
                     state_shard, dst_l, rows_l, serve, self.n_trustees, cfg)
@@ -240,7 +334,10 @@ class Trust:
                          jax.tree.map(lambda _: req_spec, resp_like))
             f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
-            return f(state, dst, rows)
+            new_state, resp = f(state, dst, rows)
+            if pad:
+                resp = jax.tree.map(lambda l: l[:r_total], resp)
+            return new_state, resp
 
         return jax.jit(fused)
 
@@ -249,6 +346,29 @@ class Trust:
 # Convenience: entrust with the current mesh context
 # ---------------------------------------------------------------------------
 
-def local_trustees(axis="model") -> TrusteeGroup:
+def local_trustees(axis=None, mode: Optional[str] = None,
+                   n_dedicated: Optional[int] = None) -> TrusteeGroup:
+    """TrusteeGroup over the ambient mesh.
+
+    With no arguments, ``mode``/``n_dedicated`` default to the session-wide
+    delegation mode (meshctx.set_delegation_mode, set by launch drivers from
+    their --delegation-mode flag).  An EXPLICIT ``axis`` requests the shared
+    sub-axis pattern (state replicated over the remaining axes) and is
+    incompatible with dedicated mode, which always partitions the whole
+    mesh — asking for both raises instead of silently ignoring the axis."""
     from . import meshctx
-    return TrusteeGroup(meshctx.current_mesh(), axis)
+    mesh = meshctx.current_mesh()
+    d_mode, d_n = meshctx.delegation_mode()
+    if mode is None:
+        # the session default applies only to whole-mesh groups; an explicit
+        # sub-axis group keeps shared semantics
+        mode = d_mode if axis is None else "shared"
+    n_dedicated = d_n if n_dedicated is None else n_dedicated
+    if mode == "dedicated":
+        if axis is not None and _axes_tuple(axis) != tuple(mesh.axis_names):
+            raise ValueError(
+                f"dedicated mode partitions the whole mesh "
+                f"{tuple(mesh.axis_names)}; it cannot honor axis={axis!r}")
+        return TrusteeGroup(mesh, tuple(mesh.axis_names), mode="dedicated",
+                            n_dedicated=n_dedicated)
+    return TrusteeGroup(mesh, "model" if axis is None else axis)

@@ -24,6 +24,13 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--delegation-mode", default="shared",
+                    choices=["shared", "dedicated"],
+                    help="trustee runtime for store-level delegation: every "
+                         "chip serves (shared) or the trailing devices are "
+                         "reserved trustee cores (dedicated)")
+    ap.add_argument("--n-dedicated", type=int, default=0,
+                    help="dedicated trustee cores (default: half the mesh)")
     args = ap.parse_args(argv)
 
     import jax
@@ -31,6 +38,8 @@ def main(argv=None):
     import numpy as np
     from ..configs.base import MeshConfig, RunConfig, ShapeConfig
     from ..configs.registry import get_arch, get_smoke_arch
+    from ..core import meshctx
+    from ..core.routing import default_n_dedicated, partition_clients_trustees
     from ..models import model as M
     from .mesh import make_local_mesh
     from .steps import build_cell
@@ -44,6 +53,22 @@ def main(argv=None):
     mesh = make_local_mesh(args.mesh_data, args.mesh_model)
     mcfg = MeshConfig((args.mesh_data, args.mesh_model), ("data", "model"))
     run = RunConfig(model=cfg, shape=shape, mesh=mcfg, remat="none")
+    if args.delegation_mode == "dedicated":
+        if mesh.size < 2:
+            ap.error("--delegation-mode dedicated needs a mesh with >= 2 "
+                     "devices (reserve trustee cores with --mesh-data / "
+                     "--mesh-model)")
+        n_ded = args.n_dedicated or default_n_dedicated(mesh.size)
+        clients, trustees = partition_clients_trustees(mesh.size, n_ded)
+        meshctx.set_delegation_mode("dedicated", n_ded)
+        print(f"[serve] delegation mode: dedicated — client devices "
+              f"{clients.tolist()}, trustee devices {trustees.tolist()} "
+              f"(store-level delegation — the session ledger below and any "
+              f"local_trustees() group — runs dedicated; the model-internal "
+              f"MoE/paged-KV channel stays shared because the model axis is "
+              f"fully sharded)", flush=True)
+    else:
+        meshctx.set_delegation_mode("shared", 0)
     plan = build_cell(cfg, shape, mesh, run)
 
     key = jax.random.PRNGKey(0)
@@ -67,6 +92,23 @@ def main(argv=None):
                                   size=(args.prompt_len, args.batch))
         tok_of = lambda t, prev: jnp.asarray(prompt_ids[t], jnp.int32)
 
+    # session ledger: per-request generated-token counters entrusted at the
+    # STORE level (memcached-shaped bookkeeping, paper §7).  This is the
+    # consumer of --delegation-mode: the ledger lives only on the reserved
+    # trustee cores and clients delegate their increments.  Opt-in via the
+    # flag — its per-token channel round rides inside the timed loop, so
+    # default (shared) runs keep the exact pre-ledger step timings.
+    ledger = None
+    if args.delegation_mode == "dedicated":
+        from ..core import DelegatedKVStore
+        led_mode, led_n = meshctx.delegation_mode()
+        ledger = DelegatedKVStore(mesh, n_keys=args.batch, value_width=1,
+                                  capacity=max(4, args.batch),
+                                  mode=led_mode, n_dedicated=led_n)
+        ledger.prefill(np.zeros((args.batch, 1), np.float32))
+        led_keys = jnp.arange(args.batch, dtype=jnp.int32)
+        led_ones = jnp.ones((args.batch, 1), jnp.float32)
+
     t0 = time.monotonic()
     prev = None
     outputs = []
@@ -76,7 +118,13 @@ def main(argv=None):
         prev, cache = plan.step_fn(params, cache, tok, pos)
         if t >= args.prompt_len - 1:
             outputs.append(np.asarray(prev))
+            if ledger is not None:
+                ledger.add(led_keys, led_ones)
     dt = time.monotonic() - t0
+    if ledger is not None:
+        counts = ledger.dump()[:, 0].astype(int)
+        print(f"[serve] ledger ({args.delegation_mode}): generated tokens "
+              f"per request = {counts.tolist()}", flush=True)
     total_steps = args.prompt_len + args.gen - 1
     print(f"[serve] {total_steps} steps in {dt:.2f}s "
           f"({1e3*dt/total_steps:.1f} ms/step, "

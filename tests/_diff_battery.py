@@ -1,0 +1,221 @@
+"""Differential test battery — executed as a SUBPROCESS with 8 simulated
+host devices (the main pytest process keeps a single device per the dry-run
+protocol).  Replays one random GET/PUT/ADD/CAS trace through the delegated
+KV store in shared mode (with and without the local-trustee shortcut) and in
+dedicated mode, comparing every response batch and the final table
+bit-for-bit against the sequential host reference.
+
+Prints one JSON dict of named check results; tests/test_differential.py
+asserts on them.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+N_KEYS = 37          # prime: exercises owner-shard padding
+VW = 2               # value width
+R = 64               # rows per channel round
+N_ROUNDS = 16        # 16 * 64 = 1024 ops >= the 1k-op acceptance floor
+
+
+def gen_trace(seed):
+    """Random op trace with integer-valued float payloads (bit-exact adds).
+
+    CAS expect values hit the live table value ~half the time so both the
+    success and failure paths are exercised."""
+    from repro.core import SequentialKVReference
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    ref = SequentialKVReference(N_KEYS, VW)
+    ref.prefill(init)
+    rounds = []
+    for _ in range(N_ROUNDS):
+        op = ["get", "put", "add", "cas"][int(rng.integers(0, 4))]
+        keys = rng.integers(0, N_KEYS, R).astype(np.int32)
+        vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+        expect = None
+        if op == "cas":
+            live = ref.table[keys].copy()
+            rand = rng.integers(0, 8, (R, VW)).astype(np.float32)
+            expect = np.where(rng.random(R)[:, None] < 0.5, live, rand)
+        rounds.append((op, keys, vals, expect))
+    return init, rounds
+
+
+def ref_responses(init, rounds, order_of=None):
+    """Replay the trace on the sequential reference.  ``order_of(keys)``
+    optionally permutes each round into the store's serve order (used to
+    model the local-shortcut append); responses are unpermuted back."""
+    from repro.core import SequentialKVReference
+    ref = SequentialKVReference(N_KEYS, VW)
+    ref.prefill(init)
+    outs = []
+    for op, keys, vals, expect in rounds:
+        perm = (order_of(keys) if order_of is not None
+                else np.arange(len(keys)))
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(len(perm))
+        k, v = keys[perm], vals[perm]
+        if op == "get":
+            outs.append(("value", ref.get(k)[inv]))
+        elif op == "put":
+            ref.put(k, v)
+            outs.append(("none", None))
+        elif op == "add":
+            outs.append(("value", ref.add(k, v)[inv]))
+        else:
+            flags, old = ref.cas(k, expect[perm], v)
+            outs.append(("cas", (flags[inv], old[inv])))
+    return outs, ref.dump()
+
+
+def store_responses(store, rounds):
+    outs = []
+    for op, keys, vals, expect in rounds:
+        k = jnp.asarray(keys)
+        if op == "get":
+            outs.append(("value", np.asarray(store.get(k))))
+        elif op == "put":
+            store.put(k, jnp.asarray(vals))
+            outs.append(("none", None))
+        elif op == "add":
+            outs.append(("value", np.asarray(store.add(k, jnp.asarray(vals)))))
+        else:
+            flags, old = store.cas(k, jnp.asarray(expect), jnp.asarray(vals))
+            outs.append(("cas", (np.asarray(flags), np.asarray(old))))
+    return outs, store.dump()
+
+
+def assert_identical(got, want, what):
+    kind_g, g = got
+    kind_w, w = want
+    assert kind_g == kind_w
+    if kind_g == "none":
+        return
+    if kind_g == "cas":
+        assert np.array_equal(g[0], w[0]), f"{what}: cas flags differ"
+        assert np.array_equal(g[1], w[1]), f"{what}: cas old values differ"
+    else:
+        assert np.array_equal(g, w), f"{what}: responses differ"
+
+
+def run_differential(mesh, trace, mode_kw, order_of=None, what=""):
+    from repro.core import DelegatedKVStore
+    init, rounds = trace
+    want, want_table = ref_responses(init, rounds, order_of=order_of)
+    # capacity == R: a full round always fits the primary block, so the
+    # channel's serve order is exactly the reference's (no overflow replay —
+    # second_round permutes inter-client conflict order, see DESIGN.md §4)
+    st = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R, **mode_kw)
+    st.prefill(init)
+    got, got_table = store_responses(st, rounds)
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert_identical(g, w, f"{what} round {i} ({rounds[i][0]})")
+    assert np.array_equal(got_table, want_table), f"{what}: final table differs"
+    return st
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def mesh1x8():
+    return Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+@check("shared_no_shortcut_matches_reference")
+def _shared_plain():
+    trace = gen_trace(seed=42)
+    run_differential(mesh2x4(), trace, {"local_shortcut": False},
+                     what="shared/no-shortcut")
+
+
+@check("shared_shortcut_matches_reference")
+def _shared_shortcut():
+    """With the local shortcut, each trustee serves channel rows first and
+    its own self-addressed rows last — the reference models that by
+    permuting each round into serve order."""
+    trace = gen_trace(seed=43)
+    n_dev = 8
+    r_per_client = R // n_dev
+
+    def serve_order(keys):
+        client = np.arange(R) // r_per_client
+        local = (keys % n_dev) == client
+        return np.concatenate([np.where(~local)[0], np.where(local)[0]])
+
+    run_differential(mesh2x4(), trace, {"local_shortcut": True},
+                     order_of=serve_order, what="shared/shortcut")
+
+
+@check("dedicated_matches_reference")
+def _dedicated():
+    trace = gen_trace(seed=44)
+    st = run_differential(mesh2x4(), trace,
+                          {"mode": "dedicated", "n_dedicated": 3},
+                          what="dedicated(2x4,T=3)")
+    # state lives only on trustee shards: the client region stays zero
+    cr = st.client_region()
+    assert cr.shape[0] > 0 and not cr.any(), "client shards hold state"
+
+
+@check("dedicated_1x8_matches_reference")
+def _dedicated_1x8():
+    trace = gen_trace(seed=45)
+    run_differential(mesh1x8(), trace,
+                     {"mode": "dedicated", "n_dedicated": 4},
+                     what="dedicated(1x8,T=4)")
+
+
+@check("fused_round_op_table_order")
+def _fused():
+    """submit(get) + submit(put) fused into ONE round serve all GETs before
+    any PUT (op-table order) — reference: a get round, then a put round."""
+    from repro.core import DelegatedKVStore, SequentialKVReference
+    rng = np.random.default_rng(7)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    keys = rng.integers(0, N_KEYS, R).astype(np.int32)
+    vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+    for mode_kw in ({"local_shortcut": False},
+                    {"mode": "dedicated", "n_dedicated": 3}):
+        st = DelegatedKVStore(mesh2x4(), N_KEYS, VW, capacity=R, **mode_kw)
+        st.prefill(init)
+        fut = st.get_then(jnp.asarray(keys))
+        st.put_then(jnp.asarray(keys), jnp.asarray(vals))
+        st.flush()
+        ref = SequentialKVReference(N_KEYS, VW)
+        ref.prefill(init)
+        want_get = ref.get(keys)
+        ref.put(keys, vals)
+        assert np.array_equal(np.asarray(fut.result()["value"]), want_get)
+        assert np.array_equal(st.dump(), ref.dump())
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

@@ -3,11 +3,19 @@
 All on the trivial 1-device mesh — pack/unpack math is device-count-agnostic
 per shard; multi-device semantics are covered by the subprocess battery in
 test_multidevice.py.
+
+The whole module is skipped when hypothesis is not installed; the seeded
+numpy battery in test_channel_seeded.py covers the same invariants (FIFO,
+conservation, overflow policies) without the dependency.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed; seeded fallbacks in "
+                           "test_channel_seeded.py cover these invariants")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import channel as ch

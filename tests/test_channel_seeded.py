@@ -1,0 +1,161 @@
+"""Seeded-numpy battery for the delegation-channel pack/unpack invariants.
+
+Mirrors the hypothesis properties in test_channel_property.py but draws its
+cases from a seeded numpy generator, so the invariants are exercised even in
+environments without hypothesis installed (that module importorskips itself).
+
+Covered invariants:
+  * lossless partition — every active request is placed in exactly one slot
+    or marked dropped; no duplicates, no inventions
+  * FIFO per (client, trustee) pair — earlier requests get earlier slots
+  * overflow policies (drop / second_round / defer) — sent + dropped ==
+    active requests, and no request row is duplicated across the primary and
+    overflow blocks
+  * pack -> unpack composes to identity on the sent subset, zeros on the
+    dropped subset
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as ch
+
+
+def _cases(seed, n=25):
+    """Seeded case generator matching the hypothesis strategy's envelope."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        t = int(rng.integers(1, 10))
+        r = int(rng.integers(1, 121))
+        cap = int(rng.integers(1, 21))
+        dst = rng.integers(-1, t, size=r).astype(np.int32)
+        out.append((t, cap, dst))
+    # pin the classic corner cases the random draw can miss
+    out.append((1, 1, np.zeros(40, np.int32)))            # total overflow
+    out.append((4, 20, np.full(8, -1, np.int32)))         # all inactive
+    out.append((3, 2, np.array([2, 2, 2, 2, 2], np.int32)))  # hot trustee
+    return out
+
+
+def _pack(dst, t, cfg):
+    r = dst.shape[0]
+    payload = np.arange(r, dtype=np.float32).reshape(r, 1) + 1.0
+    packed, group_sizes = jax.jit(
+        lambda d, p: ch.pack(d, p, t, cfg))(jnp.asarray(dst),
+                                            jnp.asarray(payload))
+    return payload, packed, np.asarray(group_sizes)
+
+
+@pytest.mark.parametrize("case", _cases(seed=7))
+def test_pack_lossless_partition_seeded(case):
+    t, cap, dst = case
+    cfg = ch.ChannelConfig(axis="model", capacity=cap, overflow="drop")
+    payload, packed, group_sizes = _pack(dst, t, cfg)
+    slots = np.asarray(packed.slots)
+    req_slot = np.asarray(packed.request_slot)
+    dropped = np.asarray(packed.dropped)
+    counts = np.asarray(packed.counts)
+
+    active = dst >= 0
+    placed = req_slot >= 0
+    assert (placed & dropped).sum() == 0
+    assert np.array_equal(placed | dropped, active)
+    for i in np.where(placed)[0]:
+        assert slots[req_slot[i], 0] == payload[i, 0]
+    used = req_slot[placed]
+    assert len(np.unique(used)) == len(used)
+    for k in range(t):
+        in_k = ((used >= k * cap) & (used < (k + 1) * cap)).sum()
+        assert counts[k] == in_k == min((dst == k).sum(), cap)
+    assert np.array_equal(group_sizes,
+                          np.bincount(dst[active], minlength=t))
+
+
+@pytest.mark.parametrize("case", _cases(seed=11))
+def test_pack_fifo_seeded(case):
+    t, cap, dst = case
+    cfg = ch.ChannelConfig(axis="model", capacity=cap, overflow="drop")
+    _, packed, _ = _pack(dst, t, cfg)
+    req_slot = np.asarray(packed.request_slot)
+    for k in range(t):
+        mine = np.where((dst == k) & (req_slot >= 0))[0]
+        slots_k = req_slot[mine]
+        assert np.all(np.diff(slots_k) > 0)
+        all_k = np.where(dst == k)[0]
+        assert np.array_equal(mine, all_k[: len(mine)])
+
+
+@pytest.mark.parametrize("overflow", ["drop", "second_round", "defer"])
+@pytest.mark.parametrize("case", _cases(seed=13, n=12))
+def test_overflow_policy_conservation(case, overflow):
+    """For every overflow policy: sent + dropped == active requests, and no
+    request occupies more than one slot across primary + overflow blocks."""
+    t, cap, dst = case
+    cap2 = (cap + 1) // 2 if overflow == "second_round" else 0
+    cfg = ch.ChannelConfig(axis="model", capacity=cap, overflow=overflow,
+                           overflow_capacity=cap2)
+    payload, packed, _ = _pack(dst, t, cfg)
+    req_slot = np.asarray(packed.request_slot)
+    dropped = np.asarray(packed.dropped)
+    active = dst >= 0
+
+    sent = req_slot >= 0
+    # conservation: every active request is sent xor dropped
+    assert sent.sum() + dropped.sum() == active.sum()
+    assert not np.any(sent & dropped)
+    assert not np.any((sent | dropped) & ~active)
+
+    # per-trustee service budget
+    budget = cap + (cap2 if overflow == "second_round" else 0)
+    for k in range(t):
+        n_k = (dst == k).sum()
+        assert ((dst == k) & sent).sum() == min(n_k, budget)
+        assert ((dst == k) & dropped).sum() == max(0, n_k - budget)
+
+    # no duplication across primary and overflow blocks: each sent request's
+    # payload value appears exactly once over both slot buffers' valid rows
+    n1 = t * cap
+    slot_vals = [np.asarray(packed.slots)[req_slot[i], 0] if req_slot[i] < n1
+                 else np.asarray(packed.slots2)[req_slot[i] - n1, 0]
+                 for i in np.where(sent)[0]]
+    assert np.array_equal(np.sort(slot_vals),
+                          np.sort(payload[sent, 0]))
+    assert len(np.unique(req_slot[sent])) == sent.sum()
+
+    if overflow == "second_round" and packed.slots2 is not None:
+        # overflow rows only hold requests beyond the primary capacity
+        counts2 = np.asarray(packed.counts2)
+        for k in range(t):
+            n_k = (dst == k).sum()
+            assert counts2[k] == min(max(0, n_k - cap), cap2)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_pack_unpack_identity_seeded(seed):
+    """unpack(request_slot) returns each sent request its own slot row and
+    zeros for dropped rows — the client-side conservation half."""
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, 6))
+    r = int(rng.integers(4, 80))
+    cap = int(rng.integers(1, 8))
+    dst = rng.integers(-1, t, size=r).astype(np.int32)
+    payload = {"x": jnp.asarray(rng.normal(size=(r, 2)), jnp.float32)}
+    cfg = ch.ChannelConfig(axis="model", capacity=cap,
+                           overflow="second_round",
+                           overflow_capacity=cap)
+    packed, _ = jax.jit(
+        lambda d, p: ch.pack(d, p, t, cfg))(jnp.asarray(dst), payload)
+    # echo server: response row j = slot row j (identity over the channel)
+    resp_rows = jax.tree.map(
+        lambda a, b: jnp.concatenate([a, b], 0), packed.slots, packed.slots2)
+    out = ch.unpack(resp_rows, packed.request_slot)
+    req_slot = np.asarray(packed.request_slot)
+    x = np.asarray(payload["x"])
+    got = np.asarray(out["x"])
+    for i in range(r):
+        if req_slot[i] >= 0:
+            np.testing.assert_allclose(got[i], x[i])
+        else:
+            np.testing.assert_allclose(got[i], 0.0)

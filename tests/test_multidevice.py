@@ -28,6 +28,9 @@ def battery():
 CHECKS = [
     "kvstore_ops",
     "kvstore_cas",
+    "dedicated_kvstore_2x4",
+    "dedicated_kvstore_1x8",
+    "dedicated_overflow_second_round_skew",
     "lock_vs_delegation_equivalence",
     "moe_delegation_matches_dense",
     "grad_channel_combiner_int8",
