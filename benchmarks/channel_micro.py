@@ -3,7 +3,9 @@
   * slot-capacity sweep (the 1152-byte slot / two-part trade-off, §5.3.1):
     primary capacity vs. served fraction vs. round time.
   * local-trustee shortcut on/off (§5.2.1).
-  * overflow mode: drop vs second_round.
+  * overflow mode: drop vs second_round vs defer (drain engine).
+  * pack implementation: lax reference vs the MXU Pallas pack kernel
+    (interpret mode off-TPU), same channel round either way.
 """
 from __future__ import annotations
 
@@ -15,6 +17,13 @@ import numpy as np
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--pack-impl", default="both",
+                    choices=["ref", "pallas", "both"],
+                    help="channel pack path for the pack_impl experiment; "
+                         "'both' emits one row per implementation")
+    ap.add_argument("--drain-rounds", type=int, default=8,
+                    help="defer drain-engine round bound for the "
+                         "defer_drain experiment")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -35,7 +44,8 @@ def main(argv=None):
     ones = jnp.ones((R, 1), jnp.float32)
     mean_cap = max(1, R // n_dev // n_dev)
 
-    csv = Csv(["experiment", "setting", "us_per_round", "served_frac"])
+    csv = Csv(["experiment", "setting", "pack_impl", "us_per_round",
+               "served_frac"])
     csv.print_header()
 
     # capacity sweep, drop mode (how big must the primary block be?)
@@ -47,7 +57,7 @@ def main(argv=None):
         out = st.add(keys, ones)
         served = float((np.asarray(out) != 0).any(1).mean())
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
-        csv.add("capacity_drop", f"{mult}x_mean", round(dt * 1e6, 1),
+        csv.add("capacity_drop", f"{mult}x_mean", "ref", round(dt * 1e6, 1),
                 round(served, 4))
 
     # two-part slot: small primary + overflow round (lossless)
@@ -60,7 +70,22 @@ def main(argv=None):
         out = st.add(keys, ones)
         served = float((np.asarray(out) != 0).any(1).mean())
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
-        csv.add("two_part_slot", f"{mult}x_mean+4x_overflow",
+        csv.add("two_part_slot", f"{mult}x_mean+4x_overflow", "ref",
+                round(dt * 1e6, 1), round(served, 4))
+
+    # defer + drain engine: bounded multi-round backpressure (paper §5.1
+    # wait-for-slot) — small primary blocks drain losslessly over rounds
+    for mult in (0.25, 0.5, 1):
+        cap = max(1, int(mean_cap * mult))
+        st = DelegatedKVStore(mesh, n_keys, 1, capacity=cap, overflow="defer",
+                              max_rounds=args.drain_rounds,
+                              local_shortcut=False)
+        st.prefill(np.zeros((n_keys, 1), np.float32))
+        block(st.add(keys, ones))
+        stats = st.trust.last_drain_stats()
+        served = 1.0 - stats["residual"] / R
+        dt = bench(lambda: block(st.add(keys, ones)), iters=4)
+        csv.add("defer_drain", f"{mult}x_mean_r{stats['rounds']}", "ref",
                 round(dt * 1e6, 1), round(served, 4))
 
     # local shortcut ablation
@@ -69,7 +94,18 @@ def main(argv=None):
                               local_shortcut=shortcut)
         st.prefill(np.zeros((n_keys, 1), np.float32))
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
-        csv.add("local_shortcut", str(shortcut), round(dt * 1e6, 1), 1.0)
+        csv.add("local_shortcut", str(shortcut), "ref", round(dt * 1e6, 1),
+                1.0)
+
+    # pack implementation: lax reference vs Pallas MXU kernel, same round
+    impls = (["ref", "pallas"] if args.pack_impl == "both"
+             else [args.pack_impl])
+    for impl in impls:
+        st = DelegatedKVStore(mesh, n_keys, 1, capacity=2 * mean_cap,
+                              pack_impl=impl, local_shortcut=False)
+        st.prefill(np.zeros((n_keys, 1), np.float32))
+        dt = bench(lambda: block(st.add(keys, ones)), iters=4)
+        csv.add("pack_impl", f"cap2x_{impl}", impl, round(dt * 1e6, 1), 1.0)
 
     if args.out:
         csv.dump(args.out)

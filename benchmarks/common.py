@@ -87,3 +87,24 @@ def trustee_mode_kwargs(mode: str, n_dedicated: int, n_dev: int) -> Dict:
     from repro.core.routing import default_n_dedicated
     return {"mode": "dedicated",
             "n_dedicated": n_dedicated or default_n_dedicated(n_dev)}
+
+
+def add_channel_args(ap) -> None:
+    """The shared --pack-impl/--overflow/--max-rounds channel flags (one
+    definition so the mode-aware benchmarks cannot drift apart)."""
+    ap.add_argument("--pack-impl", default="ref", choices=["ref", "pallas"],
+                    help="channel pack path: lax reference or the MXU "
+                         "Pallas pack kernel")
+    ap.add_argument("--overflow", default="second_round",
+                    choices=["second_round", "drop", "defer"],
+                    help="channel overflow policy for the delegated stores; "
+                         "defer engages the bounded drain engine")
+    ap.add_argument("--max-rounds", type=int, default=8,
+                    help="drain-engine round bound when --overflow defer")
+
+
+def channel_kwargs(args, mode_kw: Dict) -> Dict:
+    """DelegatedKVStore kwargs from the add_channel_args flags + mode_kw."""
+    return dict(mode_kw, pack_impl=args.pack_impl, overflow=args.overflow,
+                max_rounds=args.max_rounds
+                if args.overflow == "defer" else 1)

@@ -36,6 +36,8 @@ def main(argv=None):
                          "reserved tail of cores serves the rest (dedicated)")
     ap.add_argument("--n-dedicated", type=int, default=0,
                     help="dedicated trustee cores (default: half the mesh)")
+    from benchmarks.common import add_channel_args
+    add_channel_args(ap)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -45,15 +47,17 @@ def main(argv=None):
     from repro.core import (AtomicAddStore, DelegatedKVStore, FetchRMWStore,
                             conflict_ranks)
     from repro.core.routing import sample_keys
-    from benchmarks.common import Csv, V5E, bench, block, trustee_mode_kwargs
+    from benchmarks.common import (Csv, V5E, bench, block, channel_kwargs,
+                                   trustee_mode_kwargs)
 
     n_dev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()).reshape(1, n_dev), ("data", "model"))
     mode_kw = trustee_mode_kwargs(args.mode, args.n_dedicated, n_dev)
+    chan_kw = channel_kwargs(args, mode_kw)
     R = args.requests
     rng = np.random.default_rng(0)
-    csv = Csv(["fig", "dist", "mode", "n_objects", "solution", "mops_wall",
-               "rounds", "bytes_per_op", "mops_v5e_model"])
+    csv = Csv(["fig", "dist", "mode", "pack_impl", "n_objects", "solution",
+               "mops_wall", "rounds", "bytes_per_op", "mops_v5e_model"])
     csv.print_header()
 
     for n_obj in [int(x) for x in args.objects.split(",")]:
@@ -62,17 +66,18 @@ def main(argv=None):
         ones = jnp.ones((R, 1), jnp.float32)
 
         # --- delegation (sync) --------------------------------------------
-        st = DelegatedKVStore(mesh, n_obj, 1, capacity=0, **mode_kw)
+        st = DelegatedKVStore(mesh, n_obj, 1, capacity=0, **chan_kw)
         st.prefill(np.zeros((n_obj, 1), np.float32))
         dt = bench(lambda: block(st.add(keys, ones)), iters=args.iters)
         # bytes/op over the channel: key+delta request + old-value response
         req_b, resp_b = 4 + 4, 4
         v5e = R / max((R * (req_b + resp_b)) / V5E["ici_bw"], 1e-9) / 1e6
-        csv.add("fig6", args.dist, args.mode, n_obj, "trust", round(R / dt / 1e6, 3),
+        csv.add("fig6", args.dist, args.mode, args.pack_impl, n_obj,
+                "trust", round(R / dt / 1e6, 3),
                 1, req_b + resp_b, round(v5e, 1))
 
         # --- delegation (async, 4 outstanding batches fused) ---------------
-        st2 = DelegatedKVStore(mesh, n_obj, 1, capacity=0, **mode_kw)
+        st2 = DelegatedKVStore(mesh, n_obj, 1, capacity=0, **chan_kw)
         st2.prefill(np.zeros((n_obj, 1), np.float32))
         q = R // 4
 
@@ -86,7 +91,8 @@ def main(argv=None):
             block(st2.trust.state()["table"])
 
         dt = bench(async_round, iters=args.iters)
-        csv.add("fig6", args.dist, args.mode, n_obj, "async", round(R / dt / 1e6, 3),
+        csv.add("fig6", args.dist, args.mode, args.pack_impl, n_obj,
+                "async", round(R / dt / 1e6, 3),
                 1, req_b + resp_b, round(v5e, 1))
 
         # --- lock analog (fetch + serialize on conflicts) -------------------
@@ -94,7 +100,8 @@ def main(argv=None):
         # cap rounds so single-object zipf cases terminate (the paper also
         # reports lock runs timing out under extreme congestion)
         capped = min(n_rounds, 64)
-        lock = FetchRMWStore(mesh, n_obj, 1, **mode_kw)
+        lock = FetchRMWStore(mesh, n_obj, 1, pack_impl=args.pack_impl,
+                             **mode_kw)
         lock.prefill(np.zeros((n_obj, 1), np.float32))
         ranks_j = np.minimum(ranks, capped - 1)
 
@@ -108,14 +115,17 @@ def main(argv=None):
         lock_bytes = 2 * 4 * n_rounds / max(1, n_rounds)
         v5e_lock = R / max(
             (R * 2 * 4) / V5E["ici_bw"] * n_rounds, 1e-9) / 1e6
-        csv.add("fig6", args.dist, args.mode, n_obj, "mcs", round(R / dt_scaled / 1e6, 3),
+        csv.add("fig6", args.dist, args.mode, args.pack_impl, n_obj,
+                "mcs", round(R / dt_scaled / 1e6, 3),
                 n_rounds, 8, round(v5e_lock, 1))
 
         # --- atomic scatter-add ---------------------------------------------
-        at = AtomicAddStore(mesh, n_obj, 1, **mode_kw)
+        at = AtomicAddStore(mesh, n_obj, 1, pack_impl=args.pack_impl,
+                            **mode_kw)
         at.prefill(np.zeros((n_obj, 1), np.float32))
         dt = bench(lambda: block(at.add(keys, ones)), iters=args.iters)
-        csv.add("fig6", args.dist, args.mode, n_obj, "atomic", round(R / dt / 1e6, 3),
+        csv.add("fig6", args.dist, args.mode, args.pack_impl, n_obj,
+                "atomic", round(R / dt / 1e6, 3),
                 1, 8, round(v5e, 1))
 
     if args.out:

@@ -48,6 +48,8 @@ def main(argv=None):
                          "reserved tail of cores serves the rest (dedicated)")
     ap.add_argument("--n-dedicated", type=int, default=0,
                     help="dedicated trustee cores (default: half the mesh)")
+    from benchmarks.common import add_channel_args
+    add_channel_args(ap)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -56,11 +58,13 @@ def main(argv=None):
     from jax.sharding import Mesh
     from repro.core import DelegatedKVStore, FetchRMWStore, conflict_ranks
     from repro.core.routing import sample_keys
-    from benchmarks.common import Csv, V5E, bench, block, trustee_mode_kwargs
+    from benchmarks.common import (Csv, V5E, bench, block, channel_kwargs,
+                                   trustee_mode_kwargs)
 
     n_dev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()).reshape(1, n_dev), ("data", "model"))
     mode_kw = trustee_mode_kwargs(args.mode, args.n_dedicated, n_dev)
+    chan_kw = channel_kwargs(args, mode_kw)
     R = args.requests
     W = 4                      # 4 x f32 = 16-byte values
     rng = np.random.default_rng(1)
@@ -72,8 +76,8 @@ def main(argv=None):
         tables = [int(args.tables.split(",")[0])]
         writes = [0, 5, 10, 25, 50, 100]
 
-    csv = Csv(["fig", "dist", "mode", "n_keys", "write_pct", "solution", "mops_wall",
-               "write_rounds", "mops_v5e_model"])
+    csv = Csv(["fig", "dist", "mode", "pack_impl", "n_keys", "write_pct",
+               "solution", "mops_wall", "write_rounds", "mops_v5e_model"])
     csv.print_header()
 
     for n_keys in tables:
@@ -86,7 +90,7 @@ def main(argv=None):
             vals = jnp.ones((R, W), jnp.float32)
 
             # --- delegated store (async GET + PUT fused in one round) ------
-            st = DelegatedKVStore(mesh, n_keys, W, capacity=0, **mode_kw)
+            st = DelegatedKVStore(mesh, n_keys, W, capacity=0, **chan_kw)
             st.prefill(np.zeros((n_keys, W), np.float32))
 
             route = st.route(keys)
@@ -106,13 +110,15 @@ def main(argv=None):
             # channel bytes: GET req 4 + resp 16; PUT req 20 + resp 0
             b_op = (1 - wr / 100) * 20 + (wr / 100) * 20
             v5e = R / max(R * b_op / V5E["ici_bw"], 1e-9) / 1e6
-            csv.add(f"fig{args.fig}", args.dist, args.mode, n_keys, wr, "trust",
+            csv.add(f"fig{args.fig}", args.dist, args.mode, args.pack_impl,
+                    n_keys, wr, "trust",
                     round(R / dt / 1e6, 3), 0, round(v5e, 1))
 
             # --- rw-lock analog --------------------------------------------
             wranks, wrounds = conflict_ranks(keys_np[is_write], n_dev)
             wrounds = min(wrounds, 32)
-            lock = FetchRMWStore(mesh, n_keys, W, rw_lock=True, **mode_kw)
+            lock = FetchRMWStore(mesh, n_keys, W, rw_lock=True,
+                                 pack_impl=args.pack_impl, **mode_kw)
             lock.prefill(np.zeros((n_keys, W), np.float32))
             if is_write.any():
                 wkeys, wvals_p, wr_ranks, _ = _pad_writes(
@@ -134,13 +140,15 @@ def main(argv=None):
                 (R * (1 - wr / 100) * 2 * W * 4
                  + R * (wr / 100) * 4 * W * 4 * max(1, wrounds))
                 / V5E["ici_bw"], 1e-9) / 1e6
-            csv.add(f"fig{args.fig}", args.dist, args.mode, n_keys, wr, "rwlock",
+            csv.add(f"fig{args.fig}", args.dist, args.mode, args.pack_impl,
+                    n_keys, wr, "rwlock",
                     round(R / dt / 1e6, 3), wrounds, round(v5e_l, 1))
 
             # --- mutex analog (everything serializes) -----------------------
             ranks, rounds = conflict_ranks(keys_np, n_dev)
             rounds_c = min(rounds, 32)
-            mtx = FetchRMWStore(mesh, n_keys, W, **mode_kw)
+            mtx = FetchRMWStore(mesh, n_keys, W,
+                                pack_impl=args.pack_impl, **mode_kw)
             mtx.prefill(np.zeros((n_keys, W), np.float32))
             rk = np.minimum(ranks, rounds_c - 1)
 
@@ -152,7 +160,8 @@ def main(argv=None):
             dt_scaled = dt * (rounds / rounds_c)
             v5e_m = R / max(R * 4 * W * 4 * rounds / V5E["ici_bw"],
                             1e-9) / 1e6
-            csv.add(f"fig{args.fig}", args.dist, args.mode, n_keys, wr, "mutex",
+            csv.add(f"fig{args.fig}", args.dist, args.mode, args.pack_impl,
+                    n_keys, wr, "mutex",
                     round(R / dt_scaled / 1e6, 3), rounds, round(v5e_m, 1))
 
     if args.out:

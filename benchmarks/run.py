@@ -64,7 +64,9 @@ FULL = {
 
 
 def summarize(name: str, stdout: str):
-    """Extract (us_per_call, derived) rows from a benchmark's CSV output."""
+    """Extract (key, us_per_call, derived, fields) rows from a benchmark's
+    CSV output.  ``fields`` keeps the parsed CSV row for the --json
+    trajectory (benchmark x mode x pack_impl)."""
     lines = [l for l in stdout.strip().splitlines() if "," in l]
     if len(lines) < 2:
         return []
@@ -79,24 +81,52 @@ def summarize(name: str, stdout: str):
             mops = float(row["mops_wall"])
             us = 1.0 / mops if mops > 0 else float("inf")
             key = "/".join(str(row.get(k, "")) for k in
-                           ("dist", "mode", "n_objects", "n_keys",
-                            "write_pct", "solution") if row.get(k))
+                           ("dist", "mode", "pack_impl", "n_objects",
+                            "n_keys", "write_pct", "solution") if row.get(k))
             out.append((f"{name}:{key}", round(us, 3),
-                        f"mops={row['mops_wall']}"))
+                        f"mops={row['mops_wall']}", row))
         elif "mean_us_per_req" in row:
             out.append((f"{name}:{row['dist']}/load{row['load_req_per_round']}"
                         f"/{row['solution']}",
                         float(row["mean_us_per_req"]),
-                        f"p99={row['p99_us_per_req']}us"))
+                        f"p99={row['p99_us_per_req']}us", row))
         elif "us_per_round" in row:
-            out.append((f"{name}:{row['experiment']}/{row['setting']}",
-                        float(row["us_per_round"]),
-                        f"served={row['served_frac']}"))
+            key = f"{name}:{row['experiment']}/{row['setting']}"
+            if row.get("pack_impl"):
+                key += f"/{row['pack_impl']}"
+            out.append((key, float(row["us_per_round"]),
+                        f"served={row['served_frac']}", row))
     return out
 
 
 # benchmarks that understand the shared/dedicated trustee-mode switch
 MODE_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store")
+# benchmarks that understand --pack-impl / the overflow switches
+PACK_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store",
+              "benchmarks.channel_micro")
+OVERFLOW_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store")
+
+
+def write_bench_json(tag: str, args, summary) -> str:
+    """Emit the perf-trajectory artifact: ops/s per benchmark row
+    (benchmark x mode x pack_impl), for cross-PR baseline comparison."""
+    import json
+    rows = []
+    for name, us, derived, fields in summary:
+        failed = not us or us != us or us == float("inf")
+        rows.append({"name": name,
+                     # strict JSON: null, never NaN/Infinity, for failed rows
+                     "us_per_call": None if failed else us,
+                     "ops_per_s": 0.0 if failed else round(1e6 / us, 1),
+                     "derived": derived,
+                     "mode": fields.get("mode", args.mode),
+                     "pack_impl": fields.get("pack_impl", "")})
+    path = artifact_path(f"BENCH_{tag}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"tag": tag, "mode": args.mode, "full": bool(args.full),
+                   "rows": rows}, f, indent=1)
+    return path
 
 
 def main() -> None:
@@ -110,6 +140,19 @@ def main() -> None:
                          "cores and restricts the run to those benchmarks")
     ap.add_argument("--n-dedicated", type=int, default=0,
                     help="dedicated trustee cores (default: half the mesh)")
+    ap.add_argument("--pack-impl", default="",
+                    choices=["", "ref", "pallas", "both"],
+                    help="forwarded to the pack-aware benchmarks "
+                         "(channel_micro also accepts 'both')")
+    ap.add_argument("--overflow", default="",
+                    choices=["", "second_round", "drop", "defer"],
+                    help="forwarded to the overflow-aware benchmarks; defer "
+                         "engages the drain engine")
+    ap.add_argument("--json", action="store_true",
+                    help="also write the ops/s trajectory to "
+                         "benchmarks/artifacts/BENCH_<tag>.json")
+    ap.add_argument("--tag", default="local",
+                    help="tag for the --json artifact filename")
     args = ap.parse_args()
     table = FULL if args.full else REDUCED
 
@@ -123,6 +166,13 @@ def main() -> None:
             margs = margs + ["--mode", args.mode]
             if args.n_dedicated:
                 margs = margs + ["--n-dedicated", str(args.n_dedicated)]
+        if args.pack_impl and module in PACK_AWARE:
+            impl = args.pack_impl
+            if impl == "both" and module != "benchmarks.channel_micro":
+                impl = "ref"
+            margs = margs + ["--pack-impl", impl]
+        if args.overflow and module in OVERFLOW_AWARE:
+            margs = margs + ["--overflow", args.overflow]
         print(f"=== {name} ({module}) ===", flush=True)
         try:
             out = run_in_subprocess(module, margs, devices=8, timeout=2400)
@@ -130,11 +180,22 @@ def main() -> None:
             summary.extend(summarize(name, out))
         except Exception as e:                               # noqa: BLE001
             print(f"{name} FAILED: {e}", flush=True)
-            summary.append((name, float("nan"), f"FAILED {type(e).__name__}"))
+            summary.append((name, float("nan"),
+                            f"FAILED {type(e).__name__}", {}))
 
     print("\n=== summary: name,us_per_call,derived ===", flush=True)
-    for name, us, derived in summary:
+    for name, us, derived, _fields in summary:
         print(f"{name},{us},{derived}", flush=True)
+
+    if args.json:
+        path = write_bench_json(args.tag, args, summary)
+        print(f"\nwrote perf trajectory to {path}", flush=True)
+
+    failed = [n for n, us, _d, _f in summary if us != us]
+    if failed:
+        # exit nonzero so CI never uploads a green-but-garbage baseline
+        print(f"\nFAILED benchmarks: {', '.join(failed)}", flush=True)
+        sys.exit(1)
 
     # roofline table from dry-run artifacts, if present
     print("\n=== roofline (from dry-run artifacts) ===", flush=True)

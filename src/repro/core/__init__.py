@@ -7,8 +7,9 @@
 # nested.py    launch()/nested delegation (chained channel rounds)
 # routing.py   key -> trustee routers + workload generators
 # meshctx.py   current-mesh threading for shard_map islands inside jit
-from .channel import (ChannelConfig, DelegatedOp, DelegationFuture, Packed,
-                      Received, delegate, delegate_async, pack, respond,
+from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
+                      DelegationFuture, Packed, Received, delegate,
+                      delegate_async, delegate_drain, pack, respond,
                       serve_optable, transmit, unpack)
 from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
 from .kvstore import DelegatedKVStore, make_kv_ops
@@ -20,8 +21,10 @@ from .routing import partition_clients_trustees, trustee_device_slot
 from .nested import launch_serve
 
 __all__ = [
-    "ChannelConfig", "DelegatedOp", "DelegationFuture", "Packed", "Received",
-    "delegate", "delegate_async", "pack", "respond", "serve_optable",
+    "ChannelConfig", "ChannelInfo", "DelegatedOp", "DelegationFuture",
+    "Packed", "Received",
+    "delegate", "delegate_async", "delegate_drain", "pack", "respond",
+    "serve_optable",
     "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
     "local_trustees", "DelegatedKVStore", "make_kv_ops", "AtomicAddStore",
     "FetchRMWStore", "SequentialKVReference", "conflict_ranks", "constrain",

@@ -12,7 +12,8 @@ Paper mapping (see DESIGN.md §2):
                      ``overflow`` policy: "second_round" ships the excess in a
                      second, narrower all_to_all; "drop" discards (MoE-style
                      capacity factor); "defer" returns the unsent mask to the
-                     caller (paper: wait for slot availability).
+                     caller (paper: wait for slot availability) — served to
+                     completion by ``delegate_drain``'s bounded retry rounds.
   * FIFO per pair -> pack is a stable sort by destination, so requests from
                      one client to one trustee are served in issue order.
 
@@ -22,6 +23,7 @@ Payloads are pytrees of ``(R, ...)`` arrays — the "captured environment" rows.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
@@ -40,9 +42,10 @@ class ChannelConfig:
     overflow: str = "drop"         # "drop" | "second_round" | "defer"
     overflow_capacity: int = 0     # rows per pair in the overflow round
     local_shortcut: bool = False   # apply self-addressed requests inline (§5.2.1)
-    interpret: bool = False        # route pack through Pallas interpret kernel
+    pack_impl: str = "ref"         # "ref" (lax sort) | "pallas" (MXU pack kernel)
     mode: str = "shared"           # "shared" | "dedicated" (paper's two runtimes)
     n_clients: int = 0             # dedicated only: client devices on the axis
+    max_rounds: int = 1            # defer only: drain-engine round bound (§5.1)
 
     def total_capacity(self) -> int:
         if self.overflow == "second_round":
@@ -114,13 +117,91 @@ def _scatter_rows(payload: Pytree, order: jax.Array, row_ids: jax.Array,
     return jax.tree.map(scat, payload)
 
 
+def _encode_planes(payload: Pytree, r: int):
+    """Flatten a payload pytree into one (R, W) float32 plane matrix for the
+    Pallas pack kernel.  Integer leaves are split into hi/lo 16-bit planes
+    (each exact in f32 — the MXU scatter matmul moves them losslessly);
+    float leaves are upcast to f32 (exact for f32/bf16/f16 inputs)."""
+    from ..kernels import ops as kops
+    leaves, treedef = jax.tree.flatten(payload)
+    planes, decs, col = [], [], 0
+    for leaf in leaves:
+        mat = leaf.reshape(r, -1)
+        w = mat.shape[1]
+        if jnp.issubdtype(leaf.dtype, jnp.integer) or leaf.dtype == jnp.bool_:
+            hi, lo = kops.int_split_f32(mat)
+            planes.extend([hi, lo])
+            decs.append(("int", col, w, leaf.dtype, leaf.shape))
+            col += 2 * w
+        else:
+            assert leaf.dtype.itemsize <= 4, \
+                f"f32 planes cannot carry {leaf.dtype} exactly"
+            planes.append(mat.astype(jnp.float32))
+            decs.append(("float", col, w, leaf.dtype, leaf.shape))
+            col += w
+    return jnp.concatenate(planes, 1), treedef, decs
+
+
+def _decode_planes(slots: jax.Array, treedef, decs, n_rows: int) -> Pytree:
+    from ..kernels import ops as kops
+    out = []
+    for kind, c0, w, dt, shp in decs:
+        if kind == "int":
+            block = kops.int_join_f32(slots[:, c0:c0 + w],
+                                      slots[:, c0 + w:c0 + 2 * w], dt)
+        else:
+            block = slots[:, c0:c0 + w].astype(dt)
+        out.append(block.reshape((n_rows,) + shp[1:]))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _pack_with_kernel(dst: jax.Array, payload: Pytree, n_trustees: int,
+                      cfg: ChannelConfig) -> Tuple[Packed, jax.Array]:
+    """``pack`` via the MXU delegation_pack kernel (cfg.pack_impl="pallas").
+
+    Bit-identical to the lax path: slot assignment, counts, request_slot and
+    dropped all match, and payload values round-trip exactly (one-hot matmul
+    scatter places each row once; integers ride the split-plane encoding).
+    The second_round block reruns the kernel on the rows the primary block
+    rejected, preserving FIFO within each destination."""
+    from ..kernels import ops as kops
+    c1 = cfg.capacity
+    assert c1 > 0, "channel capacity must be positive"
+    r = dst.shape[0]
+    interp = jax.default_backend() != "tpu"
+    planes, treedef, decs = _encode_planes(payload, r)
+    s1, counts1, req1 = kops.delegation_pack_planes(
+        dst, planes, n_trustees, c1, interpret=interp)
+    slots1 = _decode_planes(s1, treedef, decs, n_trustees * c1)
+    active = dst >= 0
+    group_sizes = jnp.zeros((n_trustees,), jnp.int32).at[
+        jnp.where(active, dst, n_trustees)].add(1, mode="drop")
+
+    slots2 = counts2 = None
+    request_slot = req1
+    if cfg.overflow == "second_round" and cfg.overflow_capacity > 0:
+        c2 = cfg.overflow_capacity
+        dst2 = jnp.where(req1 >= 0, -1, dst)
+        s2, counts2, req2 = kops.delegation_pack_planes(
+            dst2, planes, n_trustees, c2, interpret=interp)
+        slots2 = _decode_planes(s2, treedef, decs, n_trustees * c2)
+        request_slot = jnp.where(req2 >= 0, n_trustees * c1 + req2, req1)
+    dropped = (request_slot < 0) & active
+    return Packed(slots1, counts1, slots2, counts2,
+                  request_slot, dropped), group_sizes
+
+
 def pack(dst: jax.Array, payload: Pytree, n_trustees: int,
          cfg: ChannelConfig) -> Tuple[Packed, jax.Array]:
     """Client-side: bin requests into per-trustee slots with capacity.
 
     dst: (R,) int32 trustee id per request; -1 marks inactive rows.
     Returns (Packed, group_sizes) — group_sizes is pre-capacity demand.
+    ``cfg.pack_impl`` selects the implementation: "ref" is the lax stable-sort
+    path; "pallas" routes through the MXU pack kernel, bit-identically.
     """
+    if cfg.pack_impl == "pallas":
+        return _pack_with_kernel(dst, payload, n_trustees, cfg)
     c1 = cfg.capacity
     assert c1 > 0, "channel capacity must be positive"
     r = dst.shape[0]
@@ -225,8 +306,10 @@ ServeFn = Callable[[Pytree, Received], Tuple[Pytree, Pytree]]
 
 class ChannelInfo(NamedTuple):
     group_sizes: jax.Array   # (T,) pre-capacity demand from this client
-    dropped: jax.Array       # (R,) bool — not transmitted this round
+    dropped: jax.Array       # (R,) bool — not transmitted (residual after drain)
     n_rows: int              # static: channel rows per device per round
+    rounds: Any = 1          # channel rounds executed (int32 after a drain)
+    residual: Any = 0        # GLOBAL unsent-row count (psum; int32 after drain)
 
 
 def _merge_local(responses: Pytree, local_resp: Pytree, local_mask: jax.Array) -> Pytree:
@@ -331,6 +414,71 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     info = ChannelInfo(group_sizes, packed.dropped,
                        n_slots * cfg.total_capacity())
     return new_state, responses, info
+
+
+def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
+                   serve_fn: ServeFn, n_trustees: int, cfg: ChannelConfig,
+                   max_rounds: Optional[int] = None
+                   ) -> Tuple[Pytree, Pytree, ChannelInfo]:
+    """Multi-round drain for ``overflow="defer"`` (paper §5.1: the two-part
+    slot's third outcome, *wait for slot availability*, as bounded SPMD
+    retry rounds — the lock-free-style bounded-retry translation).
+
+    Round 1 is a full ``delegate`` (local shortcut included).  Rows the
+    primary block rejected stay marked in the deferred mask; a
+    ``lax.while_loop`` then re-packs and re-transmits only those rows until
+    every device's batch drains or ``max_rounds`` is reached.  The loop
+    condition is a ``psum``-reduced global residual count, so every shard
+    executes the same number of collective rounds (no divergence).  Responses
+    from each round merge back into original request order; FIFO per
+    (client, trustee) pair holds across rounds (each round serves the next
+    ``capacity`` rows of a pair, in issue order).
+
+    Returns (new_state, responses, info) where ``info.rounds`` is the number
+    of channel rounds executed, ``info.residual`` the global count of rows
+    still unserved (> 0 only when ``max_rounds`` was too small — those rows
+    keep zero responses and stay set in ``info.dropped``).
+    """
+    assert cfg.overflow == "defer", \
+        f"delegate_drain requires overflow='defer', got {cfg.overflow!r}"
+    if max_rounds is None:
+        max_rounds = cfg.max_rounds
+    assert max_rounds >= 1
+
+    state, responses, info = delegate(state, dst, payload, serve_fn,
+                                      n_trustees, cfg)
+    remaining = info.dropped
+    total = lax.psum(jnp.sum(remaining, dtype=jnp.int32), cfg.axis)
+    if max_rounds == 1:
+        return state, responses, info._replace(rounds=jnp.int32(1),
+                                               residual=total)
+    # rounds >= 2 carry only deferred REMOTE rows; self-addressed rows were
+    # fully served inline in round 1 (the shortcut path has no capacity), so
+    # the shortcut split is disabled for the retry rounds
+    cfg_retry = dataclasses.replace(cfg, local_shortcut=False)
+
+    def cond(carry):
+        _state, _resp, _rem, rounds, total = carry
+        return (total > 0) & (rounds < max_rounds)
+
+    def body(carry):
+        state, responses, remaining, rounds, _total = carry
+        dst_r = jnp.where(remaining, dst, -1)
+        state, resp_r, info_r = delegate(state, dst_r, payload, serve_fn,
+                                         n_trustees, cfg_retry)
+        sent = remaining & ~info_r.dropped
+        responses = jax.tree.map(
+            lambda acc, new: jnp.where(
+                sent.reshape((-1,) + (1,) * (new.ndim - 1)), new, acc),
+            responses, resp_r)
+        remaining = info_r.dropped
+        total = lax.psum(jnp.sum(remaining, dtype=jnp.int32), cfg.axis)
+        return state, responses, remaining, rounds + 1, total
+
+    state, responses, remaining, rounds, total = lax.while_loop(
+        cond, body, (state, responses, remaining, jnp.int32(1), total))
+    return state, responses, ChannelInfo(info.group_sizes, remaining,
+                                         info.n_rows, rounds, total)
 
 
 class DelegationFuture(NamedTuple):

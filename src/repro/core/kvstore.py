@@ -116,10 +116,12 @@ class DelegatedKVStore:
     both modes."""
 
     def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
-                 axis: Any = None, dtype=jnp.float32, capacity: int = 0,
+                 axis: Any = None, dtype=jnp.float32,
+                 capacity: Optional[int] = None,
                  overflow: str = "second_round", overflow_capacity: int = 0,
                  local_shortcut: bool = True, mode: str = "shared",
-                 n_dedicated: int = 0):
+                 n_dedicated: int = 0, max_rounds: int = 1,
+                 pack_impl: str = "ref"):
         axis = axis if axis is not None else tuple(mesh.axis_names)
         group = TrusteeGroup(mesh, axis, mode=mode, n_dedicated=n_dedicated)
         t = group.n_trustees
@@ -136,7 +138,8 @@ class DelegatedKVStore:
             {"table": table}, ops, resp_like,
             capacity=capacity, overflow=overflow,
             overflow_capacity=overflow_capacity,
-            local_shortcut=local_shortcut)
+            local_shortcut=local_shortcut, max_rounds=max_rounds,
+            pack_impl=pack_impl)
         self.t = t
         self.dtype = dtype
 

@@ -104,8 +104,9 @@ class TrusteeGroup:
 
     def entrust(self, state: Pytree, ops: Sequence[DelegatedOp],
                 resp_like: Pytree, state_specs: Optional[Pytree] = None,
-                capacity: int = 0, overflow: str = "second_round",
+                capacity: Optional[int] = None, overflow: str = "second_round",
                 overflow_capacity: int = 0, local_shortcut: bool = True,
+                max_rounds: int = 1, pack_impl: str = "ref",
                 ) -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
 
@@ -115,6 +116,14 @@ class TrusteeGroup:
         region so the physical array shards over the whole axis while the
         logical state occupies only the trustee shards; ``Trust.trustee_state``
         strips the padding back off.
+
+        ``capacity``: rows per (client, trustee) pair in the primary block.
+        ``None`` (or 0, the legacy spelling) auto-sizes per batch; any
+        explicit positive value — including 1 — is honored as-is.
+        ``max_rounds`` bounds the defer drain engine (``overflow="defer"``
+        with ``max_rounds > 1`` re-transmits deferred rows until the batch
+        drains).  ``pack_impl`` selects the channel pack implementation
+        ("ref" lax sort | "pallas" MXU kernel).
         """
         if state_specs is None:
             state_specs = jax.tree.map(lambda _: P(self.axes), state)
@@ -133,13 +142,18 @@ class TrusteeGroup:
         sharded = jax.tree.map(
             lambda x, s: jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, s)),
             state, state_specs)
+        # capacity sentinel: None/0 -> 0 (auto-sized per batch in _cfg_for);
+        # an explicit capacity — including 1 — is stored verbatim
         cfg = ChannelConfig(axis=self.axis if len(self.axes) > 1 else self.axes[0],
-                            capacity=max(capacity, 1), overflow=overflow,
+                            capacity=0 if not capacity else capacity,
+                            overflow=overflow,
                             overflow_capacity=overflow_capacity,
                             local_shortcut=local_shortcut,
+                            pack_impl=pack_impl,
                             mode=self.mode,
                             n_clients=self.n_clients if self.mode == "dedicated"
-                            else 0)
+                            else 0,
+                            max_rounds=max_rounds)
         return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg)
 
 
@@ -177,6 +191,7 @@ class Trust:
         self.cfg = cfg
         self._pending: List[Tuple[int, jax.Array, Pytree, TrustFuture]] = []
         self._exec_cache: Dict[Any, Callable] = {}
+        self._last_stats = None
 
     # -- introspection ------------------------------------------------------
     @property
@@ -242,8 +257,11 @@ class Trust:
         return max(4, 2 * mean)
 
     def _cfg_for(self, r_total: int, capacity: Optional[int]) -> ChannelConfig:
-        cap = capacity or (self.cfg.capacity if self.cfg.capacity > 1
-                           else self._auto_capacity(r_total))
+        # ``None`` means "use the entrusted config" (whose 0 means auto);
+        # any explicit positive capacity — including 1 — wins verbatim
+        if capacity is None:
+            capacity = self.cfg.capacity
+        cap = capacity if capacity > 0 else self._auto_capacity(r_total)
         over = cap if self.cfg.overflow == "second_round" else 0
         return dataclasses.replace(
             self.cfg, capacity=cap,
@@ -262,14 +280,26 @@ class Trust:
                cfg.capacity, cfg.overflow_capacity)
         if key not in self._exec_cache:
             self._exec_cache[key] = self._build_exec(batches, cfg)
-        new_state, resp_flat = self._exec_cache[key](
+        new_state, resp_flat, rounds, residual = self._exec_cache[key](
             self._state, [b[1] for b in batches], [b[2] for b in batches])
+        # lazily-readable drain telemetry (rounds executed / rows unserved)
+        self._last_stats = (rounds, residual)
         # split fused responses back per batch
         out, off = [], 0
         for n in sizes:
             out.append(jax.tree.map(lambda l: l[off:off + n], resp_flat))
             off += n
         return new_state, out
+
+    def last_drain_stats(self) -> Dict[str, int]:
+        """Telemetry from the most recent channel execution: rounds used and
+        the global residual row count (rows still unserved — nonzero only
+        when ``overflow="defer"`` ran out of ``max_rounds``)."""
+        assert getattr(self, "_last_stats", None) is not None, \
+            "no delegation round has executed yet"
+        rounds, residual = self._last_stats
+        return {"rounds": int(jax.device_get(rounds)[0]),
+                "residual": int(jax.device_get(residual)[0])}
 
     def _build_exec(self, batches, cfg: ChannelConfig):
         mesh = self.group.mesh
@@ -323,21 +353,38 @@ class Trust:
                         [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
                     rows)
 
+            # any defer config routes through the drain engine so the
+            # rounds/residual telemetry is truthful even at max_rounds=1
+            # (delegate_drain degenerates to one round + residual psum)
+            drain = cfg.overflow == "defer"
+
             def shard_fn(state_shard, dst_l, rows_l):
-                new_state, resp, _ = ch.delegate(
-                    state_shard, dst_l, rows_l, serve, self.n_trustees, cfg)
-                return new_state, resp
+                if drain:
+                    new_state, resp, info = ch.delegate_drain(
+                        state_shard, dst_l, rows_l, serve, self.n_trustees,
+                        cfg)
+                    rounds, residual = info.rounds, info.residual
+                else:
+                    new_state, resp, _ = ch.delegate(
+                        state_shard, dst_l, rows_l, serve, self.n_trustees,
+                        cfg)
+                    rounds, residual = jnp.int32(1), jnp.int32(0)
+                # identical on every shard (the drain loop count is psum-
+                # synchronized), so P(None) replication below is sound
+                return (new_state, resp, jnp.reshape(rounds, (1,)),
+                        jnp.reshape(residual, (1,)))
 
             in_specs = (self.state_specs, req_spec,
                         jax.tree.map(lambda _: req_spec, rows))
             out_specs = (self.state_specs,
-                         jax.tree.map(lambda _: req_spec, resp_like))
+                         jax.tree.map(lambda _: req_spec, resp_like),
+                         P(None), P(None))
             f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
-            new_state, resp = f(state, dst, rows)
+            new_state, resp, rounds, residual = f(state, dst, rows)
             if pad:
                 resp = jax.tree.map(lambda l: l[:r_total], resp)
-            return new_state, resp
+            return new_state, resp, rounds, residual
 
         return jax.jit(fused)
 

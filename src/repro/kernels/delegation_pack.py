@@ -73,12 +73,22 @@ def _pack_kernel(dst_ref, payload_ref, slots_ref, counts_ref, reqslot_ref,
                    static_argnames=("n_trustees", "capacity", "br", "interpret"))
 def delegation_pack(dst: jax.Array, payload: jax.Array, *, n_trustees: int,
                     capacity: int, br: int = 256, interpret: bool = True):
-    """dst: (R,) int32 in [-1, T); payload: (R, W).
+    """dst: (R,) int32 in [-1, T); payload: (R, W).  Any R works: ragged
+    request counts are padded to a tile multiple with inactive rows
+    (dst = -1, zero payload) and the padding is sliced back off the
+    request_slot output.
     Returns (slots (T*C, W) f32, counts (T,) i32, request_slot (R,) i32)."""
     r, w = payload.shape
-    br = min(br, r)
-    assert r % br == 0
-    n_tiles = r // br
+    # shrink the tile for small batches but keep it lane-aligned: a ragged
+    # block like (1, 97) would not lower on real TPU hardware
+    br = min(br, -(-r // 128) * 128)
+    pad = (-r) % br
+    if pad:
+        dst = jnp.concatenate([dst, jnp.full((pad,), -1, dst.dtype)])
+        payload = jnp.concatenate(
+            [payload, jnp.zeros((pad, w), payload.dtype)], 0)
+    rp = r + pad
+    n_tiles = rp // br
     grid = (n_tiles,)
     t, c = n_trustees, capacity
 
@@ -98,9 +108,9 @@ def delegation_pack(dst: jax.Array, payload: jax.Array, *, n_trustees: int,
         out_shape=[
             jax.ShapeDtypeStruct((t * c, w), jnp.float32),
             jax.ShapeDtypeStruct((1, t), jnp.int32),
-            jax.ShapeDtypeStruct((1, r), jnp.int32),
+            jax.ShapeDtypeStruct((1, rp), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, t), jnp.float32)],
         interpret=interpret,
-    )(dst.reshape(1, r), payload.reshape(1, r, w))
-    return slots, counts.reshape(t), request_slot.reshape(r)
+    )(dst.reshape(1, rp), payload.reshape(1, rp, w))
+    return slots, counts.reshape(t), request_slot.reshape(rp)[:r]

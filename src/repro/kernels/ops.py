@@ -34,19 +34,55 @@ def _pad_to(x: jax.Array, axis: int, mult: int):
     return jnp.pad(x, widths), size
 
 
+def int_split_f32(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Encode an integer matrix as two f32 planes (hi/lo 16 bits of the
+    two's-complement pattern).  Each plane's values are < 2**16, hence exactly
+    representable in float32 — the MXU scatter matmul moves them losslessly
+    where a single-plane f32 cast would corrupt magnitudes above 2**24."""
+    assert x.dtype.itemsize <= 4, \
+        f"exact split covers <= 32-bit integers, got {x.dtype}"
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.int32), jnp.uint32)
+    hi = (u >> 16).astype(jnp.float32)
+    lo = (u & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    return hi, lo
+
+
+def int_join_f32(hi: jax.Array, lo: jax.Array, dtype) -> jax.Array:
+    """Inverse of ``int_split_f32`` (zero rows decode to integer zero)."""
+    u = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(u, jnp.int32).astype(dtype)
+
+
+def delegation_pack_planes(dst, planes, n_trustees: int, capacity: int,
+                           interpret: bool = True, br: int = 256):
+    """Pallas pack over a pre-encoded f32 plane matrix (R, W).  Handles the
+    128-lane padding; ragged R is padded inside the kernel wrapper.  Returns
+    (slots (T*C, W) f32, counts (T,) i32, request_slot (R,) i32)."""
+    planesp, w = _pad_to(planes, 1, 128)
+    slots, counts, req = _pack_pallas(
+        dst, planesp, n_trustees=n_trustees, capacity=capacity, br=br,
+        interpret=interpret)
+    return slots[:, :w], counts, req
+
+
 def delegation_pack(dst, payload, n_trustees: int, capacity: int,
                     impl: str = "ref", interpret: bool = True):
     if impl == "ref":
         return ref.delegation_pack(dst, payload, n_trustees, capacity)
-    dstp, r = _pad_to(dst, 0, 256)
-    if dstp.shape[0] != r:
-        dstp = dstp.at[r:].set(-1)
-    payloadp, _ = _pad_to(payload, 0, 256)
-    payloadp, w = _pad_to(payloadp, 1, 128)
-    slots, counts, req = _pack_pallas(
-        dstp, payloadp, n_trustees=n_trustees, capacity=capacity,
+    dtype = payload.dtype
+    if jnp.issubdtype(dtype, jnp.integer) or dtype == jnp.bool_:
+        # exact integer path: route the hi/lo 16-bit planes through the MXU
+        # scatter and reassemble — bit-exact for the full int32 range
+        w = payload.shape[1]
+        hi, lo = int_split_f32(payload)
+        slots, counts, req = delegation_pack_planes(
+            dst, jnp.concatenate([hi, lo], 1), n_trustees, capacity,
+            interpret=interpret)
+        return int_join_f32(slots[:, :w], slots[:, w:2 * w], dtype), counts, req
+    slots, counts, req = delegation_pack_planes(
+        dst, payload.astype(jnp.float32), n_trustees, capacity,
         interpret=interpret)
-    return (slots[:, :w].astype(payload.dtype), counts, req[:r])
+    return slots.astype(dtype), counts, req
 
 
 def grouped_matmul(x, w, impl: str = "ref", interpret: bool = True,

@@ -31,6 +31,12 @@ def main(argv=None):
                          "reserved trustee cores (dedicated)")
     ap.add_argument("--n-dedicated", type=int, default=0,
                     help="dedicated trustee cores (default: half the mesh)")
+    ap.add_argument("--drain-rounds", type=int, default=1,
+                    help="defer-drain bound for the session ledger: > 1 "
+                         "switches the ledger channel to overflow='defer' "
+                         "with a small primary block and drains deferred "
+                         "increments over up to this many bounded retry "
+                         "rounds (enables the ledger in shared mode too)")
     args = ap.parse_args(argv)
 
     import jax
@@ -99,12 +105,19 @@ def main(argv=None):
     # flag — its per-token channel round rides inside the timed loop, so
     # default (shared) runs keep the exact pre-ledger step timings.
     ledger = None
-    if args.delegation_mode == "dedicated":
+    if args.delegation_mode == "dedicated" or args.drain_rounds > 1:
         from ..core import DelegatedKVStore
         led_mode, led_n = meshctx.delegation_mode()
+        if args.drain_rounds > 1:
+            # small primary block + bounded defer drain: the per-token
+            # increments trickle through multi-round backpressure instead of
+            # a worst-case-sized slot buffer (paper §5.1 wait semantics)
+            led_kw = dict(capacity=1, overflow="defer",
+                          max_rounds=args.drain_rounds)
+        else:
+            led_kw = dict(capacity=max(4, args.batch))
         ledger = DelegatedKVStore(mesh, n_keys=args.batch, value_width=1,
-                                  capacity=max(4, args.batch),
-                                  mode=led_mode, n_dedicated=led_n)
+                                  mode=led_mode, n_dedicated=led_n, **led_kw)
         ledger.prefill(np.zeros((args.batch, 1), np.float32))
         led_keys = jnp.arange(args.batch, dtype=jnp.int32)
         led_ones = jnp.ones((args.batch, 1), jnp.float32)
@@ -125,6 +138,11 @@ def main(argv=None):
         counts = ledger.dump()[:, 0].astype(int)
         print(f"[serve] ledger ({args.delegation_mode}): generated tokens "
               f"per request = {counts.tolist()}", flush=True)
+        if args.drain_rounds > 1:
+            stats = ledger.trust.last_drain_stats()
+            print(f"[serve] ledger drain: {stats['rounds']} round(s) in the "
+                  f"last step, residual {stats['residual']} (bound "
+                  f"{args.drain_rounds})", flush=True)
     total_steps = args.prompt_len + args.gen - 1
     print(f"[serve] {total_steps} steps in {dt:.2f}s "
           f"({1e3*dt/total_steps:.1f} ms/step, "

@@ -1,0 +1,255 @@
+"""Drain-engine differential battery — executed as a SUBPROCESS with 8
+simulated host devices (the main pytest process stays single-device per the
+dry-run protocol).
+
+Asserts the acceptance property of the defer drain engine: with per-client
+disjoint key sets (conflicting keys never cross clients — the inter-client
+interleaving caveat of DESIGN.md §4 applies to rounds exactly as it does to
+second_round blocks), a small-capacity ``overflow="defer"`` store drained
+over bounded retry rounds is bit-identical — every GET/PUT/ADD/CAS response
+batch and the final table — to a single round with capacity >= the batch, in
+shared, shared+shortcut, and dedicated modes.  Also checks residual
+reporting/conservation when ``max_rounds`` is too small, and the Pallas pack
+fast path end-to-end through the store (alone and under the drain loop).
+
+Prints one JSON dict of named check results; tests/test_drain_battery.py
+asserts on them.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+N_KEYS = 120
+VW = 2
+R = 64               # rows per channel round
+N_TRACE = 8          # trace rounds per mode
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def owned_keys(n_trustees: int, n_clients: int):
+    """Per-client disjoint key sets: client c owns {k : (k//T) % C == c}.
+    Every client's set spans all trustees (trustee = k % T), so capacity
+    pressure builds on (client, trustee) pairs without cross-client key
+    conflicts — the regime where drain rounds preserve bit-identity."""
+    own = {c: np.array([k for k in range(N_KEYS)
+                        if (k // n_trustees) % n_clients == c])
+           for c in range(n_clients)}
+    assert all(len(v) for v in own.values())
+    return own
+
+
+def gen_trace(seed, n_trustees, n_clients):
+    """Random GET/PUT/ADD/CAS trace; each row's client is fixed by its batch
+    position (row i -> client i // ceil(R/C), matching Trust's repacking),
+    and keys are drawn from that client's owned set, skewed onto a few keys
+    so per-pair demand exceeds small capacities (multi-round drains)."""
+    from repro.core import SequentialKVReference
+    rng = np.random.default_rng(seed)
+    own = owned_keys(n_trustees, n_clients)
+    r_per = -(-R // n_clients)
+    client_of = np.minimum(np.arange(R) // r_per, n_clients - 1)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    ref = SequentialKVReference(N_KEYS, VW)
+    ref.prefill(init)
+    rounds = []
+    for _ in range(N_TRACE):
+        op = ["get", "put", "add", "cas"][int(rng.integers(0, 4))]
+        if op == "cas":
+            # one CAS per key per round: every CAS in a single channel round
+            # races against the round-START snapshot, so a key CAS'd twice
+            # by one client resolves differently when its rows straddle
+            # drain rounds — distinct keys keep the identity exact while the
+            # distinct-key pair demand still overflows capacity 1
+            per_client = {c: rng.choice(own[c], size=min(len(own[c]),
+                                                         r_per),
+                                        replace=False)
+                          for c in range(n_clients)}
+            idx = np.arange(R) - client_of * r_per
+            keys = np.array([per_client[c][i % len(per_client[c])]
+                             for c, i in zip(client_of, idx)], np.int32)
+        else:
+            keys = np.array([rng.choice(own[c][:max(2, len(own[c]) // 3)])
+                             for c in client_of], np.int32)
+        vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+        expect = None
+        if op == "cas":
+            live = ref.table[keys].copy()
+            rand = rng.integers(0, 8, (R, VW)).astype(np.float32)
+            expect = np.where(rng.random(R)[:, None] < 0.5, live, rand)
+        rounds.append((op, keys, vals, expect))
+        # keep the reference live for CAS expect generation
+        if op == "put":
+            ref.put(keys, vals)
+        elif op == "add":
+            ref.add(keys, vals)
+        elif op == "cas":
+            ref.cas(keys, expect, vals)
+    return init, rounds
+
+
+def replay(store, rounds, collect_stats=False):
+    outs, max_rounds_used, residuals = [], 0, []
+    for op, keys, vals, expect in rounds:
+        k = jnp.asarray(keys)
+        if op == "get":
+            outs.append(("value", np.asarray(store.get(k))))
+        elif op == "put":
+            store.put(k, jnp.asarray(vals))
+            outs.append(("none", None))
+        elif op == "add":
+            outs.append(("value", np.asarray(store.add(k, jnp.asarray(vals)))))
+        else:
+            flags, old = store.cas(k, jnp.asarray(expect), jnp.asarray(vals))
+            outs.append(("cas", (np.asarray(flags), np.asarray(old))))
+        if collect_stats:
+            stats = store.trust.last_drain_stats()
+            max_rounds_used = max(max_rounds_used, stats["rounds"])
+            residuals.append(stats["residual"])
+    return outs, store.dump(), max_rounds_used, residuals
+
+
+def assert_identical(got, want, what):
+    kind_g, g = got
+    kind_w, w = want
+    assert kind_g == kind_w
+    if kind_g == "none":
+        return
+    if kind_g == "cas":
+        assert np.array_equal(g[0], w[0]), f"{what}: cas flags differ"
+        assert np.array_equal(g[1], w[1]), f"{what}: cas old values differ"
+    else:
+        assert np.array_equal(g, w), f"{what}: responses differ"
+
+
+def run_drain_differential(mode_kw, n_trustees, n_clients, seed, what,
+                           max_rounds=32):
+    from repro.core import DelegatedKVStore
+    mesh = mesh2x4()
+    init, rounds = gen_trace(seed, n_trustees, n_clients)
+    big = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R, **mode_kw)
+    big.prefill(init)
+    want, want_table, _, _ = replay(big, rounds)
+    dr = DelegatedKVStore(mesh, N_KEYS, VW, capacity=1, overflow="defer",
+                          max_rounds=max_rounds, **mode_kw)
+    dr.prefill(init)
+    got, got_table, used, residuals = replay(dr, rounds, collect_stats=True)
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert_identical(g, w, f"{what} round {i} ({rounds[i][0]})")
+    assert np.array_equal(got_table, want_table), f"{what}: table differs"
+    assert used > 1, f"{what}: drain never used a second round ({used})"
+    assert max(residuals) == 0, f"{what}: rows left unserved {residuals}"
+
+
+# ---------------------------------------------------------------------------
+@check("shared_drain_bit_identical")
+def _shared():
+    run_drain_differential({"local_shortcut": False}, 8, 8, seed=50,
+                           what="shared/no-shortcut")
+
+
+@check("shared_shortcut_drain_bit_identical")
+def _shared_shortcut():
+    run_drain_differential({"local_shortcut": True}, 8, 8, seed=51,
+                           what="shared/shortcut")
+
+
+@check("dedicated_drain_bit_identical")
+def _dedicated():
+    run_drain_differential({"mode": "dedicated", "n_dedicated": 3}, 3, 5,
+                           seed=52, what="dedicated(2x4,T=3)")
+
+
+@check("drain_residual_conservation")
+def _residual():
+    """max_rounds too small: residual reported, and exactly R - residual
+    increments committed (nothing lost, nothing double-applied)."""
+    from repro.core import DelegatedKVStore
+    mesh = mesh2x4()
+    st = DelegatedKVStore(mesh, N_KEYS, VW, capacity=1, overflow="defer",
+                          max_rounds=2, local_shortcut=False)
+    init = np.zeros((N_KEYS, VW), np.float32)
+    st.prefill(init)
+    keys = np.zeros(R, np.int32)             # every row -> key 0
+    ones = np.ones((R, VW), np.float32)
+    st.add(jnp.asarray(keys), jnp.asarray(ones))
+    stats = st.trust.last_drain_stats()
+    # 8 clients x 1 slot x 2 rounds = 16 served of 64
+    assert stats["rounds"] == 2, stats
+    assert stats["residual"] == R - 16, stats
+    assert st.dump()[0, 0] == 16.0, st.dump()[0]
+
+
+@check("pallas_store_differential")
+def _pallas_store():
+    """pack_impl='pallas' through the full store == 'ref', bit-for-bit,
+    including second_round overflow blocks."""
+    from repro.core import DelegatedKVStore
+    mesh = mesh2x4()
+    init, rounds = gen_trace(60, 8, 8)
+    rounds = rounds[:4]
+    stores = {}
+    for impl in ("ref", "pallas"):
+        st = DelegatedKVStore(mesh, N_KEYS, VW, capacity=4,
+                              overflow="second_round", overflow_capacity=4,
+                              local_shortcut=False, pack_impl=impl)
+        st.prefill(init)
+        stores[impl] = replay(st, rounds)
+    got, got_table = stores["pallas"][:2]
+    want, want_table = stores["ref"][:2]
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert_identical(g, w, f"pallas round {i} ({rounds[i][0]})")
+    assert np.array_equal(got_table, want_table), "pallas: table differs"
+
+
+@check("pallas_drain_combined")
+def _pallas_drain():
+    """The Pallas pack kernel inside the drain while_loop == the lax pack
+    under the same drain (kernel + bounded-retry paths compose)."""
+    from repro.core import DelegatedKVStore
+    mesh = mesh2x4()
+    init, rounds = gen_trace(61, 8, 8)
+    rounds = [r for r in rounds if r[0] == "add"][:2] or rounds[:2]
+    out = {}
+    for impl in ("ref", "pallas"):
+        st = DelegatedKVStore(mesh, N_KEYS, VW, capacity=1, overflow="defer",
+                              max_rounds=16, local_shortcut=False,
+                              pack_impl=impl)
+        st.prefill(init)
+        out[impl] = replay(st, rounds, collect_stats=True)
+    for i, (g, w) in enumerate(zip(out["pallas"][0], out["ref"][0])):
+        assert_identical(g, w, f"pallas-drain round {i}")
+    assert np.array_equal(out["pallas"][1], out["ref"][1])
+    assert out["pallas"][2] == out["ref"][2] > 1, \
+        (out["pallas"][2], out["ref"][2])
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

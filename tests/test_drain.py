@@ -1,0 +1,151 @@
+"""Drain-engine (overflow="defer" + bounded retry rounds) and capacity
+sentinel tests that run in-process on the single-device mesh.
+
+The multi-device drain battery (shared / shortcut / dedicated bit-identity
+against a single large-capacity round) lives in tests/_drain_battery.py and
+is driven by tests/test_drain_battery.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import DelegatedKVStore, SequentialKVReference, channel as ch
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# capacity sentinel (regression): explicit capacity=1 must be honored
+# ---------------------------------------------------------------------------
+
+def test_entrust_capacity_one_is_honored():
+    """entrust(capacity=1) used to be silently replaced by auto-capacity
+    (entrust clamped via max(capacity, 1), _cfg_for tested > 1)."""
+    st = DelegatedKVStore(_mesh1(), 8, 1, capacity=1, overflow="drop",
+                          local_shortcut=False)
+    assert st.trust.cfg.capacity == 1
+    assert st.trust._cfg_for(1024, None).capacity == 1
+    # behavioral check: 3 requests to the 1 trustee, 1 slot -> 2 dropped
+    st.prefill(np.arange(1, 9, dtype=np.float32).reshape(8, 1))
+    out = np.asarray(st.get(jnp.array([0, 1, 2], jnp.int32)))
+    assert out[0, 0] == 1.0 and out[1, 0] == 0.0 and out[2, 0] == 0.0
+
+
+def test_entrust_capacity_auto_sentinel():
+    """None (and the legacy 0) still mean auto-size per batch."""
+    for cap in (None, 0):
+        st = DelegatedKVStore(_mesh1(), 8, 1, capacity=cap)
+        assert st.trust.cfg.capacity == 0
+        assert st.trust._cfg_for(1024, None).capacity == \
+            st.trust._auto_capacity(1024)
+    # per-call override beats the entrusted value, including capacity=1
+    st = DelegatedKVStore(_mesh1(), 8, 1, capacity=16)
+    assert st.trust._cfg_for(1024, 1).capacity == 1
+    assert st.trust._cfg_for(1024, None).capacity == 16
+
+
+# ---------------------------------------------------------------------------
+# drain engine, single device
+# ---------------------------------------------------------------------------
+
+def test_drain_matches_reference_single_device():
+    """capacity=1 + defer + enough rounds == the sequential reference, and
+    the engine actually used multiple rounds."""
+    n_keys, vw, r = 13, 2, 24
+    rng = np.random.default_rng(2)
+    init = rng.integers(0, 8, (n_keys, vw)).astype(np.float32)
+    st = DelegatedKVStore(_mesh1(), n_keys, vw, capacity=1, overflow="defer",
+                          max_rounds=r, local_shortcut=False)
+    st.prefill(init)
+    ref = SequentialKVReference(n_keys, vw)
+    ref.prefill(init)
+    keys = rng.integers(0, n_keys, r).astype(np.int32)
+    vals = rng.integers(0, 8, (r, vw)).astype(np.float32)
+    got = np.asarray(st.add(jnp.asarray(keys), jnp.asarray(vals)))
+    want = ref.add(keys, vals)
+    assert np.array_equal(got, want)
+    assert np.array_equal(st.dump(), ref.dump())
+    stats = st.trust.last_drain_stats()
+    assert stats["residual"] == 0
+    assert stats["rounds"] == r  # all 24 rows target one trustee, 1 slot
+
+
+def test_drain_residual_reported_when_max_rounds_too_small():
+    """max_rounds * capacity < demand: the residual count is reported, the
+    unserved rows keep zero responses, and served rows are still correct."""
+    n_keys, vw, r = 4, 1, 8
+    init = np.arange(1, n_keys + 1, dtype=np.float32).reshape(n_keys, 1)
+    st = DelegatedKVStore(_mesh1(), n_keys, vw, capacity=1, overflow="defer",
+                          max_rounds=3, local_shortcut=False)
+    st.prefill(init)
+    keys = np.zeros(r, np.int32)             # all 8 rows -> key 0, 1 slot
+    out = np.asarray(st.get(jnp.asarray(keys)))
+    stats = st.trust.last_drain_stats()
+    assert stats["rounds"] == 3
+    assert stats["residual"] == r - 3
+    assert (out[:3, 0] == 1.0).all()         # FIFO: first 3 rows served
+    assert (out[3:, 0] == 0.0).all()         # residual rows: zero responses
+
+
+def test_delegate_drain_channel_level_info():
+    """Channel-level API: rounds/residual/dropped in ChannelInfo, inside
+    shard_map on the 1-device mesh."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
+    cfg = ch.ChannelConfig(axis="model", capacity=2, overflow="defer",
+                           max_rounds=2)
+
+    def echo(state, received):
+        return state, {"v": received.rows["v"]}
+
+    def island(dst, payload):
+        _, resp, info = ch.delegate_drain(None, dst, payload, echo, 1, cfg)
+        return resp, info.dropped, jnp.reshape(info.rounds, (1,)), \
+            jnp.reshape(info.residual, (1,))
+
+    f = shard_map(island, mesh=mesh, in_specs=(P(None), P(None)),
+                  out_specs=(P(None), P(None), P(None), P(None)),
+                  check_rep=False)
+    r = 7                                    # 7 rows, 2 slots, 2 rounds -> 3 left
+    dst = jnp.zeros((r,), jnp.int32)
+    payload = {"v": jnp.arange(1.0, r + 1.0)}
+    resp, dropped, rounds, residual = jax.jit(f)(dst, payload)
+    assert int(rounds[0]) == 2 and int(residual[0]) == 3
+    assert np.array_equal(np.asarray(dropped),
+                          [False, False, False, False, True, True, True])
+    assert np.array_equal(np.asarray(resp["v"]), [1, 2, 3, 4, 0, 0, 0])
+
+
+def test_defer_single_round_reports_true_residual():
+    """Even at the default max_rounds=1, overflow='defer' routes through the
+    drain engine so last_drain_stats() reports the rows actually left
+    unserved (regression: the residual used to be hardcoded to 0)."""
+    st = DelegatedKVStore(_mesh1(), 8, 1, capacity=1, overflow="defer",
+                          local_shortcut=False)
+    st.prefill(np.arange(1, 9, dtype=np.float32).reshape(8, 1))
+    out = np.asarray(st.get(jnp.array([0, 1, 2], jnp.int32)))
+    stats = st.trust.last_drain_stats()
+    assert stats == {"rounds": 1, "residual": 2}
+    assert out[0, 0] == 1.0 and (out[1:, 0] == 0.0).all()
+
+
+def test_drain_single_round_equals_plain_defer():
+    """max_rounds=1 drain == plain defer delegate (the degenerate bound)."""
+    n_keys, vw, r = 8, 1, 6
+    init = np.arange(1, n_keys + 1, dtype=np.float32).reshape(n_keys, 1)
+    plain = DelegatedKVStore(_mesh1(), n_keys, vw, capacity=2,
+                             overflow="defer", local_shortcut=False)
+    drain = DelegatedKVStore(_mesh1(), n_keys, vw, capacity=2,
+                             overflow="defer", max_rounds=1,
+                             local_shortcut=False)
+    keys = np.zeros(r, np.int32)
+    for st in (plain, drain):
+        st.prefill(init)
+    a = np.asarray(plain.get(jnp.asarray(keys)))
+    b = np.asarray(drain.get(jnp.asarray(keys)))
+    assert np.array_equal(a, b)

@@ -1,0 +1,45 @@
+"""Multi-device drain-engine differential tests (see tests/_drain_battery.py).
+
+The battery replays seeded GET/PUT/ADD/CAS traces with per-client disjoint
+key sets through a capacity-1 ``overflow="defer"`` store drained over
+bounded retry rounds, and asserts bit-identity against a single round with
+sufficient capacity — in shared, shared+shortcut, and dedicated modes — plus
+residual reporting/conservation when ``max_rounds`` is too small and the
+Pallas pack path end-to-end.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_drain_battery.py")
+
+
+@pytest.fixture(scope="session")
+def drain_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "shared_drain_bit_identical",
+    "shared_shortcut_drain_bit_identical",
+    "dedicated_drain_bit_identical",
+    "drain_residual_conservation",
+    "pallas_store_differential",
+    "pallas_drain_combined",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_drain_multidevice(drain_battery, name):
+    res = drain_battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"

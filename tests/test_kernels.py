@@ -15,6 +15,94 @@ def _rand(shape, dtype):
 
 
 # ---------------------------------------------------------------------------
+# delegation_pack — Pallas MXU pack vs the lax oracle, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,cap,r", [
+    (4, 2, 256),      # tile-aligned
+    (4, 2, 100),      # ragged R < one tile
+    (3, 5, 300),      # ragged R > one tile
+    (8, 1, 37),       # ragged, capacity 1
+    (1, 4, 513),      # single trustee, one row past the tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_delegation_pack_matches_ref(t, cap, r, dtype):
+    rng = np.random.default_rng(11)
+    dst = jnp.asarray(rng.integers(-1, t, size=r), jnp.int32)
+    if dtype == jnp.int32:
+        payload = jnp.asarray(rng.integers(-2**30, 2**30, size=(r, 3)), dtype)
+    else:
+        payload = _rand((r, 3), dtype)
+    got = ops.delegation_pack(dst, payload, t, cap, impl="pallas")
+    exp = ref.delegation_pack(dst, payload, t, cap)
+    for g, e, what in zip(got, exp, ("slots", "counts", "request_slot")):
+        assert np.array_equal(np.asarray(g), np.asarray(e)), what
+        assert g.dtype == e.dtype, what
+
+
+def test_delegation_pack_int_exact_above_2pow24():
+    """Integer payloads ride a hi/lo 16-bit split through the f32 scatter
+    matmul, so keys above 2**24 (where f32 loses integer resolution) and
+    negative values survive bit-exactly."""
+    t, cap = 4, 4
+    vals = np.array([[2**24 + 1], [2**24 + 3], [2**31 - 5], [-2**24 - 7],
+                     [-1], [0], [16777217], [-2**31]], np.int32)
+    r = vals.shape[0]
+    dst = jnp.asarray(np.arange(r) % t, jnp.int32)
+    got_slots, counts, req = ops.delegation_pack(
+        dst, jnp.asarray(vals), t, cap, impl="pallas")
+    exp_slots, ecounts, ereq = ref.delegation_pack(
+        dst, jnp.asarray(vals), t, cap)
+    assert np.array_equal(np.asarray(got_slots), np.asarray(exp_slots))
+    assert np.array_equal(np.asarray(counts), np.asarray(ecounts))
+    assert np.array_equal(np.asarray(req), np.asarray(ereq))
+    # the naive single-plane f32 cast provably corrupts these magnitudes
+    assert int(np.float32(np.int32(2**24 + 1))) != 2**24 + 1
+
+
+def test_channel_pack_pallas_matches_ref_pytree():
+    """channel.pack(pack_impl='pallas') == the lax path on a mixed-dtype
+    payload pytree, including the second_round overflow block."""
+    from repro.core import channel as ch
+    rng = np.random.default_rng(23)
+    t, cap, r = 5, 3, 97
+    dst = jnp.asarray(rng.integers(-1, t, size=r), jnp.int32)
+    payload = {
+        "op": jnp.asarray(rng.integers(0, 4, r), jnp.int32),
+        "key": jnp.asarray(rng.integers(0, 2**31 - 1, r), jnp.int32),
+        "value": jnp.asarray(rng.normal(size=(r, 4)), jnp.float32),
+    }
+    for overflow, cap2 in (("drop", 0), ("defer", 0), ("second_round", 2)):
+        cfg_ref = ch.ChannelConfig(axis="model", capacity=cap,
+                                   overflow=overflow, overflow_capacity=cap2,
+                                   pack_impl="ref")
+        cfg_pal = ch.ChannelConfig(axis="model", capacity=cap,
+                                   overflow=overflow, overflow_capacity=cap2,
+                                   pack_impl="pallas")
+        pref, gs_ref = jax.jit(lambda d, p: ch.pack(d, p, t, cfg_ref))(
+            dst, payload)
+        ppal, gs_pal = jax.jit(lambda d, p: ch.pack(d, p, t, cfg_pal))(
+            dst, payload)
+        assert np.array_equal(np.asarray(gs_ref), np.asarray(gs_pal)), overflow
+        for name in ("counts", "request_slot", "dropped", "counts2"):
+            a, b = getattr(pref, name), getattr(ppal, name)
+            if a is None or b is None:
+                assert a is None and b is None, (overflow, name)
+                continue
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (overflow, name)
+        for name in ("slots", "slots2"):
+            a, b = getattr(pref, name), getattr(ppal, name)
+            if a is None or b is None:
+                assert a is None and b is None, (overflow, name)
+                continue
+            for ka in a:
+                assert a[ka].dtype == b[ka].dtype, (overflow, name, ka)
+                assert np.array_equal(np.asarray(a[ka]), np.asarray(b[ka])), \
+                    (overflow, name, ka)
+
+
+# ---------------------------------------------------------------------------
 # grouped_matmul
 # ---------------------------------------------------------------------------
 
