@@ -6,6 +6,10 @@
   * overflow mode: drop vs second_round vs defer (drain engine).
   * pack implementation: lax reference vs the MXU Pallas pack kernel
     (interpret mode off-TPU), same channel round either way.
+  * engine_multi: one MULTIPLEXED engine round serving two Trusts (KV table
+    + ledger) vs one solo channel round per Trust (DESIGN.md §8) — the
+    fused round pays one program dispatch and one all_to_all pair where the
+    per-trust path pays two of each.
 """
 from __future__ import annotations
 
@@ -106,6 +110,42 @@ def main(argv=None):
         st.prefill(np.zeros((n_keys, 1), np.float32))
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
         csv.add("pack_impl", f"cap2x_{impl}", impl, round(dt * 1e6, 1), 1.0)
+
+    # engine_multi: TWO Trusts (KV table + token ledger) per request wave —
+    # one multiplexed session.step() vs one solo round per Trust.  Same
+    # channel config either way; responses are block()ed so each setting
+    # pays its full dispatch + collective cost.
+    from repro.core import TrustSession
+    ses = TrustSession()
+    eng_impl = args.pack_impl if args.pack_impl in ("ref", "pallas") else "ref"
+    kw = dict(capacity=8 * mean_cap, local_shortcut=False,
+              pack_impl=eng_impl)
+    kv = DelegatedKVStore(mesh, n_keys, 1, session=ses, name="kv", **kw)
+    led = DelegatedKVStore(mesh, n_keys, 1, session=ses, name="ledger", **kw)
+    keys_b = jnp.asarray(sample_keys(rng, n_keys, R, "zipf"))
+    for st in (kv, led):
+        st.prefill(np.ones((n_keys, 1), np.float32))
+
+    def per_trust():
+        a = kv.add(keys, ones)
+        b = led.add(keys_b, ones)
+        block((a, b))
+        return a, b
+
+    def fused():
+        fa = kv.add_then(keys, ones)
+        fb = led.add_then(keys_b, ones)
+        ses.step()
+        block((fa.result()["value"], fb.result()["value"]))
+        return fa.result()["value"], fb.result()["value"]
+
+    out_a, out_b = fused()
+    served = float(np.mean([(np.asarray(out_a) != 0).any(1).mean(),
+                            (np.asarray(out_b) != 0).any(1).mean()]))
+    for setting, fn in (("per_trust", per_trust), ("fused", fused)):
+        dt = bench(fn, iters=4)
+        csv.add("engine_multi", setting, eng_impl,
+                round(dt * 1e6, 1), round(served, 4))
 
     if args.out:
         csv.dump(args.out)

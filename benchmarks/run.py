@@ -120,7 +120,11 @@ def write_bench_json(tag: str, args, summary) -> str:
                      "ops_per_s": 0.0 if failed else round(1e6 / us, 1),
                      "derived": derived,
                      "mode": fields.get("mode", args.mode),
-                     "pack_impl": fields.get("pack_impl", "")})
+                     "pack_impl": fields.get("pack_impl", ""),
+                     # engine_multi rows carry fused vs per_trust settings so
+                     # the trajectory tracks the multiplexed-round speedup
+                     "experiment": fields.get("experiment", ""),
+                     "setting": fields.get("setting", "")})
     path = artifact_path(f"BENCH_{tag}.json")
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:

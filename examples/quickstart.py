@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DelegatedKVStore, DelegatedOp, TrusteeGroup
+from repro.core import (DelegatedKVStore, DelegatedOp, TrusteeGroup,
+                        current_session)
 
 
 def main():
@@ -52,6 +53,23 @@ def main():
     old = store.add(jnp.array([3, 3, 3]), jnp.ones((3, 4)))
     print("three racing fetch-and-adds on key 3 returned (FIFO):",
           np.asarray(old[:, 0]))
+
+    # --- the session engine: ONE round for ALL trusts (DESIGN.md §8) --------
+    # every entrusted object registers with the ambient TrustSession;
+    # session.step() fuses all pending submits — here the KV store and a
+    # second counters table — into a single multiplexed channel round (one
+    # request all_to_all + one response transpose for everything)
+    session = current_session()
+    counters = DelegatedKVStore(mesh, n_keys=64, value_width=4,
+                                name="counters")
+    got = store.get_then(jnp.array([3, 5]))
+    counters.put_then(jnp.arange(4), jnp.ones((4, 4)))
+    bumped = counters.add_then(jnp.arange(4), jnp.ones((4, 4)))
+    session.step()              # ONE fused round serves both trusts
+    print("fused-round GET [3, 5] ->", np.asarray(got.result()["value"][:, 0]))
+    print("fused-round counters ->",
+          np.asarray(bumped.result()["value"][:, 0]))
+    print("engine stats:", session.last_stats())
 
     # --- dedicated mode: reserved trustee cores (paper's second runtime) ----
     # needs >= 2 devices: the trailing cores hold the table and serve the

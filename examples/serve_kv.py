@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DelegatedKVStore, FetchRMWStore, conflict_ranks
+from repro.core import (DelegatedKVStore, FetchRMWStore, conflict_ranks,
+                        current_session)
 from repro.core.routing import sample_keys
 
 
@@ -48,7 +49,10 @@ def main():
             st.trust.submit("put",
                             jnp.where(jnp.asarray(is_write), route, -1),
                             {"key": keys.astype(jnp.int32), "value": vals})
-            st.flush()
+            # session API: step() flushes EVERY registered trust's pending
+            # batches — with more entrusted objects in flight they would all
+            # ride this one multiplexed channel round (DESIGN.md §8)
+            current_session().step()
             return g.result()["value"]
         gk = jnp.where(jnp.asarray(~is_write), keys, -1)
         out = st.get(gk)

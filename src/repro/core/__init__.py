@@ -2,21 +2,26 @@
 #
 # channel.py   the delegation channel (pack/transmit/serve/respond/unpack)
 # trust.py     Trust / TrusteeGroup — the user-facing apply()/apply_then() API
+# engine.py    DelegationEngine / TrustSession — one multiplexed round for
+#              all Trusts + the adaptive capacity planner (DESIGN.md §8)
 # kvstore.py   DelegatedKVStore (paper §6.3)
 # lockstore.py lock-analog baselines (Fig. 6 competitors)
 # nested.py    launch()/nested delegation (chained channel rounds)
 # routing.py   key -> trustee routers + workload generators
-# meshctx.py   current-mesh threading for shard_map islands inside jit
+# meshctx.py   current-mesh + current-session threading for shard_map islands
 from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
                       DelegationFuture, Packed, Received, delegate,
                       delegate_async, delegate_drain, pack, respond,
-                      serve_optable, transmit, unpack)
+                      serve_multiplex, serve_optable, transmit, unpack)
+from .engine import (CapacityPlanner, DelegationEngine, TrustSession,
+                     check_payload_fields)
 from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
 from .kvstore import DelegatedKVStore, make_kv_ops
 from .lockstore import (AtomicAddStore, FetchRMWStore, SequentialKVReference,
                         conflict_ranks)
-from .meshctx import (constrain, current_mesh, delegation_mode,
-                      set_delegation_mode, set_mesh, use_mesh)
+from .meshctx import (constrain, current_mesh, current_session,
+                      delegation_mode, set_delegation_mode, set_mesh,
+                      set_session, use_mesh, use_session)
 from .routing import partition_clients_trustees, trustee_device_slot
 from .nested import launch_serve
 
@@ -24,11 +29,14 @@ __all__ = [
     "ChannelConfig", "ChannelInfo", "DelegatedOp", "DelegationFuture",
     "Packed", "Received",
     "delegate", "delegate_async", "delegate_drain", "pack", "respond",
-    "serve_optable",
+    "serve_multiplex", "serve_optable",
     "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
-    "local_trustees", "DelegatedKVStore", "make_kv_ops", "AtomicAddStore",
+    "local_trustees", "CapacityPlanner", "DelegationEngine", "TrustSession",
+    "check_payload_fields", "DelegatedKVStore", "make_kv_ops",
+    "AtomicAddStore",
     "FetchRMWStore", "SequentialKVReference", "conflict_ranks", "constrain",
-    "current_mesh", "delegation_mode", "set_delegation_mode", "use_mesh",
+    "current_mesh", "current_session", "delegation_mode",
+    "set_delegation_mode", "set_session", "use_mesh", "use_session",
     "set_mesh", "partition_clients_trustees", "trustee_device_slot",
     "launch_serve",
 ]

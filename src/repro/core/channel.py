@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,18 @@ class ChannelConfig:
     mode: str = "shared"           # "shared" | "dedicated" (paper's two runtimes)
     n_clients: int = 0             # dedicated only: client devices on the axis
     max_rounds: int = 1            # defer only: drain-engine round bound (§5.1)
+    wire_fmt: str = "tree"         # "tree" (one collective per payload leaf)
+    #                                | "planes" (ONE fused all_to_all per
+    #                                block: leaves encode into a single f32
+    #                                plane matrix, validity mask rides as an
+    #                                extra column — the multiplexed-engine
+    #                                wire format, bit-identical to "tree")
+    n_lanes: int = 1               # slot sub-lanes per destination slot: the
+    #                                multiplexed engine gives each Trust its
+    #                                own ``capacity`` rows inside every
+    #                                (client, trustee) block, so ``dst`` then
+    #                                carries VIRTUAL bins dst*n_lanes + lane
+    #                                and each lane keeps solo pack semantics
 
     def total_capacity(self) -> int:
         if self.overflow == "second_round":
@@ -128,7 +140,13 @@ def _encode_planes(payload: Pytree, r: int):
     for leaf in leaves:
         mat = leaf.reshape(r, -1)
         w = mat.shape[1]
-        if jnp.issubdtype(leaf.dtype, jnp.integer) or leaf.dtype == jnp.bool_:
+        if jnp.issubdtype(leaf.dtype, jnp.integer) and leaf.dtype.itemsize <= 2:
+            # <= 16-bit ints fit one f32 plane exactly (|v| < 2^16 << 2^24);
+            # the engine's op/trust id lanes ride this narrow path
+            planes.append(mat.astype(jnp.float32))
+            decs.append(("smallint", col, w, leaf.dtype, leaf.shape))
+            col += w
+        elif jnp.issubdtype(leaf.dtype, jnp.integer) or leaf.dtype == jnp.bool_:
             hi, lo = kops.int_split_f32(mat)
             planes.extend([hi, lo])
             decs.append(("int", col, w, leaf.dtype, leaf.shape))
@@ -150,6 +168,8 @@ def _decode_planes(slots: jax.Array, treedef, decs, n_rows: int) -> Pytree:
             block = kops.int_join_f32(slots[:, c0:c0 + w],
                                       slots[:, c0 + w:c0 + 2 * w], dt)
         else:
+            # "smallint" f32 planes hold exact integers; astype truncates
+            # back losslessly, same as the plain float path
             block = slots[:, c0:c0 + w].astype(dt)
         out.append(block.reshape((n_rows,) + shp[1:]))
     return jax.tree.unflatten(treedef, out)
@@ -241,18 +261,66 @@ def _a2a(x: jax.Array, axis: str, n: int) -> jax.Array:
     return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
 
 
+def _transmit_planes(packed: Packed, t: int, cfg: ChannelConfig) -> Received:
+    """``transmit`` with ``wire_fmt="planes"``: ONE all_to_all per block.
+
+    The payload pytree is flattened into a single f32 plane matrix (the same
+    exact encoding the Pallas pack kernel uses: floats upcast, integers split
+    into hi/lo 16-bit planes) and the per-slot validity mask — derived from
+    the count header — rides as one extra column.  The whole request move is
+    therefore a single collective instead of one per payload leaf plus a
+    counts header, which is what lets a multiplexed engine round lower to
+    exactly one request ``all_to_all``.  Bit-identical to the tree format.
+
+    ``t`` counts VIRTUAL bins (device slots x ``cfg.n_lanes``); the
+    collective still splits over the ``t_send`` device slots, moving each
+    device's ``n_lanes * c`` lane rows as one block."""
+    t_send = t // cfg.n_lanes
+
+    def send_block(slots, counts, c):
+        planes, treedef, decs = _encode_planes(slots, t * c)
+        validcol = (jnp.arange(c)[None, :] < counts[:, None]) \
+            .reshape(t * c, 1).astype(jnp.float32)
+        planes = jnp.concatenate([planes, validcol], 1)
+        planes = _a2a(planes.reshape(t_send, (t // t_send) * c, -1),
+                      cfg.axis, t_send).reshape(t * c, -1)
+        rows = _decode_planes(planes[:, :-1], treedef, decs, t * c)
+        valid = planes[:, -1] > 0.5
+        client = jnp.repeat(jnp.arange(t_send, dtype=jnp.int32),
+                            (t // t_send) * c)
+        return rows, valid, client
+
+    rows, valid, client = send_block(packed.slots, packed.counts, cfg.capacity)
+    if packed.slots2 is not None:
+        rows2, valid2, client2 = send_block(packed.slots2, packed.counts2,
+                                            cfg.overflow_capacity)
+        rows = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), rows, rows2)
+        valid = jnp.concatenate([valid, valid2])
+        client = jnp.concatenate([client, client2])
+    return Received(rows, valid, client)
+
+
 def transmit(packed: Packed, n_trustees: int, cfg: ChannelConfig) -> Received:
-    """Move request slots to their trustees (the delegation message)."""
+    """Move request slots to their trustees (the delegation message).
+
+    ``n_trustees`` counts destination BINS: device slots times
+    ``cfg.n_lanes`` (the engine's per-trust slot lanes; 1 for solo rounds).
+    """
     t, c1 = n_trustees, cfg.capacity
+    if cfg.wire_fmt == "planes":
+        return _transmit_planes(packed, t, cfg)
+    t_send = t // cfg.n_lanes
+    lanes = t // t_send
 
     def send_block(slots, counts, c):
         rows = jax.tree.map(
-            lambda l: _a2a(l.reshape((t, c) + l.shape[1:]), cfg.axis, t)
+            lambda l: _a2a(l.reshape((t_send, lanes * c) + l.shape[1:]),
+                           cfg.axis, t_send)
                         .reshape((t * c,) + l.shape[1:]),
             slots)
-        cnt = _a2a(counts.reshape(t, 1), cfg.axis, t).reshape(t)
+        cnt = _a2a(counts.reshape(t_send, lanes), cfg.axis, t_send).reshape(t)
         valid = (jnp.arange(c)[None, :] < cnt[:, None]).reshape(-1)
-        client = jnp.repeat(jnp.arange(t, dtype=jnp.int32), c)
+        client = jnp.repeat(jnp.arange(t_send, dtype=jnp.int32), lanes * c)
         return rows, valid, client
 
     rows, valid, client = send_block(packed.slots, packed.counts, c1)
@@ -266,12 +334,33 @@ def transmit(packed: Packed, n_trustees: int, cfg: ChannelConfig) -> Received:
 
 
 def respond(responses: Pytree, n_trustees: int, cfg: ChannelConfig) -> Pytree:
-    """Move response rows back to clients (matching response slot)."""
+    """Move response rows back to clients (matching response slot).
+    ``n_trustees`` counts bins (device slots x ``cfg.n_lanes``)."""
     t, c1 = n_trustees, cfg.capacity
     n1 = t * c1
+    t_send = t // cfg.n_lanes
+    lanes = t // t_send
+
+    if cfg.wire_fmt == "planes":
+        # one fused response transpose per block (see _transmit_planes)
+        def back_planes(block, c):
+            planes, treedef, decs = _encode_planes(block, t * c)
+            planes = _a2a(planes.reshape(t_send, lanes * c, -1),
+                          cfg.axis, t_send).reshape(t * c, -1)
+            return _decode_planes(planes, treedef, decs, t * c)
+
+        if cfg.overflow == "second_round" and cfg.overflow_capacity > 0:
+            c2 = cfg.overflow_capacity
+            p1 = jax.tree.map(lambda l: l[:n1], responses)
+            p2 = jax.tree.map(lambda l: l[n1:], responses)
+            return jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                back_planes(p1, c1), back_planes(p2, c2))
+        return back_planes(responses, c1)
 
     def back(leaf_block, c):
-        return _a2a(leaf_block.reshape((t, c) + leaf_block.shape[1:]), cfg.axis, t) \
+        return _a2a(leaf_block.reshape((t_send, lanes * c)
+                                       + leaf_block.shape[1:]),
+                    cfg.axis, t_send) \
                  .reshape((t * c,) + leaf_block.shape[1:])
 
     if cfg.overflow == "second_round" and cfg.overflow_capacity > 0:
@@ -343,22 +432,31 @@ def _to_device_slots(dst: jax.Array, n_trustees: int,
                      cfg: ChannelConfig) -> jax.Array:
     """Dedicated mode: translate trustee ids [0, T) to device slots on the
     axis and mask any request originating on a trustee shard (requests may
-    only come from client shards — the paper's reserved-core contract)."""
+    only come from client shards — the paper's reserved-core contract).
+    With ``n_lanes > 1`` dst carries virtual bins trustee*L + lane; the
+    translation shifts by ``n_clients`` whole device slots (L bins)."""
     if cfg.mode != "dedicated":
         return dst
     assert cfg.n_clients > 0, "dedicated mode needs n_clients > 0"
     from .routing import trustee_device_slot
     is_client = _flat_axis_index(cfg.axis) < cfg.n_clients
-    return trustee_device_slot(jnp.where(is_client, dst, -1), cfg.n_clients)
+    dst = jnp.where(is_client, dst, -1)
+    if cfg.n_lanes > 1:
+        return jnp.where(dst >= 0,
+                         dst + cfg.n_clients * cfg.n_lanes, -1) \
+            .astype(jnp.int32)
+    return trustee_device_slot(dst, cfg.n_clients)
 
 
-def _split_local(dst: jax.Array, payload: Pytree, axis):
+def _split_local(dst: jax.Array, payload: Pytree, axis, n_lanes: int = 1):
     """Local-trustee shortcut (§5.2.1): requests addressed to self skip the
     channel; they are appended to the trustee's serve batch directly, so one
     serve call processes channel + local rows in a single deterministic pass
-    (op-table order), exactly as if the trustee fiber handled them."""
+    (op-table order), exactly as if the trustee fiber handled them.  With
+    lanes, ``dst`` holds virtual bins — self-addressed means the DEVICE slot
+    (dst // n_lanes) is mine, whichever lane the row rides."""
     my_id = _my_trustee_id(axis)
-    local_mask = dst == my_id
+    local_mask = (dst // n_lanes) == my_id
     remote_dst = jnp.where(local_mask, -1, dst)
     local_recv = Received(rows=payload, valid=local_mask,
                           client=jnp.full(dst.shape, my_id, jnp.int32))
@@ -385,21 +483,28 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     the ``cfg.n_clients`` client shards, requests originating on trustee
     shards are masked off, and the local shortcut is disabled (a client is
     never its own trustee).
+
+    With ``cfg.n_lanes > 1`` (the multiplexed engine), ``dst`` holds virtual
+    bins ``trustee * n_lanes + lane``: every (client, trustee) block carries
+    one ``capacity`` sub-block per lane, so each lane (Trust) keeps exactly
+    its solo pack/capacity/FIFO semantics inside the shared message.
     """
     r = dst.shape[0]
     n_slots = cfg.n_slots(n_trustees)
+    n_bins = n_slots * cfg.n_lanes
     dst = _to_device_slots(dst, n_trustees, cfg)
     local_recv = local_mask = None
     if cfg.local_shortcut and cfg.mode != "dedicated":
-        dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis)
+        dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis,
+                                                   cfg.n_lanes)
         if n_slots == 1:
             new_state, local_resp = serve_fn(state, local_recv)
-            info = ChannelInfo(jnp.zeros((1,), jnp.int32),
+            info = ChannelInfo(jnp.zeros((n_bins,), jnp.int32),
                                jnp.zeros((r,), bool), 0)
             return new_state, local_resp, info
 
-    packed, group_sizes = pack(dst, payload, n_slots, cfg)
-    received = transmit(packed, n_slots, cfg)
+    packed, group_sizes = pack(dst, payload, n_bins, cfg)
+    received = transmit(packed, n_bins, cfg)
     n_chan = received.valid.shape[0]
     if local_recv is not None:
         received = _concat_received(received, local_recv)
@@ -407,12 +512,12 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
-    resp_at_client = respond(resp_rows, n_slots, cfg)
+    resp_at_client = respond(resp_rows, n_bins, cfg)
     responses = unpack(resp_at_client, packed.request_slot)
     if local_recv is not None:
         responses = _merge_local(responses, local_resp, local_mask)
     info = ChannelInfo(group_sizes, packed.dropped,
-                       n_slots * cfg.total_capacity())
+                       n_bins * cfg.total_capacity())
     return new_state, responses, info
 
 
@@ -510,19 +615,21 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
     """apply_then(): returns immediately after the serve phase."""
     r = dst.shape[0]
     n_slots = cfg.n_slots(n_trustees)
+    n_bins = n_slots * cfg.n_lanes
     dst = _to_device_slots(dst, n_trustees, cfg)
     local_recv = local_mask = local_resp = None
     if cfg.local_shortcut and cfg.mode != "dedicated":
-        dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis)
+        dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis,
+                                                   cfg.n_lanes)
         if n_slots == 1:
             new_state, local_resp = serve_fn(state, local_recv)
             fut = DelegationFuture(None, None, 1, cfg, local_resp, local_mask)
-            info = ChannelInfo(jnp.zeros((1,), jnp.int32),
+            info = ChannelInfo(jnp.zeros((n_bins,), jnp.int32),
                                jnp.zeros((r,), bool), 0)
             return new_state, fut, info
 
-    packed, group_sizes = pack(dst, payload, n_slots, cfg)
-    received = transmit(packed, n_slots, cfg)
+    packed, group_sizes = pack(dst, payload, n_bins, cfg)
+    received = transmit(packed, n_bins, cfg)
     n_chan = received.valid.shape[0]
     if local_recv is not None:
         received = _concat_received(received, local_recv)
@@ -530,10 +637,10 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
-    fut = DelegationFuture(resp_rows, packed.request_slot, n_slots, cfg,
+    fut = DelegationFuture(resp_rows, packed.request_slot, n_bins, cfg,
                            local_resp, local_mask)
     info = ChannelInfo(group_sizes, packed.dropped,
-                       n_slots * cfg.total_capacity())
+                       n_bins * cfg.total_capacity())
     return new_state, fut, info
 
 
@@ -563,7 +670,9 @@ def serve_optable(ops: Tuple[DelegatedOp, ...],
 
     def serve(state, received: Received):
         rows = received.rows
-        op_ids = rows["op"]
+        # the op lane may be omitted from the wire when the round carries a
+        # single op (it would be a constant column)
+        op_ids = rows.get("op") if hasattr(rows, "get") else rows["op"]
         out_resp = None
         for i in ids:
             m = received.valid & (op_ids == i) if len(ids) > 1 else received.valid
@@ -575,4 +684,144 @@ def serve_optable(ops: Tuple[DelegatedOp, ...],
                     m.reshape((-1,) + (1,) * (r.ndim - 1)), r, acc),
                 out_resp, resp)
         return state, out_resp
+    return serve
+
+
+def serve_multiplex(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
+                                           Tuple[int, ...]]],
+                    renames: Sequence[dict],
+                    merge_resp: bool = False) -> ServeFn:
+    """Merged serve table for one MULTIPLEXED round over several Trusts.
+
+    ``state`` is a tuple of per-trust state pytrees; request rows carry a
+    ``"trust"`` lane next to the ``"op"`` lane, and each trust's payload
+    fields live in the shared lane named by ``renames[tid][field]`` (fields
+    whose dtype/shape agree across trusts share one wire lane — the row sets
+    are disjoint so sharing is free; mismatched fields get per-trust lanes).
+    One deterministic pass dispatches per (trust, op): trust ``tid`` serves
+    the rows where ``rows["trust"] == tid`` through its own op table, with
+    its own state threaded — so intra-trust semantics are exactly those of a
+    solo round, and cross-trust order is (registration, op-table) order.
+
+    The response is a tuple of per-trust response trees (rows not belonging
+    to a trust stay zero in that trust's tree) — or, with ``merge_resp``
+    (legal whenever every trust's response structure matches), ONE tree with
+    each row carrying its own trust's response: the row sets are disjoint,
+    so merging halves the response-transpose bytes per extra trust."""
+    serves = tuple(serve_optable(ops, active) for ops, active in tables)
+
+    def serve(states, received: Received):
+        trust_col = received.rows["trust"]
+        new_states, resps = [], []
+        for tid, serve_t in enumerate(serves):
+            rows_t = {}
+            if "op" in received.rows:
+                rows_t["op"] = received.rows["op"]
+            for field, lane in renames[tid].items():
+                rows_t[field] = received.rows[lane]
+            recv_t = Received(rows_t,
+                              received.valid & (trust_col == tid),
+                              received.client)
+            s, r = serve_t(states[tid], recv_t)
+            new_states.append(s)
+            resps.append(r)
+        if merge_resp:
+            out = resps[0]
+            for tid in range(1, len(resps)):
+                m = trust_col == tid
+                out = jax.tree.map(
+                    lambda acc, r, mm=m: jnp.where(
+                        mm.reshape((-1,) + (1,) * (r.ndim - 1)), r, acc),
+                    out, resps[tid])
+            return tuple(new_states), out
+        return tuple(new_states), tuple(resps)
+    return serve
+
+
+def serve_multiplex_strided(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
+                                                   Tuple[int, ...]]],
+                            renames: Sequence[dict], n_lanes: int,
+                            t_send: int, c1: int, c2: int) -> ServeFn:
+    """``serve_multiplex`` for the LANE slot layout (``cfg.n_lanes > 1``).
+
+    With per-trust lanes the received buffer is block-structured: for each
+    of the ``t_send`` client blocks, lane ``tid`` owns a STATIC ``c1`` slice
+    of the primary block (and ``c2`` of the overflow block), followed by an
+    optional local-shortcut tail of whole request rows.  Each trust's serve
+    therefore gathers only its own ``t_send * (c1 + c2)`` channel rows plus
+    the shared tail — total serve work stays LINEAR in the number of trusts
+    (the masked ``serve_multiplex`` pays a full-buffer pass per trust).
+
+    Requires every trust's response structure to match (the caller falls
+    back to the masked variant otherwise): per-trust responses reassemble
+    into one merged buffer by restacking the lane slices, so the response
+    transpose moves each row's bytes exactly once."""
+    serves = tuple(serve_optable(ops, active) for ops, active in tables)
+    n1, n2 = t_send * n_lanes * c1, t_send * n_lanes * c2
+
+    def serve(states, received: Received):
+        rows, valid, client = received.rows, received.valid, received.client
+        n_local = valid.shape[0] - n1 - n2
+        assert n_local >= 0, \
+            "strided multiplex serve called with a non-lane row layout"
+
+        def sub(leaf, tid):
+            parts = [leaf[:n1]
+                     .reshape((t_send, n_lanes, c1) + leaf.shape[1:])[:, tid]
+                     .reshape((t_send * c1,) + leaf.shape[1:])]
+            if n2:
+                parts.append(
+                    leaf[n1:n1 + n2]
+                    .reshape((t_send, n_lanes, c2) + leaf.shape[1:])[:, tid]
+                    .reshape((t_send * c2,) + leaf.shape[1:]))
+            if n_local:
+                parts.append(leaf[n1 + n2:])
+            return jnp.concatenate(parts, 0) if len(parts) > 1 else parts[0]
+
+        # the trust lane is only on the wire when a local-shortcut tail
+        # exists (lane membership is the slot LAYOUT for channel rows)
+        trust_col = rows.get("trust")
+        assert trust_col is not None or not n_local, \
+            "local-shortcut tail needs the trust lane on the wire"
+        new_states, resps = [], []
+        for tid, serve_t in enumerate(serves):
+            rows_t = {}
+            if "op" in rows:
+                rows_t["op"] = sub(rows["op"], tid)
+            for field, lane in renames[tid].items():
+                rows_t[field] = sub(rows[lane], tid)
+            valid_t = sub(valid, tid)
+            if trust_col is not None:
+                # channel rows in lane tid always carry trust == tid; the
+                # mask only bites on the shared local-shortcut tail
+                valid_t = valid_t & (sub(trust_col, tid) == tid)
+            recv_t = Received(rows_t, valid_t, sub(client, tid))
+            s, r = serve_t(states[tid], recv_t)
+            new_states.append(s)
+            resps.append(r)
+
+        # reassemble one full response buffer from the per-trust sub-batches
+        lm = trust_col[n1 + n2:] if n_local else None
+
+        def join(*leaves):
+            shp = leaves[0].shape[1:]
+            parts = [jnp.stack(
+                [l[:t_send * c1].reshape((t_send, c1) + shp) for l in leaves],
+                1).reshape((n1,) + shp)]
+            if n2:
+                o1 = t_send * c1
+                parts.append(jnp.stack(
+                    [l[o1:o1 + t_send * c2].reshape((t_send, c2) + shp)
+                     for l in leaves], 1).reshape((n2,) + shp))
+            if n_local:
+                oL = t_send * (c1 + c2)
+                tail = leaves[0][oL:]
+                for tid in range(1, n_lanes):
+                    m = (lm == tid).reshape((-1,) + (1,) * (tail.ndim - 1))
+                    tail = jnp.where(m, leaves[tid][oL:], tail)
+                parts.append(tail)
+            return jnp.concatenate(parts, 0) if len(parts) > 1 else parts[0]
+
+        resp = jax.tree.map(join, *resps)
+        return tuple(new_states), resp
     return serve

@@ -1,0 +1,719 @@
+"""DelegationEngine — one multiplexed channel round for ALL Trusts.
+
+The paper's throughput comes from batching many requests per message (§5.3)
+and sizing the primary slot block for the mean load (§5.3.1).  Before this
+module, the runtime executed one SPMD program — and one ``all_to_all`` pair —
+*per Trust per step*: a serve step touching the KV table, the token ledger,
+and a lock store paid three channel rounds where the hardware could do one.
+"Bestow and Atomic" (Castegren et al.) makes the same observation for
+delegation generally: grouping delegated objects behind a shared message
+lane is what lets delegation scale past a single object.
+
+The engine (exposed as the ambient ``TrustSession`` via
+``meshctx.current_session()``) owns execution for every registered Trust:
+
+  * ``step()`` collects the pending ``submit`` batches of ALL dirty Trusts,
+    tags each row with a trust-id lane next to the op-id lane, and runs them
+    through a single fused ``shard_map`` program — one pack, one request
+    ``all_to_all`` (the "planes" wire format fuses payload leaves + validity
+    into one matrix), one trustee serve pass over a merged op table
+    dispatching per (trust, op) with each trust's state threaded separately,
+    and one response transpose.  Each Trust gets its new state and per-batch
+    responses back in request order.
+  * the compiled-program cache lives here, keyed on the multiplexed batch
+    signature (trust tokens x op ids x batch sizes x payload avals x
+    capacity) — it replaces the per-Trust ``_exec_cache``.
+  * a ``CapacityPlanner`` turns the per-trustee demand telemetry the channel
+    always computed (``group_sizes`` from ``_group_positions``, previously
+    discarded) into an EMA that auto-sizes ``capacity``/``overflow_capacity``
+    for the NEXT round, replacing the static 2x-mean heuristic for
+    engine-planned rounds; drain/defer stats are reported per trust via
+    ``last_stats()`` as ``{trust_name: {rounds, residual, demand_max}}``.
+
+Solo rounds (``Trust.apply`` / ``Trust.flush``) keep the pre-engine fast
+path bit-for-bit: the same per-trust program (tree wire format, no trust
+lane), just built and cached here.  See DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import weakref
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import channel as ch
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Fused-batch payload widening (and its mismatch guard)
+# ---------------------------------------------------------------------------
+
+def check_payload_fields(named_batches) -> Dict[str, Tuple[str, Tuple]]:
+    """Validate the zero-fill widening of a fused batch.
+
+    ``named_batches`` is a sequence of ``(label, payload_dict)``.  When two
+    queued ops share a payload field name, the fuse step zero-fills the op
+    that lacks it using the first op's leaf as the ``like`` template — which
+    silently corrupts the round if the two ops disagree on the field's dtype
+    or trailing shape.  Detect that and raise a clear error naming the field
+    and both ops.  Returns ``{field: (first_label, (dtype, trailing_shape))}``
+    so callers can reuse the (now verified) like templates."""
+    seen: Dict[str, Tuple[str, Tuple]] = {}
+    for label, payload in named_batches:
+        for name in sorted(payload.keys()):
+            leaf = jnp.asarray(payload[name])
+            sig = (leaf.dtype, tuple(leaf.shape[1:]))
+            if name not in seen:
+                seen[name] = (label, sig)
+            elif seen[name][1] != sig:
+                l0, s0 = seen[name]
+                raise ValueError(
+                    f"fused-batch payload field {name!r} is declared as "
+                    f"{s0[0]}{list(s0[1])} by op {l0!r} but as "
+                    f"{sig[0]}{list(sig[1])} by op {label!r}; ops fused into "
+                    f"one channel round must agree on the dtype and trailing "
+                    f"shape of shared payload fields (rename one of the "
+                    f"fields or flush between the two submissions)")
+    return seen
+
+
+def _payload_sig(payload: Pytree):
+    leaves, treedef = jax.tree.flatten(payload)
+    return (treedef, tuple((tuple(jnp.asarray(l).shape),
+                            str(jnp.asarray(l).dtype)) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Capacity planner (paper §5.3.1, adaptive)
+# ---------------------------------------------------------------------------
+
+class CapacityPlanner:
+    """EMA-based primary-block sizing.
+
+    The paper sizes the request slot for the mean load (§5.3.1); the seed
+    runtime hard-coded that as "2x the mean of THIS batch".  The planner
+    instead observes the realized max per-(client, trustee) pair demand of
+    each executed round — telemetry the pack phase always computed and
+    discarded — and plans the next round's ``capacity`` as
+    ``headroom * EMA``, quantized to powers of two so the number of distinct
+    compiled programs stays bounded.  Observations are kept as device values
+    and only resolved at ``plan()`` time, so the round that produced them is
+    never host-synced on the hot path."""
+
+    def __init__(self, alpha: float = 0.5, headroom: float = 1.5,
+                 min_capacity: int = 4):
+        self.alpha = alpha
+        self.headroom = headroom
+        self.min_capacity = min_capacity
+        self._ema: Dict[Any, float] = {}
+        self._staged: Dict[Any, Any] = {}
+
+    def observe(self, sig, demand_max) -> None:
+        self._staged[sig] = demand_max
+
+    def _resolve(self, sig) -> None:
+        staged = self._staged.pop(sig, None)
+        if staged is None:
+            return
+        d = float(np.asarray(jax.device_get(staged)).reshape(-1)[0])
+        prev = self._ema.get(sig)
+        self._ema[sig] = d if prev is None else \
+            self.alpha * d + (1.0 - self.alpha) * prev
+
+    def ema(self, sig) -> Optional[float]:
+        self._resolve(sig)
+        return self._ema.get(sig)
+
+    def plan(self, sig, fallback: int) -> int:
+        """Planned primary capacity, or ``fallback`` with no history yet."""
+        ema = self.ema(sig)
+        if ema is None or ema <= 0:
+            return fallback
+        need = max(1, int(math.ceil(self.headroom * ema)))
+        return max(self.min_capacity, 1 << (need - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+def _as_int(x) -> int:
+    """Host-resolve a stat entry: a scalar-ish array, or ``(array, idx)``
+    kept lazy so the hot path never slices a sharded array eagerly."""
+    if isinstance(x, tuple):
+        arr, idx = x
+        return int(np.asarray(jax.device_get(arr)).reshape(-1)[idx])
+    return int(np.asarray(jax.device_get(x)).reshape(-1)[0])
+
+
+class DelegationEngine:
+    """Session-wide execution engine for delegation rounds (``TrustSession``).
+
+    Trusts register here at ``entrust`` time (weakly — dropping every handle
+    to a Trust retires it and its cached programs).  ``submit`` marks a trust
+    dirty; ``step()`` flushes ALL dirty trusts, fusing channel-compatible
+    ones (same mesh/axes/mode/overflow/shortcut/pack_impl) into one
+    multiplexed round and flushing the rest solo.  ``apply``/``flush`` on a
+    single Trust always take the solo fast path."""
+
+    def __init__(self, planner: Optional[CapacityPlanner] = None):
+        self._trusts: Dict[int, Any] = {}
+        self._next_token = 0
+        self._dirty: List[int] = []
+        self._cache: Dict[Any, Tuple[Callable, Callable]] = {}
+        self.planner = planner if planner is not None else CapacityPlanner()
+        self._last_step_stats: Dict[str, Dict[str, Any]] = {}
+        self._stats_owner: Dict[str, int] = {}
+        self.last_step_info: Dict[str, Any] = {"fused": [], "solo": []}
+        # (unjitted fused fn, aval-shaped args) — jaxpr inspection in tests
+        self.last_exec = None
+
+    # -- registry -----------------------------------------------------------
+    def register(self, trust) -> int:
+        token = self._next_token
+        self._next_token += 1
+        self._trusts[token] = weakref.ref(trust)
+        return token
+
+    def trusts(self) -> List[Any]:
+        """Live registered trusts, in registration order."""
+        out = []
+        for tok in sorted(self._trusts):
+            t = self._trusts[tok]()
+            if t is not None:
+                out.append(t)
+        return out
+
+    def _prune(self) -> None:
+        dead = [tok for tok, ref in self._trusts.items() if ref() is None]
+        for tok in dead:
+            del self._trusts[tok]
+        if dead:
+            gone = set(dead)
+            self._cache = {k: v for k, v in self._cache.items()
+                           if not gone & set(k[1])}
+            self._dirty = [tok for tok in self._dirty if tok not in gone]
+
+    def notify(self, trust) -> None:
+        """A trust has pending submissions (called by ``Trust.submit``)."""
+        if trust.token not in self._dirty:
+            self._dirty.append(trust.token)
+
+    def unnotify(self, trust) -> None:
+        if trust.token in self._dirty:
+            self._dirty.remove(trust.token)
+
+    # -- telemetry ----------------------------------------------------------
+    def last_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-trust stats of the most recent engine round(s):
+        ``{trust_name: {rounds, residual, demand_max}}``."""
+        return {name: {k: _as_int(v) for k, v in d.items()}
+                for name, d in self._last_step_stats.items()}
+
+    # -- step: one multiplexed round for everything pending -----------------
+    def _mux_signature(self, trust):
+        # capacity/overflow_capacity are part of the signature: a trust's
+        # explicit slot budget is a SEMANTIC choice (what drops/defers), so
+        # trusts provisioned differently never fuse — each lane must keep
+        # its solo capacity behavior bit-for-bit
+        sig = getattr(trust, "_mux_sig", None)
+        if sig is None:
+            g, cfg = trust.group, trust.cfg
+            sig = (g.mesh, g.axes, g.mode, g.n_dedicated, cfg.overflow,
+                   cfg.local_shortcut, cfg.pack_impl, cfg.max_rounds,
+                   cfg.n_clients, cfg.capacity, cfg.overflow_capacity)
+            trust._mux_sig = sig
+        return sig
+
+    def step(self) -> Dict[str, Dict[str, int]]:
+        """Flush every pending batch in as few channel rounds as possible.
+
+        Channel-compatible trusts fuse into ONE multiplexed round; the rest
+        flush solo.  Returns ``last_stats()``."""
+        self._prune()
+        pending_trusts = []
+        for tok in list(self._dirty):
+            ref = self._trusts.get(tok)
+            t = ref() if ref is not None else None
+            if t is not None and t._pending:
+                pending_trusts.append(t)
+        self._dirty.clear()
+        self._last_step_stats = {}
+        self.last_step_info = {"fused": [], "solo": []}
+        groups: Dict[Any, List[Any]] = {}
+        for t in pending_trusts:
+            groups.setdefault(self._mux_signature(t), []).append(t)
+        remaining = [t for members in groups.values() for t in members]
+        try:
+            for members in groups.values():
+                if len(members) == 1:
+                    self.last_step_info["solo"].append(members[0].name)
+                    members[0].flush()
+                else:
+                    self.last_step_info["fused"].append(
+                        [t.name for t in members])
+                    self._run_mux(members)
+                for t in members:
+                    remaining.remove(t)
+        except Exception:
+            # one group failing must not strand the others' pending batches
+            # (the failed group restores its own queue and re-notifies)
+            for t in remaining:
+                if t._pending:
+                    self.notify(t)
+            raise
+        return self.last_stats()
+
+    # -- solo fast path (the pre-engine per-Trust program) ------------------
+    def run_solo(self, trust, batches, capacity: Optional[int] = None):
+        """Run ``batches`` of one trust through its own channel round.
+
+        Bit-identical to the pre-engine ``Trust._run``: same program, same
+        ordering, tree wire format — plus demand telemetry feeding the
+        planner.  Returns the per-batch responses in request order."""
+        sizes = [b[1].shape[0] for b in batches]
+        r_total = sum(sizes)
+        cfg = trust._cfg_for(r_total, capacity)
+        sig = ("solo", trust.token)
+        if (capacity is None and trust.cfg.capacity == 0
+                and trust.plan_capacity):
+            cap = self.planner.plan(sig, cfg.capacity)
+            over = cap if trust.cfg.overflow == "second_round" else 0
+            cfg = dataclasses.replace(
+                cfg, capacity=cap,
+                overflow_capacity=trust.cfg.overflow_capacity or over)
+        key = ("solo", (trust.token,),
+               tuple(b[0] for b in batches), tuple(sizes),
+               tuple(_payload_sig(b[2]) for b in batches),
+               cfg.capacity, cfg.overflow_capacity)
+        if key not in self._cache:
+            fn = _build_solo(trust, batches, cfg)
+            self._cache[key] = (jax.jit(fn), fn)
+        new_state, resps, rounds, residual, demand = self._cache[key][0](
+            trust._state, [b[1] for b in batches], [b[2] for b in batches])
+        trust._state = new_state
+        trust._last_stats = (rounds, residual)
+        self.planner.observe(sig, demand)
+        self._last_step_stats[self._stats_key(trust)] = {
+            "rounds": rounds, "residual": residual, "demand_max": demand}
+        return list(resps)
+
+    # -- the multiplexed round ----------------------------------------------
+    def _mux_cfg(self, trusts, r_totals) -> ch.ChannelConfig:
+        """One channel config for the fused round.  ``capacity`` is PER
+        LANE (each trust's own slot budget inside a (client, trustee)
+        block): the trusts' shared explicit capacity (capacity is part of
+        the fuse signature, so it is identical across the group), or — for
+        auto-capacity trusts — the planner's EMA-sized block, falling back
+        to the static per-trust mean rule before any history exists."""
+        base = trusts[0].cfg
+        explicit = [t.cfg.capacity for t in trusts if t.cfg.capacity > 0]
+        fallback = max(t._auto_capacity(rt)
+                       for t, rt in zip(trusts, r_totals))
+        cap = max(explicit) if explicit else 0
+        if any(t.cfg.capacity == 0 for t in trusts):
+            planned = self.planner.plan(
+                ("mux", self._mux_signature(trusts[0])), fallback)
+            cap = max(cap, planned)
+        over = 0
+        if base.overflow == "second_round":
+            over = max((t.cfg.overflow_capacity for t in trusts),
+                       default=0) or cap
+        return dataclasses.replace(base, capacity=cap,
+                                   overflow_capacity=over,
+                                   wire_fmt="planes")
+
+    def _stats_key(self, trust) -> str:
+        """Stats-dict key: the trust name, token-suffixed when a DIFFERENT
+        live trust already claimed that name — so e.g. two 'rmw-lock'
+        stores in one session never overwrite each other's stats."""
+        name = trust.name
+        owner = self._stats_owner.get(name)
+        if owner is None or owner == trust.token:
+            self._stats_owner[name] = trust.token
+            return name
+        return f"{name}#{trust.token}"
+
+    def _run_mux(self, trusts) -> None:
+        entries = []
+        for t in trusts:
+            pending, t._pending = t._pending, []
+            entries.append((t, pending))
+        try:
+            batches = [[(o, d, p) for (o, d, p, _f) in pend]
+                       for _t, pend in entries]
+            sizes = [[b[1].shape[0] for b in tb] for tb in batches]
+            cfg = self._mux_cfg(trusts, [sum(s) for s in sizes])
+            key = ("mux", tuple(t.token for t in trusts),
+                   tuple((tuple(b[0] for b in tb), tuple(sz),
+                          tuple(_payload_sig(b[2]) for b in tb))
+                         for tb, sz in zip(batches, sizes)),
+                   cfg.capacity, cfg.overflow_capacity)
+            if key not in self._cache:
+                fn = _build_mux(trusts, batches, cfg)
+                self._cache[key] = (jax.jit(fn), fn)
+            jitted, raw = self._cache[key]
+            states = tuple(t._state for t in trusts)
+            dsts = [[b[1] for b in tb] for tb in batches]
+            payloads = [[b[2] for b in tb] for tb in batches]
+            (new_states, resps, rounds, residual_pt,
+             demand_pt, demand_merged) = jitted(states, dsts, payloads)
+        except Exception:
+            # a build/dispatch error must not discard the queued batches:
+            # restore every member's queue (state is untouched) so callers
+            # can drop the offending submit and step again
+            for t, pend in entries:
+                t._pending = pend + t._pending
+                self.notify(t)
+            raise
+        # jaxpr-inspection hook: keep only shape/dtype avals, not the real
+        # arrays — holding the previous round's states/payloads alive would
+        # double the engine's memory footprint between steps
+        self.last_exec = (raw, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            (states, dsts, payloads)))
+        self.planner.observe(("mux", self._mux_signature(trusts[0])),
+                             demand_merged)
+        # per-batch responses were sliced INSIDE the program; stats stay
+        # lazily indexed — no eager host-side ops on sharded arrays here
+        for i, (t, pend) in enumerate(entries):
+            t._state = new_states[i]
+            t._last_stats = (rounds, (residual_pt, i))
+            self._last_step_stats[self._stats_key(t)] = {
+                "rounds": rounds, "residual": (residual_pt, i),
+                "demand_max": (demand_pt, i)}
+            for (_o, _d, _p, fut), resp in zip(pend, resps[i]):
+                fut._fulfil(resp)
+
+
+# ``TrustSession`` is the user-facing name (the paper-side concept: one
+# session, many entrusted objects, one message lane); ``DelegationEngine``
+# the implementation-side one.  Same class.
+TrustSession = DelegationEngine
+
+
+# ---------------------------------------------------------------------------
+# Program builders
+# ---------------------------------------------------------------------------
+
+def _demand_from_group_sizes(info: ch.ChannelInfo, axes_all) -> jax.Array:
+    """Max per-(client, trustee) pair demand over the whole mesh — the
+    §5.3.1 telemetry (``group_sizes``) the pack phase always computed."""
+    demand = lax.pmax(jnp.max(info.group_sizes), axes_all)
+    return jnp.reshape(demand.astype(jnp.int32), (1,))
+
+
+def _build_solo(trust, batches, cfg: ch.ChannelConfig) -> Callable:
+    """The per-Trust program (the pre-engine ``Trust._build_exec``), plus
+    demand telemetry: fuse the queued batches into one delegation round."""
+    mesh = trust.group.mesh
+    ops = trust.ops
+    resp_like = trust.resp_like
+    n_trustees = trust.n_trustees
+    op_ids = [b[0] for b in batches]
+    check_payload_fields(
+        [(ops[oid].name, p) for (oid, _d, p) in batches])
+    serve = ch.serve_optable(ops, active_ids=tuple(sorted(set(op_ids))))
+    # Request batches are sharded over the whole mesh.  Shared mode: every
+    # device is a client and originates its own slice.  Dedicated mode: the
+    # fused batch is repacked so all real rows land on the leading n_clients
+    # shards and trustee shards see only dst=-1 padding — requests originate
+    # on client shards only.
+    req_spec = P(tuple(mesh.axis_names))
+    axes_all = tuple(mesh.axis_names)
+    dedicated = trust.group.mode == "dedicated"
+    n_cli = trust.group.n_clients
+    n_dev = trust.group.axis_size
+    state_specs = trust.state_specs
+    batch_sizes = [b[1].shape[0] for b in batches]
+
+    single_op = len(set(op_ids)) == 1
+
+    def fused(state, dsts, payloads):
+        # concat batches, tag each row with its op id; a single-op round
+        # skips the lane (it would be a constant column on the wire)
+        dst = jnp.concatenate(dsts, 0)
+        rows = {} if single_op else {"op": jnp.concatenate(
+            [jnp.full((d.shape[0],), oid, jnp.int16)
+             for oid, d in zip(op_ids, dsts)], 0)}
+        names = set()
+        for p in payloads:
+            names |= set(p.keys())
+        for name in sorted(names):
+            parts = []
+            for p, d in zip(payloads, dsts):
+                if name in p:
+                    parts.append(p[name])
+                else:
+                    like = next(pp[name] for pp in payloads if name in pp)
+                    parts.append(jnp.zeros((d.shape[0],) + like.shape[1:],
+                                           like.dtype))
+            rows[name] = jnp.concatenate(parts, 0)
+
+        r_total = dst.shape[0]
+        # pad the fused batch so each ORIGIN shard gets an equal slice:
+        # dedicated mode packs all R rows onto the leading n_clients shards
+        # (trustee shards hold only inactive padding); shared mode pads
+        # ragged batches up to a multiple of the mesh size
+        n_origins = n_cli if dedicated else max(1, mesh.size)
+        r_dev = -(-r_total // n_origins)
+        pad = (n_dev if dedicated else mesh.size) * r_dev - r_total
+        if pad:
+            dst = jnp.concatenate(
+                [dst, jnp.full((pad,), -1, dst.dtype)], 0)
+            rows = jax.tree.map(
+                lambda l: jnp.concatenate(
+                    [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
+                rows)
+
+        # any defer config routes through the drain engine so the
+        # rounds/residual telemetry is truthful even at max_rounds=1
+        drain = cfg.overflow == "defer"
+
+        def shard_fn(state_shard, dst_l, rows_l):
+            if drain:
+                new_state, resp, info = ch.delegate_drain(
+                    state_shard, dst_l, rows_l, serve, n_trustees, cfg)
+                rounds, residual = info.rounds, info.residual
+            else:
+                new_state, resp, info = ch.delegate(
+                    state_shard, dst_l, rows_l, serve, n_trustees, cfg)
+                rounds, residual = jnp.int32(1), jnp.int32(0)
+            demand = _demand_from_group_sizes(info, axes_all)
+            # identical on every shard (the drain loop count is psum-
+            # synchronized), so P(None) replication below is sound
+            return (new_state, resp, jnp.reshape(rounds, (1,)),
+                    jnp.reshape(residual, (1,)), demand)
+
+        in_specs = (state_specs, req_spec,
+                    jax.tree.map(lambda _: req_spec, rows))
+        out_specs = (state_specs,
+                     jax.tree.map(lambda _: req_spec, resp_like),
+                     P(None), P(None), P(None))
+        f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+        new_state, resp, rounds, residual, demand = f(state, dst, rows)
+        # split the fused responses back per batch INSIDE the program (host-
+        # side slicing of sharded arrays would pay one dispatch per leaf)
+        resps, off = [], 0
+        for n in batch_sizes:
+            resps.append(jax.tree.map(lambda l, o=off, m=n: l[o:o + m],
+                                      resp))
+            off += n
+        return new_state, tuple(resps), rounds, residual, demand
+
+    return fused
+
+
+def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
+    """ONE multiplexed program for several trusts' queued batches.
+
+    Layout: rows concatenate in (trust, batch) order with ``"trust"`` and
+    ``"op"`` id lanes; payload fields whose dtype/trailing shape agree
+    across trusts share a wire lane (row sets are disjoint), mismatched
+    fields get per-trust lanes (``field@tid``).  One pack, one request
+    all_to_all (planes wire), one merged serve pass, one response
+    transpose; per-trust states thread independently through the serve, so
+    each trust's semantics are exactly its solo semantics over the engine's
+    row layout (DESIGN.md §8 ordering note)."""
+    group = trusts[0].group
+    mesh = group.mesh
+    n_trusts = len(trusts)
+    n_trustees = group.n_trustees
+    dedicated = group.mode == "dedicated"
+    n_cli = group.n_clients
+    n_dev = group.axis_size
+    req_spec = P(tuple(mesh.axis_names))
+    axes_all = tuple(mesh.axis_names)
+
+    # field plan: intra-trust mismatches are errors (zero-fill widening
+    # would corrupt); cross-trust mismatches get namespaced lanes
+    per_trust_fields: List[Dict[str, Tuple]] = []
+    for t, tb in zip(trusts, batches):
+        seen = check_payload_fields(
+            [(f"{t.name}.{t.ops[oid].name}", p) for (oid, _d, p) in tb])
+        per_trust_fields.append({name: sig for name, (_l, sig)
+                                 in seen.items()})
+    lane_of: List[Dict[str, str]] = [dict() for _ in range(n_trusts)]
+    for name in sorted(set().union(*[set(f) for f in per_trust_fields])):
+        sigs = {tid: f[name] for tid, f in enumerate(per_trust_fields)
+                if name in f}
+        shared = len(set(sigs.values())) == 1
+        for tid in sigs:
+            lane_of[tid][name] = name if shared else f"{name}@{tid}"
+
+    # one merged response tree when every trust's response structure agrees
+    # (the row sets are disjoint, so one tree carries them all and the
+    # response transpose moves each row's bytes once); otherwise a tuple of
+    # per-trust trees
+    def resp_sig(t):
+        leaves, treedef = jax.tree.flatten(t.resp_like)
+        return (treedef, tuple((tuple(jnp.asarray(l).shape[1:]),
+                                str(jnp.asarray(l).dtype)) for l in leaves))
+    merged_resp = len({resp_sig(t) for t in trusts}) == 1
+
+    # LANE slot layout (the fused round's core): each trust owns a static
+    # ``capacity`` sub-block of every (client, trustee) slot block, so pack
+    # bins by virtual destination dst*n_trusts + tid, each trust keeps its
+    # solo capacity/FIFO/drop semantics, and the strided serve touches each
+    # received row exactly once (work linear in n_trusts).  Falls back to
+    # the masked full-pass serve when response structures differ (no
+    # restacking possible) or the channel degenerates to local-only.
+    t_send = cfg.n_slots(n_trustees)
+    strided = merged_resp and not (t_send == 1 and cfg.local_shortcut)
+    if strided:
+        cfg = dataclasses.replace(cfg, n_lanes=n_trusts)
+    c2 = cfg.overflow_capacity \
+        if cfg.overflow == "second_round" and cfg.overflow_capacity > 0 else 0
+
+    tables = tuple((t.ops, tuple(sorted({oid for (oid, _d, _p) in tb})))
+                   for t, tb in zip(trusts, batches))
+    if strided:
+        serve = ch.serve_multiplex_strided(
+            tables, tuple(lane_of), n_lanes=n_trusts, t_send=t_send,
+            c1=cfg.capacity, c2=c2)
+    else:
+        serve = ch.serve_multiplex(tables, tuple(lane_of),
+                                   merge_resp=merged_resp)
+    state_specs = tuple(t.state_specs for t in trusts)
+    resp_specs = jax.tree.map(lambda _: req_spec, trusts[0].resp_like) \
+        if merged_resp else \
+        tuple(jax.tree.map(lambda _: req_spec, t.resp_like) for t in trusts)
+    # static row offsets per (trust, batch) in the fused trust-major layout
+    spans: List[List[Tuple[int, int]]] = []
+    off = 0
+    for tb in batches:
+        spans.append([])
+        for b in tb:
+            n = b[1].shape[0]
+            spans[-1].append((off, n))
+            off += n
+
+    # wire-lane economy: the op lane ships only when some trust dispatches
+    # more than one op this round; the trust lane ships only when the serve
+    # actually reads it (masked layout, or a local-shortcut tail in the
+    # strided layout) — otherwise lane membership IS the slot layout and
+    # the column stays off the wire (stats get it as a separate shard arg)
+    need_op = any(len(active) > 1 for _ops, active in tables)
+    need_trust_on_wire = (not strided) or cfg.local_shortcut
+
+    def fused(states, dsts, payloads):
+        flat = []   # (tid, oid, dst, payload) in (trust, batch) order
+        for tid, (tb_d, tb_p, tb) in enumerate(zip(dsts, payloads, batches)):
+            for (oid, _d0, _p0), d, p in zip(tb, tb_d, tb_p):
+                flat.append((tid, oid, d, p))
+        dst = jnp.concatenate([d for _t, _o, d, _p in flat], 0)
+        tid_col = jnp.concatenate(
+            [jnp.full((d.shape[0],), tid, jnp.int16)
+             for tid, _o, d, _p in flat], 0)
+        rows = {}
+        if need_op:
+            rows["op"] = jnp.concatenate(
+                [jnp.full((d.shape[0],), oid, jnp.int16)
+                 for _t, oid, d, _p in flat], 0)
+        if need_trust_on_wire:
+            rows["trust"] = tid_col
+        # like templates per lane (verified consistent above)
+        lane_like: Dict[str, jax.Array] = {}
+        for tid, _oid, _d, p in flat:
+            for fname, leaf in p.items():
+                lane_like.setdefault(lane_of[tid][fname], jnp.asarray(leaf))
+        for lane in sorted(lane_like):
+            parts = []
+            for tid, _oid, d, p in flat:
+                rev = {ln: f for f, ln in lane_of[tid].items()}
+                fname = rev.get(lane)
+                if fname is not None and fname in p:
+                    parts.append(p[fname])
+                else:
+                    like = lane_like[lane]
+                    parts.append(jnp.zeros((d.shape[0],) + like.shape[1:],
+                                           like.dtype))
+            rows[lane] = jnp.concatenate(parts, 0)
+
+        if strided:
+            # virtual bins: lane tid of trustee d is bin d*n_trusts + tid
+            dst = jnp.where(dst >= 0,
+                            dst * n_trusts + tid_col.astype(jnp.int32), -1)
+
+        r_total = dst.shape[0]
+        n_origins = n_cli if dedicated else max(1, mesh.size)
+        r_dev = -(-r_total // n_origins)
+        pad = (n_dev if dedicated else mesh.size) * r_dev - r_total
+        if pad:
+            dst = jnp.concatenate(
+                [dst, jnp.full((pad,), -1, dst.dtype)], 0)
+            tid_col = jnp.concatenate(
+                [tid_col, jnp.zeros((pad,), tid_col.dtype)], 0)
+            rows = jax.tree.map(
+                lambda l: jnp.concatenate(
+                    [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
+                rows)
+
+        drain = cfg.overflow == "defer"
+
+        def shard_fn(states_l, dst_l, rows_l, tid_l):
+            if drain:
+                new_states, resp, info = ch.delegate_drain(
+                    states_l, dst_l, rows_l, serve, n_trustees, cfg)
+                rounds = info.rounds
+            else:
+                new_states, resp, info = ch.delegate(
+                    states_l, dst_l, rows_l, serve, n_trustees, cfg)
+                rounds = jnp.int32(1)
+            tid32 = tid_l.astype(jnp.int32)
+            # per-trust residual (rows left unserved on any shard)
+            res_pt = jnp.zeros((n_trusts + 1,), jnp.int32).at[
+                jnp.where(info.dropped, tid32, n_trusts)].add(1)[:-1]
+            res_pt = lax.psum(res_pt, axes_all)
+            if strided:
+                # group_sizes is per virtual bin (device slot x lane): the
+                # §5.3.1 telemetry, now per trust for free
+                gs = info.group_sizes.reshape(-1, n_trusts)
+                demand_pt = lax.pmax(jnp.max(gs, axis=0), axes_all)
+            else:
+                # masked layout: per-trust max pair demand via scatter-add
+                # (post-shortcut, pre-capacity)
+                act = dst_l >= 0
+                if cfg.local_shortcut and not dedicated:
+                    act = act & (dst_l != ch._my_trustee_id(cfg.axis))
+                idx = jnp.where(act,
+                                tid32 * n_trustees
+                                + jnp.clip(dst_l, 0, n_trustees - 1),
+                                n_trusts * n_trustees)
+                pair = jnp.zeros((n_trusts * n_trustees + 1,), jnp.int32) \
+                    .at[idx].add(1)[:-1].reshape(n_trusts, n_trustees)
+                demand_pt = lax.pmax(jnp.max(pair, axis=1), axes_all)
+            demand_merged = _demand_from_group_sizes(info, axes_all)
+            return (new_states, resp, jnp.reshape(rounds, (1,)),
+                    res_pt, demand_pt, demand_merged)
+
+        in_specs = (state_specs, req_spec,
+                    jax.tree.map(lambda _: req_spec, rows), req_spec)
+        out_specs = (state_specs, resp_specs,
+                     P(None), P(None), P(None), P(None))
+        f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+        (new_states, resp, rounds, res_pt, demand_pt, demand_merged) = \
+            f(states, dst, rows, tid_col)
+        # slice every (trust, batch) span back out INSIDE the program (host-
+        # side slicing of sharded arrays would pay one dispatch per leaf)
+        out_resps = []
+        for tid, tb_spans in enumerate(spans):
+            src = resp if merged_resp else resp[tid]
+            out_resps.append(tuple(
+                jax.tree.map(lambda l, o=o, m=m: l[o:o + m], src)
+                for (o, m) in tb_spans))
+        return (new_states, tuple(out_resps), rounds, res_pt,
+                demand_pt, demand_merged)
+
+    return fused

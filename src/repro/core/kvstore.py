@@ -121,7 +121,8 @@ class DelegatedKVStore:
                  overflow: str = "second_round", overflow_capacity: int = 0,
                  local_shortcut: bool = True, mode: str = "shared",
                  n_dedicated: int = 0, max_rounds: int = 1,
-                 pack_impl: str = "ref"):
+                 pack_impl: str = "ref", name: Optional[str] = None,
+                 plan_capacity: bool = False, session=None):
         axis = axis if axis is not None else tuple(mesh.axis_names)
         group = TrusteeGroup(mesh, axis, mode=mode, n_dedicated=n_dedicated)
         t = group.n_trustees
@@ -134,14 +135,23 @@ class DelegatedKVStore:
         resp_like = {"value": jnp.zeros((1, value_width), dtype),
                      "flag": jnp.zeros((1,), jnp.int32)}
         ops = make_kv_ops(t, value_width, dtype)
+        # entrusting registers the trust with the (ambient or given)
+        # TrustSession, so session.step() can fuse this store's pending
+        # batches with every other registered Trust's into one round
         self.trust = group.entrust(
             {"table": table}, ops, resp_like,
             capacity=capacity, overflow=overflow,
             overflow_capacity=overflow_capacity,
             local_shortcut=local_shortcut, max_rounds=max_rounds,
-            pack_impl=pack_impl)
+            pack_impl=pack_impl, name=name, plan_capacity=plan_capacity,
+            session=session)
         self.t = t
         self.dtype = dtype
+
+    @property
+    def session(self):
+        """The TrustSession this store's trust is registered with."""
+        return self.trust.session
 
     # -- routing ---------------------------------------------------------
     def route(self, keys: jax.Array) -> jax.Array:
@@ -181,6 +191,10 @@ class DelegatedKVStore:
     def put_then(self, keys, values, then=None):
         return self.trust.submit("put", self.route(keys),
                                  self._payload(keys, values), then=then)
+
+    def add_then(self, keys, deltas, then=None):
+        return self.trust.submit("add", self.route(keys),
+                                 self._payload(keys, deltas), then=then)
 
     def flush(self):
         self.trust.flush()

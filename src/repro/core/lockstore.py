@@ -136,6 +136,11 @@ class FetchRMWStore:
 
     def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
                  dtype=jnp.float32, rw_lock: bool = False, **kw):
+        # the inner store's trust registers with the ambient TrustSession
+        # (or the one passed via kw["session"]) like any other Trust, so a
+        # lock-backed table can ride the same multiplexed engine round as
+        # the delegated stores it is compared against
+        kw.setdefault("name", "rw-lock" if rw_lock else "rmw-lock")
         self.store = DelegatedKVStore(mesh, n_keys, value_width, dtype=dtype,
                                       local_shortcut=False, **kw)
         self.rw_lock = rw_lock
@@ -207,6 +212,7 @@ class AtomicAddStore:
 
     def __init__(self, mesh: Mesh, n_keys: int, value_width: int = 4,
                  dtype=jnp.float32, **kw):
+        kw.setdefault("name", "atomic-add")
         self.store = DelegatedKVStore(mesh, n_keys, value_width, dtype=dtype,
                                       local_shortcut=False, **kw)
 

@@ -54,6 +54,40 @@ def set_context(mesh: Mesh, axes="default") -> None:
     set_batch_axes(axes)
 
 
+def current_session():
+    """The ambient ``TrustSession`` (core.engine.DelegationEngine).
+
+    Lazily created per thread.  Every ``entrust`` registers its Trust here
+    by default, so ``current_session().step()`` fuses the pending batches of
+    ALL live Trusts into one multiplexed channel round (DESIGN.md §8)."""
+    s = getattr(_state, "session", None)
+    if s is None:
+        from .engine import DelegationEngine
+        s = DelegationEngine()
+        _state.session = s
+    return s
+
+
+def set_session(session) -> None:
+    """Install ``session`` as the ambient TrustSession for this thread."""
+    _state.session = session
+
+
+@contextlib.contextmanager
+def use_session(session=None):
+    """Scope an (optionally fresh) TrustSession: trusts entrusted inside the
+    block register with it; the previous session is restored on exit."""
+    if session is None:
+        from .engine import DelegationEngine
+        session = DelegationEngine()
+    prev = getattr(_state, "session", None)
+    _state.session = session
+    try:
+        yield session
+    finally:
+        _state.session = prev
+
+
 def set_delegation_mode(mode: str = "shared", n_dedicated: int = 0) -> None:
     """Session-wide default trustee mode (the paper's shared vs dedicated
     runtimes).  Consumed by ``trust.local_trustees``; launch drivers set it

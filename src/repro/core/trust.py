@@ -18,22 +18,24 @@ static op table; requests are rows of serializable values (the paper imposes
 the same value-only restriction via serde); synchronization is the SPMD
 program itself.  Batching of many requests per message (paper §5.3) falls out
 of ``submit``/``flush`` fusing all queued requests into one channel round.
+
+Execution lives in the session's ``DelegationEngine`` (engine.py, DESIGN.md
+§8): a Trust is a thin handle that enqueues batches; ``apply``/``flush``
+take the solo fast path (one per-trust program, bit-identical to the
+pre-engine runtime), while ``session.step()`` fuses the pending batches of
+EVERY registered Trust into one multiplexed channel round.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from . import channel as ch
-from .channel import ChannelConfig, DelegatedOp, Received
+from .channel import ChannelConfig, DelegatedOp
 
 Pytree = Any
 
@@ -107,7 +109,8 @@ class TrusteeGroup:
                 capacity: Optional[int] = None, overflow: str = "second_round",
                 overflow_capacity: int = 0, local_shortcut: bool = True,
                 max_rounds: int = 1, pack_impl: str = "ref",
-                ) -> "Trust":
+                name: Optional[str] = None, plan_capacity: bool = False,
+                session=None) -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
 
         state leaves must have a leading dim divisible by n_trustees (the
@@ -124,6 +127,15 @@ class TrusteeGroup:
         with ``max_rounds > 1`` re-transmits deferred rows until the batch
         drains).  ``pack_impl`` selects the channel pack implementation
         ("ref" lax sort | "pallas" MXU kernel).
+
+        ``name`` labels the trust in the session engine's per-trust stats;
+        ``plan_capacity`` lets the engine's EMA planner auto-size the solo
+        primary block from observed demand (auto capacity only);
+        ``session`` pins a specific ``TrustSession`` (default: the ambient
+        one from ``meshctx.current_session()``) — entrusting REGISTERS the
+        Trust with that session, so ``session.step()`` can fuse its pending
+        batches with every other registered Trust's into one multiplexed
+        channel round.
         """
         if state_specs is None:
             state_specs = jax.tree.map(lambda _: P(self.axes), state)
@@ -154,7 +166,8 @@ class TrusteeGroup:
                             n_clients=self.n_clients if self.mode == "dedicated"
                             else 0,
                             max_rounds=max_rounds)
-        return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg)
+        return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg,
+                     name=name, plan_capacity=plan_capacity, session=session)
 
 
 @dataclass
@@ -177,11 +190,18 @@ class TrustFuture:
 
 
 class Trust:
-    """Reference to entrusted state.  Clone freely (it is just a handle)."""
+    """Reference to entrusted state.  Clone freely (it is just a handle).
+
+    Execution is owned by the session ``DelegationEngine`` the Trust
+    registers with at construction: ``apply``/``flush`` run the solo fast
+    path through it, ``submit`` enqueues for either ``flush`` (solo) or
+    ``session.step()`` (one multiplexed round over all registered Trusts)."""
 
     def __init__(self, group: TrusteeGroup, state: Pytree,
                  ops: Tuple[DelegatedOp, ...], resp_like: Pytree,
-                 state_specs: Pytree, cfg: ChannelConfig):
+                 state_specs: Pytree, cfg: ChannelConfig,
+                 name: Optional[str] = None, plan_capacity: bool = False,
+                 session=None):
         self.group = group
         self._state = state
         self.ops = ops
@@ -189,9 +209,15 @@ class Trust:
         self.resp_like = resp_like
         self.state_specs = state_specs
         self.cfg = cfg
+        self.plan_capacity = plan_capacity
         self._pending: List[Tuple[int, jax.Array, Pytree, TrustFuture]] = []
-        self._exec_cache: Dict[Any, Callable] = {}
         self._last_stats = None
+        if session is None:
+            from . import meshctx
+            session = meshctx.current_session()
+        self.session = session
+        self.token = session.register(self)
+        self.name = name if name else f"trust{self.token}"
 
     # -- introspection ------------------------------------------------------
     @property
@@ -221,26 +247,37 @@ class Trust:
               capacity: Optional[int] = None) -> Pytree:
         """Synchronous delegation (paper apply()): blocks for the response."""
         self.flush()
-        new_state, resp = self._run([(self.op_index[op], dst, payload)],
-                                    capacity)
-        self._state = new_state
+        resp = self.session.run_solo(
+            self, [(self.op_index[op], dst, payload)], capacity)
         return resp[0]
 
     def submit(self, op: str, dst: jax.Array, payload: Pytree,
                then: Optional[Callable] = None) -> TrustFuture:
-        """apply_then(): queue the request batch; executed at flush().
-        All queued batches ride ONE channel round (request batching, §5.3)."""
+        """apply_then(): queue the request batch; executed at flush() or at
+        the next ``session.step()``.  All queued batches ride ONE channel
+        round (request batching, §5.3) — across every registered Trust when
+        the round runs through the session engine."""
         fut = TrustFuture(_then=then)
         self._pending.append((self.op_index[op], dst, payload, fut))
+        self.session.notify(self)
         return fut
 
     def flush(self, capacity: Optional[int] = None) -> None:
+        """Run this trust's queued batches as ONE solo channel round."""
         if not self._pending:
             return
         pending, self._pending = self._pending, []
-        new_state, resps = self._run([(o, d, p) for (o, d, p, _) in pending],
-                                     capacity)
-        self._state = new_state
+        self.session.unnotify(self)
+        try:
+            resps = self.session.run_solo(
+                self, [(o, d, p) for (o, d, p, _) in pending], capacity)
+        except Exception:
+            # a build error (e.g. the payload-widening mismatch) must not
+            # discard the queued batches: restore them so the caller can
+            # drop the offending submit and flush again
+            self._pending = pending + self._pending
+            self.session.notify(self)
+            raise
         for (_, _, _, fut), resp in zip(pending, resps):
             fut._fulfil(resp)
 
@@ -267,126 +304,22 @@ class Trust:
             self.cfg, capacity=cap,
             overflow_capacity=self.cfg.overflow_capacity or over)
 
-    def _run(self, batches: List[Tuple[int, jax.Array, Pytree]],
-             capacity: Optional[int]):
-        """Fuse all batches into one delegation round and execute."""
-        mesh = self.group.mesh
-        sizes = [b[1].shape[0] for b in batches]
-        r_total = sum(sizes)
-        cfg = self._cfg_for(r_total, capacity)
-
-        key = (tuple(b[0] for b in batches), tuple(sizes),
-               tuple(jax.tree.structure(b[2]) for b in batches),
-               cfg.capacity, cfg.overflow_capacity)
-        if key not in self._exec_cache:
-            self._exec_cache[key] = self._build_exec(batches, cfg)
-        new_state, resp_flat, rounds, residual = self._exec_cache[key](
-            self._state, [b[1] for b in batches], [b[2] for b in batches])
-        # lazily-readable drain telemetry (rounds executed / rows unserved)
-        self._last_stats = (rounds, residual)
-        # split fused responses back per batch
-        out, off = [], 0
-        for n in sizes:
-            out.append(jax.tree.map(lambda l: l[off:off + n], resp_flat))
-            off += n
-        return new_state, out
-
     def last_drain_stats(self) -> Dict[str, int]:
         """Telemetry from the most recent channel execution: rounds used and
         the global residual row count (rows still unserved — nonzero only
-        when ``overflow="defer"`` ran out of ``max_rounds``)."""
-        assert getattr(self, "_last_stats", None) is not None, \
-            "no delegation round has executed yet"
+        when ``overflow="defer"`` ran out of ``max_rounds``).  Per-trust
+        stats for multiplexed rounds — including demand telemetry — come
+        from ``session.last_stats()``."""
+        if getattr(self, "_last_stats", None) is None:
+            raise RuntimeError(
+                f"no delegation round has executed yet for trust "
+                f"{self.name!r}: apply/flush it (or run session.step()) "
+                f"before reading drain stats")
+        # engine._as_int also resolves the lazy (array, index) entries a
+        # multiplexed round stores (per-trust slices stay on device)
+        from .engine import _as_int
         rounds, residual = self._last_stats
-        return {"rounds": int(jax.device_get(rounds)[0]),
-                "residual": int(jax.device_get(residual)[0])}
-
-    def _build_exec(self, batches, cfg: ChannelConfig):
-        mesh = self.group.mesh
-        ops = self.ops
-        resp_like = self.resp_like
-        op_ids = [b[0] for b in batches]
-        serve = ch.serve_optable(ops, active_ids=tuple(sorted(set(op_ids))))
-        # Request batches are sharded over the whole mesh.  Shared mode: every
-        # device is a client and originates its own slice.  Dedicated mode:
-        # the fused batch is repacked so all real rows land on the leading
-        # n_clients shards and trustee shards see only dst=-1 padding —
-        # requests originate on client shards only.
-        req_spec = P(tuple(mesh.axis_names))
-        dedicated = self.group.mode == "dedicated"
-        n_cli = self.group.n_clients
-        n_dev = self.group.axis_size
-
-        def fused(state, dsts, payloads):
-            # concat batches, tag each row with its op id
-            dst = jnp.concatenate(dsts, 0)
-            rows = {"op": jnp.concatenate(
-                [jnp.full((d.shape[0],), oid, jnp.int32)
-                 for oid, d in zip(op_ids, dsts)], 0)}
-            names = set()
-            for p in payloads:
-                names |= set(p.keys())
-            for name in sorted(names):
-                parts = []
-                for p, d in zip(payloads, dsts):
-                    if name in p:
-                        parts.append(p[name])
-                    else:
-                        like = next(pp[name] for pp in payloads if name in pp)
-                        parts.append(jnp.zeros((d.shape[0],) + like.shape[1:],
-                                               like.dtype))
-                rows[name] = jnp.concatenate(parts, 0)
-
-            r_total = dst.shape[0]
-            # pad the fused batch so each ORIGIN shard gets an equal slice:
-            # dedicated mode packs all R rows onto the leading n_clients
-            # shards (trustee shards hold only inactive padding); shared mode
-            # pads ragged batches up to a multiple of the mesh size
-            n_origins = n_cli if dedicated else max(1, mesh.size)
-            r_dev = -(-r_total // n_origins)
-            pad = (n_dev if dedicated else mesh.size) * r_dev - r_total
-            if pad:
-                dst = jnp.concatenate(
-                    [dst, jnp.full((pad,), -1, dst.dtype)], 0)
-                rows = jax.tree.map(
-                    lambda l: jnp.concatenate(
-                        [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
-                    rows)
-
-            # any defer config routes through the drain engine so the
-            # rounds/residual telemetry is truthful even at max_rounds=1
-            # (delegate_drain degenerates to one round + residual psum)
-            drain = cfg.overflow == "defer"
-
-            def shard_fn(state_shard, dst_l, rows_l):
-                if drain:
-                    new_state, resp, info = ch.delegate_drain(
-                        state_shard, dst_l, rows_l, serve, self.n_trustees,
-                        cfg)
-                    rounds, residual = info.rounds, info.residual
-                else:
-                    new_state, resp, _ = ch.delegate(
-                        state_shard, dst_l, rows_l, serve, self.n_trustees,
-                        cfg)
-                    rounds, residual = jnp.int32(1), jnp.int32(0)
-                # identical on every shard (the drain loop count is psum-
-                # synchronized), so P(None) replication below is sound
-                return (new_state, resp, jnp.reshape(rounds, (1,)),
-                        jnp.reshape(residual, (1,)))
-
-            in_specs = (self.state_specs, req_spec,
-                        jax.tree.map(lambda _: req_spec, rows))
-            out_specs = (self.state_specs,
-                         jax.tree.map(lambda _: req_spec, resp_like),
-                         P(None), P(None))
-            f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_rep=False)
-            new_state, resp, rounds, residual = f(state, dst, rows)
-            if pad:
-                resp = jax.tree.map(lambda l: l[:r_total], resp)
-            return new_state, resp, rounds, residual
-
-        return jax.jit(fused)
+        return {"rounds": _as_int(rounds), "residual": _as_int(residual)}
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,12 @@ def main(argv=None):
                          "with a small primary block and drains deferred "
                          "increments over up to this many bounded retry "
                          "rounds (enables the ledger in shared mode too)")
+    ap.add_argument("--session", action="store_true",
+                    help="run store-level bookkeeping through the ambient "
+                         "TrustSession: the token ledger AND a traffic "
+                         "meter ride ONE multiplexed engine round per "
+                         "request wave (one all_to_all pair for all "
+                         "Trusts) instead of one solo round per store")
     args = ap.parse_args(argv)
 
     import jax
@@ -104,8 +110,9 @@ def main(argv=None):
     # trustee cores and clients delegate their increments.  Opt-in via the
     # flag — its per-token channel round rides inside the timed loop, so
     # default (shared) runs keep the exact pre-ledger step timings.
-    ledger = None
-    if args.delegation_mode == "dedicated" or args.drain_rounds > 1:
+    ledger = meter = session = None
+    if (args.delegation_mode == "dedicated" or args.drain_rounds > 1
+            or args.session):
         from ..core import DelegatedKVStore
         led_mode, led_n = meshctx.delegation_mode()
         if args.drain_rounds > 1:
@@ -117,10 +124,22 @@ def main(argv=None):
         else:
             led_kw = dict(capacity=max(4, args.batch))
         ledger = DelegatedKVStore(mesh, n_keys=args.batch, value_width=1,
-                                  mode=led_mode, n_dedicated=led_n, **led_kw)
+                                  mode=led_mode, n_dedicated=led_n,
+                                  name="ledger", **led_kw)
         ledger.prefill(np.zeros((args.batch, 1), np.float32))
         led_keys = jnp.arange(args.batch, dtype=jnp.int32)
         led_ones = jnp.ones((args.batch, 1), jnp.float32)
+        if args.session:
+            # second registered Trust: per-device-bucket traffic meter.  It
+            # MUST share the ledger's channel signature (mode/overflow/
+            # capacity policy) so the engine fuses both into one round.
+            session = meshctx.current_session()
+            meter = DelegatedKVStore(mesh, n_keys=max(mesh.size, 1),
+                                     value_width=1, mode=led_mode,
+                                     n_dedicated=led_n, name="meter",
+                                     **led_kw)
+            meter.prefill(np.zeros((max(mesh.size, 1), 1), np.float32))
+            meter_keys = led_keys % max(mesh.size, 1)
 
     t0 = time.monotonic()
     prev = None
@@ -131,7 +150,13 @@ def main(argv=None):
         prev, cache = plan.step_fn(params, cache, tok, pos)
         if t >= args.prompt_len - 1:
             outputs.append(np.asarray(prev))
-            if ledger is not None:
+            if session is not None:
+                # ONE multiplexed engine round serves every registered
+                # Trust's wave: ledger increments + meter traffic
+                ledger.add_then(led_keys, led_ones)
+                meter.add_then(meter_keys, led_ones)
+                session.step()
+            elif ledger is not None:
                 ledger.add(led_keys, led_ones)
     dt = time.monotonic() - t0
     if ledger is not None:
@@ -143,6 +168,13 @@ def main(argv=None):
             print(f"[serve] ledger drain: {stats['rounds']} round(s) in the "
                   f"last step, residual {stats['residual']} (bound "
                   f"{args.drain_rounds})", flush=True)
+    if session is not None:
+        traffic = meter.dump()[:, 0].astype(int)
+        print(f"[serve] meter: tokens per device bucket = "
+              f"{traffic.tolist()}", flush=True)
+        print(f"[serve] session engine (last wave): "
+              f"{session.last_step_info['fused'] or 'solo rounds'} — "
+              f"per-trust stats {session.last_stats()}", flush=True)
     total_steps = args.prompt_len + args.gen - 1
     print(f"[serve] {total_steps} steps in {dt:.2f}s "
           f"({1e3*dt/total_steps:.1f} ms/step, "

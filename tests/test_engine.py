@@ -1,0 +1,302 @@
+"""DelegationEngine tests.
+
+Two layers:
+
+* in-process single-device tests: the payload-widening mismatch guard, the
+  ``last_drain_stats`` RuntimeError, session registration / solo-vs-fused
+  routing, the single-device multiplexed round, and the CapacityPlanner
+  unit behavior;
+* the 8-device subprocess battery (tests/_engine_battery.py): multiplexed
+  rounds over >= 2 Trusts bit-identical to sequential per-Trust applies
+  (shared / shortcut / dedicated, both pack_impls), the one-all_to_all
+  jaxpr check, per-trust stats, multi-state defer drain, planner EMA.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_engine_battery.py")
+
+
+@pytest.fixture(scope="session")
+def engine_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "mux_shared_matches_sequential",
+    "mux_shared_shortcut_matches_sequential",
+    "mux_dedicated_matches_sequential",
+    "mux_pallas_matches_sequential",
+    "mux_single_all_to_all",
+    "mux_per_trust_stats",
+    "mux_defer_drain_matches_sequential",
+    "mux_capacity_planner_adapts",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_engine_multidevice(engine_battery, name):
+    res = engine_battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"
+
+
+# ---------------------------------------------------------------------------
+# in-process (single device)
+# ---------------------------------------------------------------------------
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _counter_trust(session=None, name=None):
+    from repro.core import DelegatedOp, TrusteeGroup
+
+    def inc(state, rows, m, client):
+        delta = jnp.where(m, rows["delta"], 0.0)
+        return ({"ct": state["ct"].at[0].add(jnp.sum(delta))},
+                {"value": jnp.broadcast_to(state["ct"][0], m.shape)})
+
+    def scaled(state, rows, m, client):
+        # same field name, DIFFERENT trailing shape -> widening mismatch
+        delta = jnp.where(m[:, None], rows["delta"], 0.0)
+        return (state, {"value": jnp.broadcast_to(state["ct"][0], m.shape)})
+
+    group = TrusteeGroup(_mesh1(), ("data", "model"))
+    return group.entrust(
+        {"ct": jnp.zeros((1,))},
+        ops=[DelegatedOp("inc", inc), DelegatedOp("scaled", scaled)],
+        resp_like={"value": jnp.zeros((1,))}, capacity=8,
+        session=session, name=name)
+
+
+def test_payload_widening_mismatch_raises():
+    """Satellite: two queued ops sharing a payload field name with different
+    trailing shapes must raise a clear error naming the field and both ops
+    (the zero-fill used to silently reuse the first op's like leaf)."""
+    trust = _counter_trust()
+    trust.submit("inc", jnp.zeros((2,), jnp.int32),
+                 {"delta": jnp.ones((2,))})
+    trust.submit("scaled", jnp.zeros((2,), jnp.int32),
+                 {"delta": jnp.ones((2, 3))})
+    with pytest.raises(ValueError) as ei:
+        trust.flush()
+    msg = str(ei.value)
+    assert "'delta'" in msg and "inc" in msg and "scaled" in msg, msg
+
+
+def test_last_drain_stats_raises_before_any_round():
+    """Satellite: reading stats before any round is a RuntimeError (was a
+    bare assert)."""
+    from repro.core import DelegatedKVStore
+    st = DelegatedKVStore(_mesh1(), 8, 1)
+    with pytest.raises(RuntimeError, match="no delegation round"):
+        st.trust.last_drain_stats()
+
+
+def test_entrust_registers_with_ambient_session():
+    from repro.core import DelegatedKVStore, TrustSession, meshctx
+    with meshctx.use_session() as ses:
+        st = DelegatedKVStore(_mesh1(), 8, 1, name="reg-check")
+        assert st.session is ses
+        assert any(t.name == "reg-check" for t in ses.trusts())
+    # an explicit session overrides the ambient one
+    own = TrustSession()
+    st2 = DelegatedKVStore(_mesh1(), 8, 1, session=own)
+    assert st2.session is own
+
+
+def test_step_routes_single_trust_solo():
+    """A step with one dirty trust takes the solo fast path, fulfils the
+    futures, and reports per-trust stats."""
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    st = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="only")
+    st.prefill(np.arange(1, 9, dtype=np.float32).reshape(8, 1))
+    fut = st.get_then(jnp.array([2, 3], jnp.int32))
+    stats = ses.step()
+    assert ses.last_step_info == {"fused": [], "solo": ["only"]}
+    assert np.array_equal(np.asarray(fut.result()["value"])[:, 0], [3., 4.])
+    assert stats["only"]["rounds"] == 1 and stats["only"]["residual"] == 0
+    assert stats["only"]["demand_max"] >= 0
+
+
+def test_mux_single_device_matches_sequential():
+    """Two trusts fused on the 1-device mesh (the local-shortcut degenerate
+    channel) == the same ops applied per-trust."""
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    n, vw, r = 13, 2, 16
+    rng = np.random.default_rng(4)
+    init_a = rng.integers(1, 8, (n, vw)).astype(np.float32)
+    init_b = rng.integers(1, 8, (n, vw)).astype(np.float32)
+    a = DelegatedKVStore(_mesh1(), n, vw, session=ses, name="a")
+    b = DelegatedKVStore(_mesh1(), n, vw, session=ses, name="b")
+    a_ref = DelegatedKVStore(_mesh1(), n, vw, session=TrustSession())
+    b_ref = DelegatedKVStore(_mesh1(), n, vw, session=TrustSession())
+    for st, init in ((a, init_a), (a_ref, init_a), (b, init_b),
+                     (b_ref, init_b)):
+        st.prefill(init)
+    for _ in range(4):
+        keys = rng.integers(0, n, r).astype(np.int32)
+        vals = rng.integers(0, 8, (r, vw)).astype(np.float32)
+        fa = a.get_then(jnp.asarray(keys))
+        fb = b.add_then(jnp.asarray(keys), jnp.asarray(vals))
+        ses.step()
+        assert ses.last_step_info["fused"] == [["a", "b"]]
+        want_a = np.asarray(a_ref.get(jnp.asarray(keys)))
+        want_b = np.asarray(b_ref.add(jnp.asarray(keys), jnp.asarray(vals)))
+        assert np.array_equal(np.asarray(fa.result()["value"]), want_a)
+        assert np.array_equal(np.asarray(fb.result()["value"]), want_b)
+    assert np.array_equal(a.dump(), a_ref.dump())
+    assert np.array_equal(b.dump(), b_ref.dump())
+
+
+def test_mux_value_width_mismatch_gets_private_lanes():
+    """Cross-trust payload fields with different trailing shapes are NOT an
+    error: they ride per-trust wire lanes (field@tid)."""
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    a = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="w1")
+    b = DelegatedKVStore(_mesh1(), 8, 3, session=ses, name="w3")
+    a.prefill(np.full((8, 1), 2.0, np.float32))
+    b.prefill(np.full((8, 3), 5.0, np.float32))
+    keys = jnp.arange(4, dtype=jnp.int32)
+    fa = a.put_then(keys, jnp.ones((4, 1)))
+    fb = b.get_then(keys)
+    ses.step()
+    assert ses.last_step_info["fused"] == [["w1", "w3"]]
+    assert np.array_equal(np.asarray(fb.result()["value"]),
+                          np.full((4, 3), 5.0))
+    assert np.array_equal(a.dump()[:4], np.ones((4, 1)))
+
+
+def test_incompatible_trusts_flush_solo():
+    """Different channel signatures (here: overflow policy) never fuse."""
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    a = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="drop",
+                         overflow="drop", capacity=8)
+    b = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="defer",
+                         overflow="defer", capacity=8)
+    a.prefill(np.ones((8, 1), np.float32))
+    b.prefill(np.ones((8, 1), np.float32))
+    keys = jnp.arange(4, dtype=jnp.int32)
+    fa = a.get_then(keys)
+    fb = b.get_then(keys)
+    ses.step()
+    assert ses.last_step_info["fused"] == []
+    assert sorted(ses.last_step_info["solo"]) == ["defer", "drop"]
+    assert np.array_equal(np.asarray(fa.result()["value"]),
+                          np.ones((4, 1)))
+    assert np.array_equal(np.asarray(fb.result()["value"]),
+                          np.ones((4, 1)))
+
+
+def test_last_drain_stats_after_mux_round():
+    """Regression: after a MULTIPLEXED round, the engine stores per-trust
+    stats as lazy (array, index) slices — last_drain_stats must resolve
+    them instead of crashing."""
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    a = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="a")
+    b = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="b")
+    a.prefill(np.ones((8, 1), np.float32))
+    b.prefill(np.ones((8, 1), np.float32))
+    keys = jnp.arange(4, dtype=jnp.int32)
+    a.get_then(keys)
+    b.get_then(keys)
+    ses.step()
+    assert ses.last_step_info["fused"] == [["a", "b"]]
+    assert a.trust.last_drain_stats() == {"rounds": 1, "residual": 0}
+    assert b.trust.last_drain_stats() == {"rounds": 1, "residual": 0}
+
+
+def test_explicit_capacity_mismatch_never_fuses():
+    """Regression: capacity is a SEMANTIC choice (what drops/defers), so
+    trusts with different explicit capacities must not fuse — a fused
+    round with max() of capacities silently un-dropped rows."""
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    a = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="tight",
+                         capacity=1, overflow="drop", local_shortcut=False)
+    b = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="wide",
+                         capacity=8, overflow="drop", local_shortcut=False)
+    a.prefill(np.arange(1, 9, dtype=np.float32).reshape(8, 1))
+    b.prefill(np.arange(1, 9, dtype=np.float32).reshape(8, 1))
+    keys = jnp.array([0, 1, 2], jnp.int32)
+    fa = a.get_then(keys)
+    fb = b.get_then(keys)
+    ses.step()
+    assert ses.last_step_info["fused"] == []
+    out_a = np.asarray(fa.result()["value"])[:, 0]
+    # capacity=1 to the single trustee: only the first row is served
+    assert out_a[0] == 1.0 and (out_a[1:] == 0.0).all()
+    assert np.array_equal(np.asarray(fb.result()["value"])[:, 0],
+                          [1.0, 2.0, 3.0])
+
+
+def test_failed_fuse_restores_pending():
+    """Regression: a build-time error (payload-widening mismatch) must not
+    discard the queued batches or strand the futures."""
+    trust = _counter_trust()
+    trust.submit("inc", jnp.zeros((2,), jnp.int32), {"delta": jnp.ones((2,))})
+    bad = trust.submit("scaled", jnp.zeros((2,), jnp.int32),
+                       {"delta": jnp.ones((2, 3))})
+    with pytest.raises(ValueError):
+        trust.flush()
+    assert len(trust._pending) == 2          # both batches restored
+    # drop the offending submit and flush the rest successfully
+    trust._pending = [p for p in trust._pending if p[3] is not bad]
+    trust.flush()
+    assert trust._pending == []
+
+
+def test_capacity_planner_unit():
+    from repro.core import CapacityPlanner
+    p = CapacityPlanner(alpha=0.5, headroom=1.5, min_capacity=4)
+    assert p.plan("s", fallback=32) == 32          # no history yet
+    p.observe("s", np.int32(20))
+    cap1 = p.plan("s", fallback=32)                # ceil(1.5*20)=30 -> 32
+    assert cap1 == 32
+    p.observe("s", np.int32(2))                    # ema = 11 -> 17 -> 32? no:
+    cap2 = p.plan("s", fallback=32)                # ceil(1.5*11)=17 -> pow2 32
+    assert cap2 == 32
+    for _ in range(6):                             # decay toward 2
+        p.observe("s", np.int32(2))
+        p.plan("s", fallback=32)
+    cap3 = p.plan("s", fallback=32)
+    assert cap3 in (4, 8), cap3                    # floors at min_capacity
+    assert cap3 & (cap3 - 1) == 0
+    # observations stay lazy until plan() resolves them
+    p.observe("t", np.int32(7))
+    assert p.ema("t") == 7.0
+
+
+def test_dead_trusts_are_pruned():
+    import gc
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    st = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="temp")
+    st.prefill(np.ones((8, 1), np.float32))
+    st.get(jnp.arange(2, dtype=jnp.int32))         # populate the exec cache
+    assert len(ses._cache) == 1
+    del st
+    gc.collect()
+    ses.step()                                     # prune on next step
+    assert ses.trusts() == []
+    assert len(ses._cache) == 0
