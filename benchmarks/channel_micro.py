@@ -10,12 +10,81 @@
     + ledger) vs one solo channel round per Trust (DESIGN.md §8) — the
     fused round pays one program dispatch and one all_to_all pair where the
     per-trust path pays two of each.
+  * serve_hotpath: the trustee serve path (DESIGN.md §9) across op mixes —
+    GET-heavy / PUT-heavy / mixed / conflict-heavy fused rounds served by
+    the legacy masked per-op passes vs the shared-grouping segment
+    primitives vs the fused Pallas serve kernel; PUT-heavy rows also record
+    the response-transpose bytes the elision plan drops.
 """
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
+
+
+def serve_hotpath(csv, mesh, args):
+    """One fused multi-op round per wave, identical trace per serve impl."""
+    import jax.numpy as jnp
+    from repro.core import DelegatedKVStore
+    from repro.core.routing import sample_keys
+    from benchmarks.common import bench, block
+
+    R = args.requests
+    mixes = {
+        # (n_keys, [(op, fraction), ...]) — conflict_heavy squeezes the
+        # whole request wave onto 16 keys (every segment is deep);
+        # put_only elides the ENTIRE response transpose (the paper's
+        # zero-size PUT response, applied statically)
+        "get_heavy": (4096, [("get", 0.8), ("put", 0.2)]),
+        "put_heavy": (4096, [("put", 0.9), ("get", 0.1)]),
+        "put_only": (4096, [("put", 1.0)]),
+        "mixed": (4096, [("get", 0.25), ("put", 0.25),
+                         ("add", 0.25), ("cas", 0.25)]),
+        "conflict_heavy": (16, [("get", 0.25), ("put", 0.25),
+                                ("add", 0.25), ("cas", 0.25)]),
+    }
+    n_dev = mesh.size
+    for mix_name, (n_keys, parts) in mixes.items():
+        rng = np.random.default_rng(17)
+        batches = []
+        for op, frac in parts:
+            n = max(1, int(R * frac))
+            keys = jnp.asarray(sample_keys(rng, n_keys, n, "zipf"))
+            vals = jnp.asarray(
+                rng.integers(0, 8, (n, 1)).astype(np.float32))
+            expect = jnp.asarray(
+                rng.integers(0, 8, (n, 1)).astype(np.float32))
+            batches.append((op, keys, vals, expect))
+        for impl in ("masked", "ref", "pallas"):
+            st = DelegatedKVStore(mesh, n_keys, 1,
+                                  capacity=max(1, R // n_dev),
+                                  serve_impl=impl, local_shortcut=False)
+            st.prefill(np.zeros((n_keys, 1), np.float32))
+
+            def wave():
+                futs = []
+                for op, keys, vals, expect in batches:
+                    if op == "get":
+                        futs.append(st.get_then(keys))
+                    elif op == "put":
+                        st.put_then(keys, vals)
+                    elif op == "add":
+                        futs.append(st.add_then(keys, vals))
+                    else:
+                        futs.append(st.trust.submit(
+                            "cas", st.route(keys),
+                            st._payload(keys, vals, expect)))
+                st.flush()
+                block([f.result()["value"] for f in futs]
+                      + [st.trust.state()["table"]])
+
+            wave()
+            saved = st.session.last_stats()[st.trust.name] \
+                .get("resp_bytes_saved", 0)
+            dt = bench(wave, iters=4)
+            csv.add("serve_hotpath", f"{mix_name}_elide{saved}", impl,
+                    round(dt * 1e6, 1), 1.0)
 
 
 def main(argv=None):
@@ -28,6 +97,10 @@ def main(argv=None):
     ap.add_argument("--drain-rounds", type=int, default=8,
                     help="defer drain-engine round bound for the "
                          "defer_drain experiment")
+    ap.add_argument("--experiment", default="",
+                    help="run only experiments whose name contains this "
+                         "substring (e.g. serve_hotpath for the CI "
+                         "bench-smoke job)")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -51,6 +124,20 @@ def main(argv=None):
     csv = Csv(["experiment", "setting", "pack_impl", "us_per_round",
                "served_frac"])
     csv.print_header()
+
+    # --experiment names ONE experiment to run alone (CI bench-smoke uses
+    # serve_hotpath for a fast, targeted trajectory); only experiments that
+    # can run standalone are filterable
+    filterable = ("serve_hotpath",)
+    if args.experiment and args.experiment not in filterable:
+        ap.error(f"--experiment must be one of {filterable}, "
+                 f"got {args.experiment!r}")
+    if not args.experiment or args.experiment == "serve_hotpath":
+        serve_hotpath(csv, mesh, args)
+    if args.experiment:
+        if args.out:
+            csv.dump(args.out)
+        return
 
     # capacity sweep, drop mode (how big must the primary block be?)
     for mult in (0.5, 1, 2, 4, 8):

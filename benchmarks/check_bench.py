@@ -1,0 +1,121 @@
+"""Perf-regression gate for the checked-in benchmark trajectories.
+
+``run.py --json`` APPENDS one timestamped entry per run to
+``benchmarks/artifacts/BENCH_<tag>.json`` (which is checked into the repo,
+so the ops/s trajectory accumulates across PRs).  CI runs the benchmark —
+appending a fresh entry — then calls this script, which compares the fresh
+(last) entry against the per-row MEDIAN over all prior (checked-in)
+entries and fails loudly when the gated rows regress more than the
+threshold.
+
+Absolute ops/s is machine-bound (a CI runner and a dev box easily differ
+by more than any sane budget), so ``--normalize-impl`` divides the gated
+impl's ops/s by another impl's ops/s from the SAME run (e.g. fused ref
+over legacy masked): the gated metric becomes a within-run ratio that
+transfers across machines.
+
+    python benchmarks/check_bench.py benchmarks/artifacts/BENCH_serve_hotpath.json \
+        --experiment serve_hotpath --impl ref --normalize-impl masked \
+        --settings mixed,conflict_heavy --max-regression 0.20
+
+A file with fewer than two entries passes trivially (nothing to compare —
+the first run of a fresh baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def row_key(row) -> str:
+    """Setting name with the volatile ``_elide<bytes>`` suffix stripped."""
+    setting = row.get("setting", "")
+    return setting.split("_elide")[0]
+
+
+def gated_rows(entry, experiment: str, impl: str, settings,
+               normalize_impl: str = ""):
+    ops, norm = {}, {}
+    for row in entry.get("rows", []):
+        if row.get("experiment") != experiment:
+            continue
+        key = row_key(row)
+        if settings and key not in settings:
+            continue
+        if not impl or row.get("pack_impl") == impl:
+            ops[key] = row.get("ops_per_s") or 0.0
+        if normalize_impl and row.get("pack_impl") == normalize_impl:
+            norm[key] = row.get("ops_per_s") or 0.0
+    if normalize_impl:
+        return {k: (v / norm[k] if norm.get(k) else 0.0)
+                for k, v in ops.items()}
+    return ops
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="BENCH_<tag>.json trajectory file")
+    ap.add_argument("--experiment", default="serve_hotpath")
+    ap.add_argument("--impl", default="ref",
+                    help="impl column to gate on (the fused serve path)")
+    ap.add_argument("--normalize-impl", default="",
+                    help="divide the gated impl's ops/s by this impl's "
+                         "ops/s from the same run (machine-portable "
+                         "within-run ratio, e.g. 'masked')")
+    ap.add_argument("--settings", default="mixed,conflict_heavy",
+                    help="comma-separated setting prefixes to gate "
+                         "(empty = all)")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="fail when the gated metric drops more than this "
+                         "fraction vs the checked-in baseline (per-row "
+                         "median over all prior entries)")
+    args = ap.parse_args(argv)
+    settings = set(s for s in args.settings.split(",") if s)
+
+    with open(args.path) as f:
+        data = json.load(f)
+    entries = data.get("entries", [])
+    if len(entries) < 2:
+        print(f"check_bench: {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
+              f"in {args.path} — nothing to compare, passing")
+        return 0
+    # baseline = per-row MEDIAN over the checked-in (prior) entries, so one
+    # noisy historical run cannot make the gate flap either way
+    prior = [gated_rows(e, args.experiment, args.impl, settings,
+                        args.normalize_impl)
+             for e in entries[:-1]]
+    base = {}
+    for key in set().union(*[set(p) for p in prior]):
+        vals = sorted(p[key] for p in prior if key in p)
+        base[key] = vals[len(vals) // 2]
+    cur = gated_rows(entries[-1], args.experiment, args.impl, settings,
+                     args.normalize_impl)
+    unit = f"x {args.normalize_impl}" if args.normalize_impl else "ops/s"
+    failures = []
+    for key, base_ops in sorted(base.items()):
+        cur_ops = cur.get(key)
+        if cur_ops is None:
+            failures.append(f"{key}: row missing from the fresh run")
+            continue
+        if base_ops <= 0:
+            continue
+        drop = 1.0 - cur_ops / base_ops
+        status = "REGRESSED" if drop > args.max_regression else "ok"
+        print(f"check_bench: {key}: {base_ops:.2f} -> {cur_ops:.2f} {unit} "
+              f"({-drop * 100:+.1f}%) [{status}]")
+        if drop > args.max_regression:
+            failures.append(
+                f"{key}: {base_ops:.2f} -> {cur_ops:.2f} {unit} "
+                f"({drop * 100:.1f}% drop > "
+                f"{args.max_regression * 100:.0f}% budget)")
+    if failures:
+        print("\ncheck_bench FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
+    print("check_bench: all gated rows within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -95,6 +95,11 @@ def add_channel_args(ap) -> None:
     ap.add_argument("--pack-impl", default="ref", choices=["ref", "pallas"],
                     help="channel pack path: lax reference or the MXU "
                          "Pallas pack kernel")
+    ap.add_argument("--serve-impl", default="ref",
+                    choices=["ref", "pallas", "masked"],
+                    help="trustee serve path: shared-grouping segment "
+                         "primitives (ref), the fused MXU serve kernel "
+                         "(pallas), or the legacy per-op masked passes")
     ap.add_argument("--overflow", default="second_round",
                     choices=["second_round", "drop", "defer"],
                     help="channel overflow policy for the delegated stores; "
@@ -105,6 +110,8 @@ def add_channel_args(ap) -> None:
 
 def channel_kwargs(args, mode_kw: Dict) -> Dict:
     """DelegatedKVStore kwargs from the add_channel_args flags + mode_kw."""
-    return dict(mode_kw, pack_impl=args.pack_impl, overflow=args.overflow,
+    return dict(mode_kw, pack_impl=args.pack_impl,
+                serve_impl=getattr(args, "serve_impl", "ref"),
+                overflow=args.overflow,
                 max_rounds=args.max_rounds
                 if args.overflow == "defer" else 1)

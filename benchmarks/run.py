@@ -105,11 +105,20 @@ MODE_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store")
 PACK_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store",
               "benchmarks.channel_micro")
 OVERFLOW_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store")
+# benchmarks that understand --serve-impl (channel_micro's serve_hotpath
+# experiment enumerates every serve impl itself)
+SERVE_AWARE = ("benchmarks.fetch_add", "benchmarks.kv_store")
 
 
 def write_bench_json(tag: str, args, summary) -> str:
     """Emit the perf-trajectory artifact: ops/s per benchmark row
-    (benchmark x mode x pack_impl), for cross-PR baseline comparison."""
+    (benchmark x mode x pack_impl), for cross-PR baseline comparison.
+
+    The artifact ACCUMULATES: each run appends one timestamped entry to
+    ``entries`` instead of overwriting, so checked-in BENCH_*.json files
+    carry the ops/s trajectory across PRs (the newest entry is last).
+    Legacy single-run files ({"rows": ...}) are migrated in place."""
+    import datetime
     import json
     rows = []
     for name, us, derived, fields in summary:
@@ -120,16 +129,29 @@ def write_bench_json(tag: str, args, summary) -> str:
                      "ops_per_s": 0.0 if failed else round(1e6 / us, 1),
                      "derived": derived,
                      "mode": fields.get("mode", args.mode),
+                     # serve_hotpath rows carry the SERVE impl here (the
+                     # benchmark's impl column is shared)
                      "pack_impl": fields.get("pack_impl", ""),
                      # engine_multi rows carry fused vs per_trust settings so
                      # the trajectory tracks the multiplexed-round speedup
                      "experiment": fields.get("experiment", ""),
                      "setting": fields.get("setting", "")})
+    entry = {"timestamp": datetime.datetime.now(datetime.timezone.utc)
+             .strftime("%Y-%m-%dT%H:%M:%SZ"),
+             "mode": args.mode, "full": bool(args.full), "rows": rows}
     path = artifact_path(f"BENCH_{tag}.json")
     os.makedirs(os.path.dirname(path), exist_ok=True)
+    entries = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            entries = prev.get("entries", [prev] if "rows" in prev else [])
+        except (json.JSONDecodeError, OSError):
+            entries = []
+    entries.append(entry)
     with open(path, "w") as f:
-        json.dump({"tag": tag, "mode": args.mode, "full": bool(args.full),
-                   "rows": rows}, f, indent=1)
+        json.dump({"tag": tag, "entries": entries}, f, indent=1)
     return path
 
 
@@ -152,6 +174,13 @@ def main() -> None:
                     choices=["", "second_round", "drop", "defer"],
                     help="forwarded to the overflow-aware benchmarks; defer "
                          "engages the drain engine")
+    ap.add_argument("--serve-impl", default="",
+                    choices=["", "ref", "pallas", "masked"],
+                    help="trustee serve path, forwarded to the serve-aware "
+                         "benchmarks (kv-store, fetch-add)")
+    ap.add_argument("--experiment", default="",
+                    help="forwarded to channel_micro: run only the named "
+                         "experiment (CI bench-smoke: serve_hotpath)")
     ap.add_argument("--json", action="store_true",
                     help="also write the ops/s trajectory to "
                          "benchmarks/artifacts/BENCH_<tag>.json")
@@ -177,6 +206,10 @@ def main() -> None:
             margs = margs + ["--pack-impl", impl]
         if args.overflow and module in OVERFLOW_AWARE:
             margs = margs + ["--overflow", args.overflow]
+        if args.serve_impl and module in SERVE_AWARE:
+            margs = margs + ["--serve-impl", args.serve_impl]
+        if args.experiment and module == "benchmarks.channel_micro":
+            margs = margs + ["--experiment", args.experiment]
         print(f"=== {name} ({module}) ===", flush=True)
         try:
             out = run_in_subprocess(module, margs, devices=8, timeout=2400)

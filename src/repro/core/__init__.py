@@ -10,8 +10,9 @@
 # routing.py   key -> trustee routers + workload generators
 # meshctx.py   current-mesh + current-session threading for shard_map islands
 from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
-                      DelegationFuture, Packed, Received, delegate,
-                      delegate_async, delegate_drain, pack, respond,
+                      DelegationFuture, Grouping, Packed, Received,
+                      check_response_structs, delegate, delegate_async,
+                      delegate_drain, make_grouping, pack, respond,
                       serve_multiplex, serve_optable, transmit, unpack)
 from .engine import (CapacityPlanner, DelegationEngine, TrustSession,
                      check_payload_fields)
@@ -27,9 +28,9 @@ from .nested import launch_serve
 
 __all__ = [
     "ChannelConfig", "ChannelInfo", "DelegatedOp", "DelegationFuture",
-    "Packed", "Received",
-    "delegate", "delegate_async", "delegate_drain", "pack", "respond",
-    "serve_multiplex", "serve_optable",
+    "Grouping", "Packed", "Received", "check_response_structs",
+    "delegate", "delegate_async", "delegate_drain", "make_grouping",
+    "pack", "respond", "serve_multiplex", "serve_optable",
     "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
     "local_trustees", "CapacityPlanner", "DelegationEngine", "TrustSession",
     "check_payload_fields", "DelegatedKVStore", "make_kv_ops",

@@ -58,6 +58,22 @@ class ChannelConfig:
     #                                (client, trustee) block, so ``dst`` then
     #                                carries VIRTUAL bins dst*n_lanes + lane
     #                                and each lane keeps solo pack semantics
+    serve_impl: str = "ref"        # trustee serve path: "ref" (shared-
+    #                                grouping lax segment primitives) |
+    #                                "pallas" (fused MXU serve kernel over
+    #                                the same grouping) | "masked" (the
+    #                                legacy per-op full-buffer passes, kept
+    #                                as the differential reference)
+    elide_resp: Tuple[str, ...] = ()   # response fields statically zero for
+    #                                every op in the round — dropped from the
+    #                                response transpose and re-inflated as
+    #                                zeros client-side (paper: zero-size PUT
+    #                                responses save response bytes)
+    elide_lanes: Tuple[int, ...] = ()  # multiplexed rounds: lanes (trusts)
+    #                                whose every response field is elided
+    #                                (e.g. a PUT-only trust) — their slot
+    #                                rows are dropped from the response
+    #                                transpose ("planes" wire format only)
 
     def total_capacity(self) -> int:
         if self.overflow == "second_round":
@@ -93,6 +109,70 @@ class Received(NamedTuple):
     rows: Pytree           # leaves (T*C [+T*C2], ...) — flattened request rows
     valid: jax.Array       # (N,) bool
     client: jax.Array      # (N,) int32 — originating client (response routing)
+    grouping: Any = None   # Optional[Grouping] — the per-round shared
+    #                        grouping pass (computed once by serve_optable
+    #                        when the active ops declare ``group_key``)
+
+
+class Grouping(NamedTuple):
+    """ONE stable sort of the received rows by (op, group key) per round.
+
+    Every per-row array except ``order``/``inv`` lives in SORTED coordinates
+    (index i refers to the i-th row of the sorted order).  Rows of one
+    (op, key) segment are contiguous and keep request order — (client, slot)
+    order, the serve order the channel guarantees — so last-writer-wins is
+    "last row of the segment", fetch-and-add priors are segment-exclusive
+    prefix sums, and CAS winners are "last matching row of the segment".
+    Computed once by ``serve_optable`` and shared by every op in the round,
+    replacing the per-op argsort + searchsorted (ADD) and scatter-max (PUT/
+    CAS last-writer) passes."""
+    order: jax.Array       # (N,) int32 — sorted position -> original row
+    inv: jax.Array         # (N,) int32 — original row -> sorted position
+    gid_sorted: jax.Array  # (N,) int32 — combined (op, key) group id of
+    #                        sorted row i; inactive rows sort last under a
+    #                        sentinel id
+    seg_start: jax.Array   # (N,) int32 — first sorted position of row i's
+    #                        segment
+    seg_end: jax.Array     # (N,) int32 — one past the last position
+    rank: jax.Array        # (N,) int32 — rank of sorted row i within its
+    #                        segment (position - seg_start)
+    seg_end_row: jax.Array = None  # (N,) int32 — seg_end in REQUEST
+    #                        coordinates (seg_end[inv]): row i is its
+    #                        segment's last writer iff
+    #                        inv[i] == seg_end_row[i] - 1 — the one shared
+    #                        gather that lets PUT commit winners without
+    #                        sorting any payload rows
+
+
+def make_grouping(gid: jax.Array, n_bins: int = 0) -> Grouping:
+    """Build the shared grouping from a per-row group id (sentinel = max).
+
+    ONE stable sort per round (`lax.sort` carries the ids and the
+    permutation together) is the only superlinear work.  Segment
+    boundaries come from a histogram over the (small) id space when
+    ``n_bins`` is given and modest — `seg_start = offsets[gid]`,
+    `seg_end = offsets[gid + 1]` after an exclusive bin cumsum — and from
+    O(N) scans over the sorted ids otherwise."""
+    n = gid.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    gid_sorted, order = lax.sort((gid, pos), num_keys=1, is_stable=True)
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(pos)
+    if 0 < n_bins <= 4 * n:
+        hist = jnp.zeros((n_bins + 1,), jnp.int32).at[gid].add(
+            1, mode="drop")
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)])
+        seg_start = offsets[gid_sorted]
+        seg_end = offsets[gid_sorted + 1]
+    else:
+        changed = gid_sorted[1:] != gid_sorted[:-1]
+        is_start = jnp.concatenate([jnp.ones((1,), bool), changed])
+        is_end = jnp.concatenate([changed, jnp.ones((1,), bool)])
+        seg_start = lax.cummax(jnp.where(is_start, pos, 0))
+        seg_end = lax.cummin(jnp.where(is_end, pos + 1, n), reverse=True)
+    return Grouping(order.astype(jnp.int32), inv, gid_sorted,
+                    seg_start, seg_end, pos - seg_start,
+                    jnp.take(seg_end, inv))
 
 
 def _group_positions(dst: jax.Array, n_trustees: int):
@@ -342,11 +422,30 @@ def respond(responses: Pytree, n_trustees: int, cfg: ChannelConfig) -> Pytree:
     lanes = t // t_send
 
     if cfg.wire_fmt == "planes":
-        # one fused response transpose per block (see _transmit_planes)
+        # one fused response transpose per block (see _transmit_planes);
+        # lanes whose trust writes no response (cfg.elide_lanes) are sliced
+        # out of the transpose and re-inflated as zeros — their slot rows
+        # never ride the wire
+        keep = tuple(l for l in range(lanes) if l not in cfg.elide_lanes)
+
         def back_planes(block, c):
             planes, treedef, decs = _encode_planes(block, t * c)
-            planes = _a2a(planes.reshape(t_send, lanes * c, -1),
-                          cfg.axis, t_send).reshape(t * c, -1)
+            wp = planes.shape[1]
+            if len(keep) < lanes:
+                if keep:
+                    sub = planes.reshape(t_send, lanes, c, wp)[
+                        :, jnp.asarray(keep)]
+                    moved = _a2a(sub.reshape(t_send, len(keep) * c, wp),
+                                 cfg.axis, t_send)
+                    full = jnp.zeros((t_send, lanes, c, wp), planes.dtype) \
+                        .at[:, jnp.asarray(keep)].set(
+                            moved.reshape(t_send, len(keep), c, wp))
+                else:
+                    full = jnp.zeros((t_send, lanes, c, wp), planes.dtype)
+                planes = full.reshape(t * c, wp)
+            else:
+                planes = _a2a(planes.reshape(t_send, lanes * c, wp),
+                              cfg.axis, t_send).reshape(t * c, wp)
             return _decode_planes(planes, treedef, decs, t * c)
 
         if cfg.overflow == "second_round" and cfg.overflow_capacity > 0:
@@ -399,6 +498,79 @@ class ChannelInfo(NamedTuple):
     n_rows: int              # static: channel rows per device per round
     rounds: Any = 1          # channel rounds executed (int32 after a drain)
     residual: Any = 0        # GLOBAL unsent-row count (psum; int32 after drain)
+    resp_bytes_saved: int = 0  # static: response-transpose bytes per shard
+    #                            NOT moved this round thanks to response-
+    #                            plane / lane elision (cfg.elide_resp /
+    #                            cfg.elide_lanes)
+
+
+def _resp_bytes_per_row(leaf, wire_fmt: str) -> int:
+    """Wire bytes one response row of this leaf occupies."""
+    shape = tuple(leaf.shape)
+    trailing = 1
+    for d in shape[1:]:
+        trailing *= int(d)
+    if wire_fmt != "planes":
+        return trailing * jnp.dtype(leaf.dtype).itemsize
+    dt = jnp.dtype(leaf.dtype)
+    if (jnp.issubdtype(dt, jnp.integer) and dt.itemsize > 2) or dt == bool:
+        return 2 * trailing * 4        # hi/lo 16-bit plane split
+    return trailing * 4                # one f32 plane
+
+
+def resp_elision_bytes(resp_like: Pytree, cfg: "ChannelConfig",
+                       n_rows: int) -> int:
+    """Static response-transpose bytes per shard saved by elision: whole
+    planes for fields no op writes, plus the elided lanes' rows of the
+    remaining fields (multiplexed rounds)."""
+    if not isinstance(resp_like, dict) or n_rows <= 0:
+        return 0
+    saved = 0
+    kept_bpr = 0
+    for name, leaf in resp_like.items():
+        bpr = _resp_bytes_per_row(leaf, cfg.wire_fmt)
+        if name in cfg.elide_resp:
+            saved += n_rows * bpr
+        else:
+            kept_bpr += bpr
+    if cfg.elide_lanes and cfg.n_lanes > 1 and cfg.wire_fmt == "planes":
+        saved += (n_rows // cfg.n_lanes) * len(cfg.elide_lanes) * kept_bpr
+    return saved
+
+
+def _elide_split(resp_rows: Pytree, cfg: "ChannelConfig"):
+    """Split response rows into (kept, elided) by ``cfg.elide_resp``.
+    Elision only applies to flat-dict response trees (the store shape)."""
+    if not cfg.elide_resp or not isinstance(resp_rows, dict):
+        return resp_rows, {}
+    kept = {k: v for k, v in resp_rows.items() if k not in cfg.elide_resp}
+    elided = {k: v for k, v in resp_rows.items() if k in cfg.elide_resp}
+    return kept, elided
+
+
+def _respond_unpack(resp_rows: Pytree, request_slot: jax.Array, n_bins: int,
+                    cfg: "ChannelConfig", local_resp: Optional[Pytree] = None,
+                    local_mask: Optional[jax.Array] = None) -> Pytree:
+    """respond -> unpack -> merge-local, with statically-elided response
+    fields dropped from the transpose and re-inflated as zeros client-side.
+    A round whose every response field is elided (e.g. PUT-only) pays NO
+    response transpose at all — the paper's zero-size-response note."""
+    r = request_slot.shape[0]
+    kept, elided = _elide_split(resp_rows, cfg)
+    if not elided:
+        out = unpack(respond(resp_rows, n_bins, cfg), request_slot)
+        if local_resp is not None:
+            out = _merge_local(out, local_resp, local_mask)
+        return out
+    out = {}
+    if kept:
+        out = unpack(respond(kept, n_bins, cfg), request_slot)
+        if local_resp is not None:
+            out = _merge_local(out, {k: local_resp[k] for k in kept},
+                               local_mask)
+    zeros = {k: jnp.zeros((r,) + tuple(v.shape[1:]), v.dtype)
+             for k, v in elided.items()}
+    return {**out, **zeros}
 
 
 def _merge_local(responses: Pytree, local_resp: Pytree, local_mask: jax.Array) -> Pytree:
@@ -509,15 +681,16 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     if local_recv is not None:
         received = _concat_received(received, local_recv)
     new_state, resp_rows = serve_fn(state, received)
+    local_resp = None
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
-    resp_at_client = respond(resp_rows, n_bins, cfg)
-    responses = unpack(resp_at_client, packed.request_slot)
-    if local_recv is not None:
-        responses = _merge_local(responses, local_resp, local_mask)
-    info = ChannelInfo(group_sizes, packed.dropped,
-                       n_bins * cfg.total_capacity())
+    responses = _respond_unpack(resp_rows, packed.request_slot, n_bins, cfg,
+                                local_resp, local_mask)
+    n_rows = n_bins * cfg.total_capacity()
+    info = ChannelInfo(group_sizes, packed.dropped, n_rows,
+                       resp_bytes_saved=resp_elision_bytes(
+                           resp_rows, cfg, n_rows))
     return new_state, responses, info
 
 
@@ -583,7 +756,8 @@ def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
     state, responses, remaining, rounds, total = lax.while_loop(
         cond, body, (state, responses, remaining, jnp.int32(1), total))
     return state, responses, ChannelInfo(info.group_sizes, remaining,
-                                         info.n_rows, rounds, total)
+                                         info.n_rows, rounds, total,
+                                         info.resp_bytes_saved)
 
 
 class DelegationFuture(NamedTuple):
@@ -602,11 +776,9 @@ class DelegationFuture(NamedTuple):
     def wait(self) -> Pytree:
         if self.n_trustees == 1 and self.cfg.local_shortcut:
             return self.local_resp
-        resp_at_client = respond(self.resp_rows, self.n_trustees, self.cfg)
-        out = unpack(resp_at_client, self.request_slot)
-        if self.local_resp is not None:
-            out = _merge_local(out, self.local_resp, self.local_mask)
-        return out
+        return _respond_unpack(self.resp_rows, self.request_slot,
+                               self.n_trustees, self.cfg,
+                               self.local_resp, self.local_mask)
 
 
 def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
@@ -639,8 +811,10 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
     fut = DelegationFuture(resp_rows, packed.request_slot, n_bins, cfg,
                            local_resp, local_mask)
-    info = ChannelInfo(group_sizes, packed.dropped,
-                       n_bins * cfg.total_capacity())
+    n_rows = n_bins * cfg.total_capacity()
+    info = ChannelInfo(group_sizes, packed.dropped, n_rows,
+                       resp_bytes_saved=resp_elision_bytes(
+                           resp_rows, cfg, n_rows))
     return new_state, fut, info
 
 
@@ -655,30 +829,190 @@ class DelegatedOp:
     ``apply(state, rows, valid, client) -> (new_state, response_rows)`` must be
     pure, vectorized over rows, and a no-op on rows where ``valid`` is False.
     This is the compile-time analog of the paper's closure fat pointer; the
-    payload rows are the captured environment (pass-by-value enforced)."""
+    payload rows are the captured environment (pass-by-value enforced).
+
+    Ops may additionally join the SHARED GROUPING serve path (DESIGN.md §9):
+
+    * ``group_key(state, rows) -> (keys, n_groups)`` declares the per-row
+      group key (e.g. the local table index) and its static bound; the
+      serve then computes ONE stable (op, key) sort per round and shares it
+      with every op via ``Received.grouping``.
+    * ``fused`` points several ops at ONE fused-serve provider (an object
+      with ``serve(ops, ids, state, received, impl)``): when every active
+      op shares the provider, the whole op-mix applies in a single pass
+      over the grouped rows — the KV table's provider implements the mix
+      as lax segment primitives (``serve_impl="ref"``) or the fused Pallas
+      serve kernel (``"pallas"``), sharing the sort, the gathers and the
+      response assembly across ops.
+    * ``apply_grouped`` optionally gives a standalone op a 5-arg
+      ``(state, rows, valid, client, grouping)`` segment-primitive
+      implementation, used when no shared provider covers the round.
+    * ``kernel_lane`` in {"get","put","add","cas"} names the op's lane
+      inside the fused kernel.
+    * ``resp_fields`` names the response fields the op actually writes
+      (``None`` = all); fields no active op writes are statically elided
+      from the response transpose.
+
+    ``apply`` itself stays the pre-grouping 4-arg masked implementation —
+    ``serve_impl="masked"`` (the differential reference) and ops outside
+    the grouped path run it unchanged."""
     name: str
     apply: Callable
+    group_key: Optional[Callable] = None
+    kernel_lane: Optional[str] = None
+    resp_fields: Optional[Tuple[str, ...]] = None
+    apply_grouped: Optional[Callable] = None
+    fused: Any = None
 
 
-def serve_optable(ops: Tuple[DelegatedOp, ...],
-                  active_ids: Optional[Tuple[int, ...]] = None) -> ServeFn:
-    """Multi-op serve: payload rows carry an 'op' column selecting the op.
-    Each op is applied masked (small op tables — GET/PUT/etc.).  When the
-    caller statically knows which ops appear in the batch (Trust does),
-    ``active_ids`` skips the rest at trace time."""
-    ids = tuple(range(len(ops))) if active_ids is None else tuple(active_ids)
+def check_response_structs(named_resps) -> None:
+    """Every op fused into one serve table must produce the SAME response
+    structure — the round's response buffer is one tree with each row
+    carrying its own op's response.  A mismatch used to surface as an
+    opaque ``jax.tree.map`` structure error deep inside the accumulator;
+    raise up front naming both ops and their structures instead (the serve
+    analog of ``check_payload_fields``)."""
+    first = None
+    for label, resp in named_resps:
+        leaves, treedef = jax.tree.flatten(resp)
+        sig = (str(treedef), tuple((tuple(jnp.asarray(l).shape[1:]),
+                                    str(jnp.asarray(l).dtype))
+                                   for l in leaves))
+        if first is None:
+            first = (label, sig)
+        elif first[1] != sig:
+            l0, s0 = first
+            raise ValueError(
+                f"ops fused into one serve table must agree on the response "
+                f"structure: op {l0!r} responds with {s0[0]} "
+                f"(trailing shapes/dtypes {list(s0[1])}) but op {label!r} "
+                f"responds with {sig[0]} (trailing shapes/dtypes "
+                f"{list(sig[1])}); give the ops matching resp trees or "
+                f"serve them from separate Trusts")
 
+
+def _serve_grouping(ops, ids, state, received: Received) -> Optional[Grouping]:
+    """The SHARED grouping pass: one stable sort by (op, group key) for the
+    whole round.  Returns None when no active op declares ``group_key``."""
+    grouped = [i for i in ids if ops[i].group_key is not None]
+    if not grouped:
+        return None
+    rows, valid = received.rows, received.valid
+    multi = len(ids) > 1
+    op_col = rows["op"] if multi else None
+    keys, spans = {}, []
+    shared = {}   # ops sharing one group_key fn (the KV table's) share keys
+    for i in grouped:
+        fn = ops[i].group_key
+        if fn not in shared:
+            k, span = fn(state, rows)
+            shared[fn] = (k.astype(jnp.int32), int(span))
+        keys[i], span = shared[fn]
+        spans.append(span)
+    span = max(max(spans), 1)
+    # combined id: (op rank, key) for grouped ops, (op rank, 0) for plain
+    # ops, sentinel for inactive rows — inactive sorts last, each op's rows
+    # stay contiguous and in request order (stable sort)
+    sentinel = len(ids) * span
+    gid = jnp.full(valid.shape, sentinel, jnp.int32)
+    for rank_i, i in enumerate(ids):
+        m = valid & (op_col == i) if multi else valid
+        key_i = jnp.clip(keys[i], 0, span - 1) if i in keys else 0
+        gid = jnp.where(m, rank_i * span + key_i, gid)
+    return make_grouping(gid, sentinel)
+
+
+def _apply_op(op: DelegatedOp, state, rows, m, client, grouping):
+    """Dispatch: ``apply_grouped`` (5-arg) when a grouping is at hand and
+    the op provides one, the legacy 4-arg masked ``apply`` otherwise."""
+    if grouping is not None and op.apply_grouped is not None:
+        return op.apply_grouped(state, rows, m, client, grouping)
+    return op.apply(state, rows, m, client)
+
+
+def _serve_optable_masked(ops: Tuple[DelegatedOp, ...],
+                          ids: Tuple[int, ...]) -> ServeFn:
+    """The pre-grouping serve: one masked full-buffer pass per op.  Kept as
+    ``serve_impl="masked"`` — the differential reference the shared-grouping
+    and Pallas paths must match bit-for-bit."""
     def serve(state, received: Received):
         rows = received.rows
         # the op lane may be omitted from the wire when the round carries a
         # single op (it would be a constant column)
         op_ids = rows.get("op") if hasattr(rows, "get") else rows["op"]
         out_resp = None
+        first = None
         for i in ids:
             m = received.valid & (op_ids == i) if len(ids) > 1 else received.valid
-            state, resp = ops[i].apply(state, rows, m, received.client)
+            state, resp = _apply_op(ops[i], state, rows, m, received.client,
+                                    None)
             if out_resp is None:
+                first = (ops[i].name, resp)
                 out_resp = jax.tree.map(jnp.zeros_like, resp)
+            else:
+                check_response_structs([first, (ops[i].name, resp)])
+            out_resp = jax.tree.map(
+                lambda acc, r: jnp.where(
+                    m.reshape((-1,) + (1,) * (r.ndim - 1)), r, acc),
+                out_resp, resp)
+        return state, out_resp
+    return serve
+
+
+def serve_optable(ops: Tuple[DelegatedOp, ...],
+                  active_ids: Optional[Tuple[int, ...]] = None,
+                  serve_impl: str = "ref") -> ServeFn:
+    """Multi-op serve: payload rows carry an 'op' column selecting the op.
+    When the caller statically knows which ops appear in the batch (Trust
+    does), ``active_ids`` skips the rest at trace time.
+
+    ``serve_impl`` selects the trustee hot path (DESIGN.md §9):
+
+    * ``"ref"``    — ONE shared grouping pass (stable (op, key) sort +
+                     segment boundaries) per round, exposed via
+                     ``Received.grouping``; when every active op shares a
+                     fused provider (``DelegatedOp.fused`` — the KV table
+                     does), the WHOLE op-mix applies in one lax pass of
+                     segment primitives.  Other ops apply per-op
+                     (``apply_grouped`` if declared, masked otherwise).
+    * ``"pallas"`` — same grouping, but the provider routes the mix
+                     through the fused MXU serve kernel in one pass over
+                     the sorted rows.
+    * ``"masked"`` — the legacy per-op full-buffer passes (differential
+                     reference only).
+
+    All three are bit-identical on integer-exact payloads; "ref"/"pallas"
+    reorder float accumulation only within what the round-batch semantics
+    already leave unspecified (§4)."""
+    ids = tuple(range(len(ops))) if active_ids is None else tuple(active_ids)
+    if serve_impl == "masked":
+        return _serve_optable_masked(ops, ids)
+    assert serve_impl in ("ref", "pallas"), \
+        f"unknown serve_impl {serve_impl!r} (want ref|pallas|masked)"
+    # one shared fused-serve provider across every active op -> the whole
+    # op-mix applies in a single pass over the grouped rows
+    fused = ops[ids[0]].fused
+    if fused is None or any(ops[i].fused is not fused for i in ids):
+        fused = None
+
+    def serve(state, received: Received):
+        rows = received.rows
+        grouping = _serve_grouping(ops, ids, state, received)
+        received = received._replace(grouping=grouping)
+        if fused is not None and grouping is not None:
+            return fused.serve(ops, ids, state, received, serve_impl)
+        op_ids = rows.get("op") if hasattr(rows, "get") else rows["op"]
+        out_resp = None
+        first = None
+        for i in ids:
+            m = received.valid & (op_ids == i) if len(ids) > 1 else received.valid
+            state, resp = _apply_op(ops[i], state, rows, m, received.client,
+                                    grouping)
+            if out_resp is None:
+                first = (ops[i].name, resp)
+                out_resp = jax.tree.map(jnp.zeros_like, resp)
+            else:
+                check_response_structs([first, (ops[i].name, resp)])
             out_resp = jax.tree.map(
                 lambda acc, r: jnp.where(
                     m.reshape((-1,) + (1,) * (r.ndim - 1)), r, acc),
@@ -690,7 +1024,8 @@ def serve_optable(ops: Tuple[DelegatedOp, ...],
 def serve_multiplex(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
                                            Tuple[int, ...]]],
                     renames: Sequence[dict],
-                    merge_resp: bool = False) -> ServeFn:
+                    merge_resp: bool = False,
+                    serve_impl: str = "ref") -> ServeFn:
     """Merged serve table for one MULTIPLEXED round over several Trusts.
 
     ``state`` is a tuple of per-trust state pytrees; request rows carry a
@@ -708,7 +1043,8 @@ def serve_multiplex(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
     (legal whenever every trust's response structure matches), ONE tree with
     each row carrying its own trust's response: the row sets are disjoint,
     so merging halves the response-transpose bytes per extra trust."""
-    serves = tuple(serve_optable(ops, active) for ops, active in tables)
+    serves = tuple(serve_optable(ops, active, serve_impl=serve_impl)
+                   for ops, active in tables)
 
     def serve(states, received: Received):
         trust_col = received.rows["trust"]
@@ -741,7 +1077,8 @@ def serve_multiplex(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
 def serve_multiplex_strided(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
                                                    Tuple[int, ...]]],
                             renames: Sequence[dict], n_lanes: int,
-                            t_send: int, c1: int, c2: int) -> ServeFn:
+                            t_send: int, c1: int, c2: int,
+                            serve_impl: str = "ref") -> ServeFn:
     """``serve_multiplex`` for the LANE slot layout (``cfg.n_lanes > 1``).
 
     With per-trust lanes the received buffer is block-structured: for each
@@ -756,7 +1093,8 @@ def serve_multiplex_strided(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
     back to the masked variant otherwise): per-trust responses reassemble
     into one merged buffer by restacking the lane slices, so the response
     transpose moves each row's bytes exactly once."""
-    serves = tuple(serve_optable(ops, active) for ops, active in tables)
+    serves = tuple(serve_optable(ops, active, serve_impl=serve_impl)
+                   for ops, active in tables)
     n1, n2 = t_send * n_lanes * c1, t_send * n_lanes * c2
 
     def serve(states, received: Received):

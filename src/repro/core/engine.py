@@ -92,6 +92,21 @@ def _payload_sig(payload: Pytree):
                             str(jnp.asarray(l).dtype)) for l in leaves))
 
 
+def _elidable_fields(ops, active_ids, resp_like) -> Tuple[str, ...]:
+    """Response fields statically untouched by EVERY active op this round
+    (``DelegatedOp.resp_fields``) — dropped from the response transpose.
+    An op without a declaration opts the whole round out."""
+    if not isinstance(resp_like, dict):
+        return ()
+    written = set()
+    for i in active_ids:
+        rf = ops[i].resp_fields
+        if rf is None:
+            return ()
+        written |= set(rf)
+    return tuple(sorted(set(resp_like.keys()) - written))
+
+
 # ---------------------------------------------------------------------------
 # Capacity planner (paper §5.3.1, adaptive)
 # ---------------------------------------------------------------------------
@@ -215,7 +230,10 @@ class DelegationEngine:
     # -- telemetry ----------------------------------------------------------
     def last_stats(self) -> Dict[str, Dict[str, int]]:
         """Per-trust stats of the most recent engine round(s):
-        ``{trust_name: {rounds, residual, demand_max}}``."""
+        ``{trust_name: {rounds, residual, demand_max, resp_bytes_saved}}``.
+        ``resp_bytes_saved`` counts response-transpose bytes per shard per
+        round statically elided (zero-response fields / PUT-only lanes);
+        for a fused round every member reports the round's total."""
         return {name: {k: _as_int(v) for k, v in d.items()}
                 for name, d in self._last_step_stats.items()}
 
@@ -229,8 +247,9 @@ class DelegationEngine:
         if sig is None:
             g, cfg = trust.group, trust.cfg
             sig = (g.mesh, g.axes, g.mode, g.n_dedicated, cfg.overflow,
-                   cfg.local_shortcut, cfg.pack_impl, cfg.max_rounds,
-                   cfg.n_clients, cfg.capacity, cfg.overflow_capacity)
+                   cfg.local_shortcut, cfg.pack_impl, cfg.serve_impl,
+                   cfg.max_rounds, cfg.n_clients, cfg.capacity,
+                   cfg.overflow_capacity)
             trust._mux_sig = sig
         return sig
 
@@ -296,15 +315,16 @@ class DelegationEngine:
                tuple(_payload_sig(b[2]) for b in batches),
                cfg.capacity, cfg.overflow_capacity)
         if key not in self._cache:
-            fn = _build_solo(trust, batches, cfg)
-            self._cache[key] = (jax.jit(fn), fn)
+            fn, saved = _build_solo(trust, batches, cfg)
+            self._cache[key] = (jax.jit(fn), fn, saved)
         new_state, resps, rounds, residual, demand = self._cache[key][0](
             trust._state, [b[1] for b in batches], [b[2] for b in batches])
         trust._state = new_state
         trust._last_stats = (rounds, residual)
         self.planner.observe(sig, demand)
         self._last_step_stats[self._stats_key(trust)] = {
-            "rounds": rounds, "residual": residual, "demand_max": demand}
+            "rounds": rounds, "residual": residual, "demand_max": demand,
+            "resp_bytes_saved": self._cache[key][2]}
         return list(resps)
 
     # -- the multiplexed round ----------------------------------------------
@@ -359,9 +379,9 @@ class DelegationEngine:
                          for tb, sz in zip(batches, sizes)),
                    cfg.capacity, cfg.overflow_capacity)
             if key not in self._cache:
-                fn = _build_mux(trusts, batches, cfg)
-                self._cache[key] = (jax.jit(fn), fn)
-            jitted, raw = self._cache[key]
+                fn, saved = _build_mux(trusts, batches, cfg)
+                self._cache[key] = (jax.jit(fn), fn, saved)
+            jitted, raw, saved = self._cache[key]
             states = tuple(t._state for t in trusts)
             dsts = [[b[1] for b in tb] for tb in batches]
             payloads = [[b[2] for b in tb] for tb in batches]
@@ -390,7 +410,10 @@ class DelegationEngine:
             t._last_stats = (rounds, (residual_pt, i))
             self._last_step_stats[self._stats_key(t)] = {
                 "rounds": rounds, "residual": (residual_pt, i),
-                "demand_max": (demand_pt, i)}
+                "demand_max": (demand_pt, i),
+                # round-level response-transpose bytes elided (shared by
+                # every member of the fused round)
+                "resp_bytes_saved": saved}
             for (_o, _d, _p, fut), resp in zip(pend, resps[i]):
                 fut._fulfil(resp)
 
@@ -412,9 +435,11 @@ def _demand_from_group_sizes(info: ch.ChannelInfo, axes_all) -> jax.Array:
     return jnp.reshape(demand.astype(jnp.int32), (1,))
 
 
-def _build_solo(trust, batches, cfg: ch.ChannelConfig) -> Callable:
+def _build_solo(trust, batches, cfg: ch.ChannelConfig):
     """The per-Trust program (the pre-engine ``Trust._build_exec``), plus
-    demand telemetry: fuse the queued batches into one delegation round."""
+    demand telemetry: fuse the queued batches into one delegation round.
+    Returns ``(fused_fn, resp_bytes_saved)`` — the second element is the
+    static response-transpose bytes the round's elision plan avoids."""
     mesh = trust.group.mesh
     ops = trust.ops
     resp_like = trust.resp_like
@@ -422,7 +447,12 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig) -> Callable:
     op_ids = [b[0] for b in batches]
     check_payload_fields(
         [(ops[oid].name, p) for (oid, _d, p) in batches])
-    serve = ch.serve_optable(ops, active_ids=tuple(sorted(set(op_ids))))
+    active = tuple(sorted(set(op_ids)))
+    serve = ch.serve_optable(ops, active_ids=active,
+                             serve_impl=cfg.serve_impl)
+    # response-plane elision: fields no active op writes stay off the wire
+    cfg = dataclasses.replace(
+        cfg, elide_resp=_elidable_fields(ops, active, resp_like))
     # Request batches are sharded over the whole mesh.  Shared mode: every
     # device is a client and originates its own slice.  Dedicated mode: the
     # fused batch is repacked so all real rows land on the leading n_clients
@@ -511,7 +541,10 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig) -> Callable:
             off += n
         return new_state, tuple(resps), rounds, residual, demand
 
-    return fused
+    n_rows = cfg.n_slots(n_trustees) * cfg.n_lanes * cfg.total_capacity()
+    saved = 0 if (cfg.n_slots(n_trustees) == 1 and cfg.local_shortcut) \
+        else ch.resp_elision_bytes(resp_like, cfg, n_rows)
+    return fused, saved
 
 
 def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
@@ -577,13 +610,32 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
 
     tables = tuple((t.ops, tuple(sorted({oid for (oid, _d, _p) in tb})))
                    for t, tb in zip(trusts, batches))
+
+    # response elision plan: fields NO trust's active ops write drop from
+    # the response transpose entirely; with the lane layout, lanes whose
+    # trust writes nothing (e.g. PUT-only) drop their slot rows per lane
+    elidable_pt = [_elidable_fields(ops_t, active, t.resp_like)
+                   for t, (ops_t, active) in zip(trusts, tables)]
+    if merged_resp and isinstance(trusts[0].resp_like, dict):
+        all_fields = set(trusts[0].resp_like.keys())
+        common = set.intersection(*[set(e) for e in elidable_pt])
+        lanes_off = tuple(tid for tid, e in enumerate(elidable_pt)
+                          if set(e) == all_fields)
+        if len(lanes_off) == n_trusts:
+            common, lanes_off = all_fields, ()   # nothing responds at all
+        elif not strided:
+            lanes_off = ()                       # masked layout has no lanes
+        cfg = dataclasses.replace(cfg, elide_resp=tuple(sorted(common)),
+                                  elide_lanes=lanes_off)
+
     if strided:
         serve = ch.serve_multiplex_strided(
             tables, tuple(lane_of), n_lanes=n_trusts, t_send=t_send,
-            c1=cfg.capacity, c2=c2)
+            c1=cfg.capacity, c2=c2, serve_impl=cfg.serve_impl)
     else:
         serve = ch.serve_multiplex(tables, tuple(lane_of),
-                                   merge_resp=merged_resp)
+                                   merge_resp=merged_resp,
+                                   serve_impl=cfg.serve_impl)
     state_specs = tuple(t.state_specs for t in trusts)
     resp_specs = jax.tree.map(lambda _: req_spec, trusts[0].resp_like) \
         if merged_resp else \
@@ -716,4 +768,7 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
         return (new_states, tuple(out_resps), rounds, res_pt,
                 demand_pt, demand_merged)
 
-    return fused
+    n_rows = cfg.n_slots(n_trustees) * cfg.n_lanes * cfg.total_capacity()
+    saved = 0 if (t_send == 1 and cfg.local_shortcut) \
+        else ch.resp_elision_bytes(trusts[0].resp_like, cfg, n_rows)
+    return fused, saved

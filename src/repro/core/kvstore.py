@@ -38,11 +38,10 @@ def _mask(x, m):
 
 def _ordered_last_writer(table: jax.Array, idx: jax.Array, rows: jax.Array,
                          m: jax.Array) -> jax.Array:
-    """Scatter rows into table[idx]; conflicting rows resolve to the LAST
-    valid row in request order (rows arrive sorted by client then slot)."""
+    """Pre-grouping last-writer-wins scatter (masked reference serve only):
+    scatter each request's sequence number, keep the max, gather the winner.
+    The grouped ops replace this with a segment-last scatter."""
     safe_idx = jnp.where(m, idx, table.shape[0])
-    # .at[].set applies updates in index order; to get last-writer-wins we
-    # scatter the request's sequence number and keep the max, then gather.
     seq = jnp.arange(1, idx.shape[0] + 1, dtype=jnp.int32)
     winner = jnp.zeros((table.shape[0] + 1,), jnp.int32).at[safe_idx].max(
         jnp.where(m, seq, 0), mode="drop")[: table.shape[0]]
@@ -52,12 +51,168 @@ def _ordered_last_writer(table: jax.Array, idx: jax.Array, rows: jax.Array,
                      win_rows, table)
 
 
+class KVTableServe:
+    """Fused grouped serve for the KV op-mix (DESIGN.md §9).
+
+    One provider object is shared by all four ops of one table
+    (``DelegatedOp.fused``); whenever a round's active ops all belong to
+    it, ``serve_optable`` hands the WHOLE mix here and the round applies in
+    a single pass over the channel's shared (op, key) grouping:
+
+      * ONE stable sort per round (``Received.grouping``) instead of
+        ADD's private argsort + searchsorted and PUT/CAS's scatter-max of
+        sequence numbers;
+      * last-writer-wins = "the segment's last row" (one compare in
+        request coordinates — winners have unique keys, a plain scatter
+        commits them);
+      * fetch-and-add priors = segment-exclusive prefix sums over the
+        sorted deltas;
+      * CAS keeps round-snapshot-at-phase-entry semantics and commits the
+        last MATCHING row per segment (running max of matching positions);
+      * op-phase order matches the masked reference exactly (GET reads the
+        round-entry table, PUT before ADD before CAS) and the response
+        planes assemble once (the per-op row sets are disjoint).
+
+    ``impl="pallas"`` routes the same grouped mix through the fused MXU
+    serve kernel (``kernels/delegation_serve``) — gathers, segment
+    primitives and scatters as one-hot matmuls — falling back to the lax
+    pass bit-identically when the table is not f32."""
+
+    def __init__(self, n_trustees: int, value_width: int, dtype):
+        self.n_trustees = n_trustees
+        self.value_width = value_width
+        self.dtype = dtype
+
+    def local_idx(self, rows):
+        return (rows["key"] // self.n_trustees).astype(jnp.int32)
+
+    def group_key(self, state, rows):
+        return self.local_idx(rows), state["table"].shape[0]
+
+    def _lane_masks(self, ops, ids, received):
+        multi = len(ids) > 1
+        op_col = received.rows["op"] if multi else None
+        lanes = {}
+        for i in ids:
+            m = received.valid & (op_col == i) if multi else received.valid
+            lanes[ops[i].kernel_lane] = m
+        return lanes
+
+    def serve(self, ops, ids, state, received, impl: str):
+        """Entry point used by ``channel.serve_optable``."""
+        if impl == "pallas":
+            return self.serve_kernel(ops, ids, state, received)
+        return self.serve_lax(ops, ids, state, received)
+
+    def serve_lax(self, ops, ids, state, received):
+        rows, g = received.rows, received.grouping
+        table = state["table"]
+        n_local = table.shape[0]
+        n = received.valid.shape[0]
+        lanes = self._lane_masks(ops, ids, received)
+        idx = self.local_idx(rows)
+        value = rows.get("value")
+        pos = jnp.arange(n, dtype=jnp.int32)
+
+        def commit(table, win):
+            """Write each winning row to its key.  Winners have unique keys
+            (one per segment), so a NARROW scatter of row numbers plus a
+            K-row gather commits them — the value rows never ride an N-row
+            scatter (that width is what made per-row scatters the §9 hot
+            spot for wide values)."""
+            winner = jnp.full((n_local + 1,), -1, jnp.int32) \
+                .at[jnp.where(win, idx, n_local)].set(pos, mode="drop")[
+                    :n_local]
+            has = (winner >= 0)[:, None]
+            return jnp.where(has, value[jnp.clip(winner, 0, None)], table)
+
+        resp_value = jnp.zeros((n, self.value_width), table.dtype)
+        # GET — reads the round-entry table
+        if "get" in lanes:
+            m = lanes["get"]
+            resp_value = resp_value + _mask(table[jnp.where(m, idx, 0)], m)
+        # PUT — segment-last rows commit (request coords: one compare)
+        if "put" in lanes:
+            m = lanes["put"]
+            table = commit(table, m & (g.inv == g.seg_end_row - 1))
+        # ADD — prior = segment-exclusive prefix sum of the sorted deltas
+        if "add" in lanes:
+            m = lanes["add"]
+            delta = _mask(value, m)
+            delta_s = jnp.take(delta, g.order, axis=0)
+            excl = jnp.cumsum(delta_s, axis=0) - delta_s
+            prior = jnp.take(excl - excl[g.seg_start], g.inv, axis=0)
+            base = table[jnp.where(m, idx, 0)]
+            resp_value = resp_value + _mask(base + prior, m)
+            table = table.at[jnp.where(m, idx, n_local)].add(
+                delta, mode="drop")
+        # CAS — compare against the post-ADD table; the LAST matching row
+        # of each segment commits (running max of matching positions, read
+        # at the segment end, aliases no earlier segment: positions grow
+        # globally)
+        if "cas" in lanes:
+            m = lanes["cas"]
+            cur = table[jnp.where(m, idx, 0)]
+            ok = m & jnp.all(cur == rows["expect"], axis=-1)
+            ok_s = jnp.take(ok, g.order)
+            run = jax.lax.cummax(jnp.where(ok_s, pos, -1))
+            write_s = (pos == run[jnp.clip(g.seg_end - 1, 0, n - 1)]) & ok_s
+            table = commit(table, jnp.take(write_s, g.inv))
+            resp_value = resp_value + _mask(cur, m)
+            flag = ok.astype(jnp.int32)
+        else:
+            flag = jnp.zeros((n,), jnp.int32)
+        return {**state, "table": table}, \
+               {"value": resp_value, "flag": flag}
+
+    def serve_kernel(self, ops, ids, state, received):
+        """The same grouped mix in ONE Pallas kernel pass — the MXU sibling
+        of ``delegation_pack`` (bit-identical on integer-exact payloads)."""
+        from ..kernels import ops as kops
+        table = state["table"]
+        if table.dtype != jnp.float32:
+            return self.serve_lax(ops, ids, state, received)
+        rows, g = received.rows, received.grouping
+        n_local, w = table.shape
+        n = received.valid.shape[0]
+        lanes = self._lane_masks(ops, ids, received)
+        lane_ids = ("get", "put", "add", "cas")
+        lane = jnp.full((n,), -1, jnp.int32)
+        for name, m in lanes.items():
+            lane = jnp.where(m, lane_ids.index(name), lane)
+        keys = jnp.where(lane >= 0,
+                         jnp.clip(self.local_idx(rows), 0, n_local - 1),
+                         n_local)
+        value = rows.get("value")
+        if value is None:
+            value = jnp.zeros((n, w), table.dtype)
+        expect = rows.get("expect")
+        if expect is None:
+            expect = jnp.zeros((n, w), table.dtype)
+        srt = lambda x: jnp.take(x, g.order, axis=0)
+        interp = jax.default_backend() != "tpu"
+        new_table, val_s, flag_s = kops.delegation_serve(
+            table, srt(keys), srt(lane), srt(value.astype(jnp.float32)),
+            srt(expect.astype(jnp.float32)), g.seg_start, g.seg_end,
+            interpret=interp)
+        unsrt = lambda x: jnp.take(x, g.inv, axis=0)
+        return {**state, "table": new_table.astype(table.dtype)}, \
+               {"value": unsrt(val_s).astype(table.dtype),
+                "flag": unsrt(flag_s).astype(jnp.int32)}
+
+
 def make_kv_ops(n_trustees: int, value_width: int,
                 dtype=jnp.float32) -> Tuple[DelegatedOp, ...]:
-    """Build the op table.  Local key index = key // n_trustees (mod router)."""
+    """Build the op table.  Local key index = key // n_trustees (mod router).
 
-    def local_idx(rows):
-        return (rows["key"] // n_trustees).astype(jnp.int32)
+    Each op's ``apply`` is the pre-grouping masked implementation — the
+    ``serve_impl="masked"`` differential reference, byte-for-byte the old
+    serve.  All four ops share ONE ``KVTableServe`` provider (``fused``),
+    so grouped rounds (``serve_impl="ref"|"pallas"``) apply the whole mix
+    in a single pass over the channel's shared (op, key) grouping."""
+
+    fused = KVTableServe(n_trustees, value_width, dtype)
+    local_idx = fused.local_idx
 
     def get(state, rows, m, client):
         idx = jnp.where(m, local_idx(rows), 0)
@@ -73,9 +228,7 @@ def make_kv_ops(n_trustees: int, value_width: int,
                 "flag": jnp.zeros(m.shape, jnp.int32)}
 
     def add(state, rows, m, client):
-        # fetch-and-add: old value is the table value plus the sum of all
-        # *earlier* valid requests to the same key (request order).  Computed
-        # with a sort + segmented exclusive prefix sum (O(R log R)).
+        # per-op sort + segmented exclusive prefix sum (O(R log R) per op)
         n_local = state["table"].shape[0]
         idx = jnp.where(m, local_idx(rows), n_local)
         delta = _mask(rows["value"], m)
@@ -102,8 +255,15 @@ def make_kv_ops(n_trustees: int, value_width: int,
         return {**state, "table": table}, \
                {"value": _mask(cur, m), "flag": ok.astype(jnp.int32)}
 
-    return (DelegatedOp("get", get), DelegatedOp("put", put),
-            DelegatedOp("add", add), DelegatedOp("cas", cas))
+    kw = dict(group_key=fused.group_key, fused=fused)
+    return (DelegatedOp("get", get, kernel_lane="get",
+                        resp_fields=("value",), **kw),
+            DelegatedOp("put", put, kernel_lane="put",
+                        resp_fields=(), **kw),
+            DelegatedOp("add", add, kernel_lane="add",
+                        resp_fields=("value",), **kw),
+            DelegatedOp("cas", cas, kernel_lane="cas",
+                        resp_fields=("value", "flag"), **kw))
 
 
 class DelegatedKVStore:
@@ -121,7 +281,8 @@ class DelegatedKVStore:
                  overflow: str = "second_round", overflow_capacity: int = 0,
                  local_shortcut: bool = True, mode: str = "shared",
                  n_dedicated: int = 0, max_rounds: int = 1,
-                 pack_impl: str = "ref", name: Optional[str] = None,
+                 pack_impl: str = "ref", serve_impl: str = "ref",
+                 name: Optional[str] = None,
                  plan_capacity: bool = False, session=None):
         axis = axis if axis is not None else tuple(mesh.axis_names)
         group = TrusteeGroup(mesh, axis, mode=mode, n_dedicated=n_dedicated)
@@ -143,8 +304,8 @@ class DelegatedKVStore:
             capacity=capacity, overflow=overflow,
             overflow_capacity=overflow_capacity,
             local_shortcut=local_shortcut, max_rounds=max_rounds,
-            pack_impl=pack_impl, name=name, plan_capacity=plan_capacity,
-            session=session)
+            pack_impl=pack_impl, serve_impl=serve_impl, name=name,
+            plan_capacity=plan_capacity, session=session)
         self.t = t
         self.dtype = dtype
 

@@ -109,6 +109,7 @@ class TrusteeGroup:
                 capacity: Optional[int] = None, overflow: str = "second_round",
                 overflow_capacity: int = 0, local_shortcut: bool = True,
                 max_rounds: int = 1, pack_impl: str = "ref",
+                serve_impl: str = "ref",
                 name: Optional[str] = None, plan_capacity: bool = False,
                 session=None) -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
@@ -126,7 +127,10 @@ class TrusteeGroup:
         ``max_rounds`` bounds the defer drain engine (``overflow="defer"``
         with ``max_rounds > 1`` re-transmits deferred rows until the batch
         drains).  ``pack_impl`` selects the channel pack implementation
-        ("ref" lax sort | "pallas" MXU kernel).
+        ("ref" lax sort | "pallas" MXU kernel); ``serve_impl`` the trustee
+        serve path ("ref" shared-grouping segment primitives | "pallas"
+        fused MXU serve kernel | "masked" legacy per-op passes,
+        DESIGN.md §9).
 
         ``name`` labels the trust in the session engine's per-trust stats;
         ``plan_capacity`` lets the engine's EMA planner auto-size the solo
@@ -162,6 +166,7 @@ class TrusteeGroup:
                             overflow_capacity=overflow_capacity,
                             local_shortcut=local_shortcut,
                             pack_impl=pack_impl,
+                            serve_impl=serve_impl,
                             mode=self.mode,
                             n_clients=self.n_clients if self.mode == "dedicated"
                             else 0,

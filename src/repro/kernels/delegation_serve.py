@@ -1,0 +1,171 @@
+"""Delegation-serve Pallas kernel — the trustee's serve phase, fused.
+
+The MXU sibling of ``delegation_pack``: where the pack kernel turns the
+client-side binning loop into one-hot matmuls, this kernel applies a whole
+grouped KV op-mix (GET / PUT / ADD / CAS lanes) to the entrusted table in
+ONE pass over the received rows, pre-sorted by the channel's shared
+grouping pass (channel.Grouping, DESIGN.md §9):
+
+  1. gather: ``onehot(keys) @ table`` reads each row's table line on the
+     MXU (replacing per-op dynamic gathers).
+  2. segment primitives as masked matmuls: ADD's fetch-and-add prior is a
+     (strict-lower-triangular AND same-segment) matmul against the delta
+     rows; CAS's "last matching row wins" is the transposed mask against
+     the compare flags.  Both reuse ONE (N, N) same-segment mask — rows of
+     one (op, key) segment are contiguous in the sorted order and keep
+     request order, so "earlier in segment" is a triangular slice.
+  3. scatter: per-lane winner one-hots transposed-matmul the new rows back
+     into the table (segment-last rows have unique keys, so a dense
+     accumulate places each winner exactly once).
+  4. responses (value planes + CAS flags) come out in sorted coordinates;
+     the caller inverts the permutation.
+
+Op-phase order matches the masked reference serve exactly: GET reads the
+round-entry table, PUT commits before ADD reads, CAS compares against the
+post-ADD table.  Bit-identical to the grouped lax path on integer-exact
+payloads (both are exact); general floats agree within the accumulation
+orders the round-batch semantics already leave unspecified (§4).
+
+Single-block kernel: the (N, N) segment mask keeps the whole row batch in
+VMEM, which covers per-device slot counts up to a few thousand rows — the
+regime this runtime's channel rounds operate in.  Tiling the row dimension
+with carried per-segment state is the path to larger batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _serve_kernel(table_ref, keys_ref, lane_ref, value_ref, expect_ref,
+                  segid_ref, segend_ref, table_out, val_out, flag_out, *,
+                  n: int, k: int):
+    keys = keys_ref[0]                                      # (N,) int32
+    lane = lane_ref[0]                                      # (N,) int32
+    seg = segid_ref[0]                                      # (N,) int32
+    seg_end = segend_ref[0]                                 # (N,) int32
+    table = table_ref[...].astype(jnp.float32)              # (K, W)
+    value = value_ref[...].astype(jnp.float32)              # (N, W)
+    expect = expect_ref[...].astype(jnp.float32)            # (N, W)
+
+    f = lambda b: b.astype(jnp.float32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+    # row -> table-line one-hot; the wrapper remaps every inactive key to
+    # the PADDED table size k, which has no column here — sentinel rows
+    # therefore match nothing even when the caller's table was padded
+    # (every use below is additionally lane-masked)
+    oh = f(keys[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, k), 1))
+    sameseg = seg[:, None] == seg[None, :]                  # (N, N)
+    earlier = pos[:, None] > pos[None, :]                   # j strictly before i
+    m_get, m_put = lane == 0, lane == 1
+    m_add, m_cas = lane == 2, lane == 3
+    is_last = pos == seg_end - 1
+
+    # GET — gather from the round-entry table
+    resp_get = jnp.dot(oh * f(m_get)[:, None], table,
+                       preferred_element_type=jnp.float32)
+
+    # PUT — segment-last rows are the per-key winners (unique keys)
+    oh_p = oh * f(m_put & is_last)[:, None]
+    wrote = jnp.sum(oh_p, axis=0)                           # (K,) 0/1
+    table = table * (1.0 - wrote)[:, None] + \
+        jnp.dot(oh_p.T, value, preferred_element_type=jnp.float32)
+
+    # ADD — prior = earlier same-segment deltas (masked MXU matmul);
+    # old value = post-PUT table line + prior; totals scatter-add back
+    delta = value * f(m_add)[:, None]
+    prior = jnp.dot(f(earlier & sameseg), delta,
+                    preferred_element_type=jnp.float32)
+    oh_a = oh * f(m_add)[:, None]
+    base = jnp.dot(oh_a, table, preferred_element_type=jnp.float32)
+    resp_add = (base + prior) * f(m_add)[:, None]
+    table = table + jnp.dot(oh_a.T, delta,
+                            preferred_element_type=jnp.float32)
+
+    # CAS — compare against the post-ADD table; the LAST matching row of
+    # each segment commits (no later same-segment match exists)
+    oh_c = oh * f(m_cas)[:, None]
+    cur = jnp.dot(oh_c, table, preferred_element_type=jnp.float32)
+    ok = m_cas & jnp.all(cur == expect, axis=-1)
+    later_ok = jnp.dot(f(earlier & sameseg).T, f(ok)[:, None],
+                       preferred_element_type=jnp.float32)[:, 0]
+    oh_w = oh * f(ok & (later_ok == 0.0))[:, None]
+    wrote = jnp.sum(oh_w, axis=0)
+    table = table * (1.0 - wrote)[:, None] + \
+        jnp.dot(oh_w.T, value, preferred_element_type=jnp.float32)
+
+    table_out[...] = table
+    val_out[...] = resp_get + resp_add + cur
+    flag_out[0] = f(ok)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delegation_serve(table: jax.Array, keys: jax.Array, lane: jax.Array,
+                     value: jax.Array, expect: jax.Array,
+                     seg_id: jax.Array, seg_end: jax.Array,
+                     interpret: bool = True):
+    """Apply a grouped GET/PUT/ADD/CAS row batch to ``table`` in one pass.
+
+    All row inputs are in SORTED (grouping) coordinates:
+      table    (K, W) f32      the entrusted table shard
+      keys     (N,)  int32     local table index; >= K marks inactive rows
+      lane     (N,)  int32     0 GET | 1 PUT | 2 ADD | 3 CAS | -1 inactive
+      value    (N, W) f32      PUT/CAS new rows, ADD deltas
+      expect   (N, W) f32      CAS compare rows
+      seg_id   (N,)  int32     segment id (same value <=> same (op, key))
+      seg_end  (N,)  int32     one past the segment's last sorted position
+
+    Returns (new_table (K, W) f32, resp_value (N, W) f32, flag (N,) f32):
+    resp_value carries GET/ADD old values and CAS current values (zeros for
+    PUT/inactive rows), flag the CAS compare results.
+    """
+    k, w = table.shape
+    n = keys.shape[0]
+    # lane-align every axis (f32 tiling: 8 sublanes x 128 lanes); padded
+    # rows are inactive (lane -1, sentinel key, empty segment).  Inactive
+    # keys (>= the UNPADDED k) are remapped to the padded size kp, which
+    # the kernel's one-hot has no column for — otherwise a sentinel of
+    # exactly k would alias padded table line k when 8 does not divide k
+    kp, np_, wp = -(-k // 8) * 8, -(-n // 8) * 8, -(-w // 128) * 128
+    table_p = jnp.pad(table.astype(jnp.float32),
+                      ((0, kp - k), (0, wp - w)))
+    rpad = np_ - n
+    keys_p = jnp.pad(jnp.where(keys >= k, kp, keys), (0, rpad),
+                     constant_values=kp)
+    lane_p = jnp.pad(lane, (0, rpad), constant_values=-1)
+    segid_p = jnp.pad(seg_id, (0, rpad), constant_values=-1)
+    segend_p = jnp.pad(seg_end, (0, rpad), constant_values=0)
+    value_p = jnp.pad(value.astype(jnp.float32),
+                      ((0, rpad), (0, wp - w)))
+    expect_p = jnp.pad(expect.astype(jnp.float32),
+                       ((0, rpad), (0, wp - w)))
+
+    new_table, resp_value, flag = pl.pallas_call(
+        functools.partial(_serve_kernel, n=np_, k=kp),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((kp, wp), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((np_, wp), lambda i: (0, 0)),
+            pl.BlockSpec((np_, wp), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, wp), lambda i: (0, 0)),
+            pl.BlockSpec((np_, wp), lambda i: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, wp), jnp.float32),
+            jax.ShapeDtypeStruct((np_, wp), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table_p, keys_p.reshape(1, np_), lane_p.reshape(1, np_),
+      value_p, expect_p, segid_p.reshape(1, np_), segend_p.reshape(1, np_))
+    return new_table[:k, :w], resp_value[:n, :w], flag[0, :n]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .delegation_pack import delegation_pack as _pack_pallas
+from .delegation_serve import delegation_serve as _serve_pallas
 from .flash_attention import flash_attention as _fa_pallas
 from .grouped_matmul import grouped_matmul as _gmm_pallas
 from .selective_scan import selective_scan as _scan_pallas
@@ -83,6 +84,16 @@ def delegation_pack(dst, payload, n_trustees: int, capacity: int,
         dst, payload.astype(jnp.float32), n_trustees, capacity,
         interpret=interpret)
     return slots.astype(dtype), counts, req
+
+
+def delegation_serve(table, keys, lane, value, expect, seg_id, seg_end,
+                     interpret: bool = True):
+    """Fused trustee serve: apply a grouped GET/PUT/ADD/CAS row batch (in
+    the shared grouping's sorted order) to the table in ONE Pallas pass —
+    gathers, segment primitives and scatters as MXU matmuls.  See
+    ``delegation_serve.delegation_serve`` for the row contract."""
+    return _serve_pallas(table, keys, lane, value, expect, seg_id, seg_end,
+                         interpret=interpret)
 
 
 def grouped_matmul(x, w, impl: str = "ref", interpret: bool = True,

@@ -37,6 +37,12 @@ def main(argv=None):
                          "with a small primary block and drains deferred "
                          "increments over up to this many bounded retry "
                          "rounds (enables the ledger in shared mode too)")
+    ap.add_argument("--serve-impl", default="ref",
+                    choices=["ref", "pallas", "masked"],
+                    help="trustee serve hot path for the session stores: "
+                         "shared-grouping segment primitives (ref), the "
+                         "fused MXU serve kernel (pallas), or the legacy "
+                         "per-op masked passes (masked)")
     ap.add_argument("--session", action="store_true",
                     help="run store-level bookkeeping through the ambient "
                          "TrustSession: the token ledger AND a traffic "
@@ -120,9 +126,11 @@ def main(argv=None):
             # increments trickle through multi-round backpressure instead of
             # a worst-case-sized slot buffer (paper §5.1 wait semantics)
             led_kw = dict(capacity=1, overflow="defer",
-                          max_rounds=args.drain_rounds)
+                          max_rounds=args.drain_rounds,
+                          serve_impl=args.serve_impl)
         else:
-            led_kw = dict(capacity=max(4, args.batch))
+            led_kw = dict(capacity=max(4, args.batch),
+                          serve_impl=args.serve_impl)
         ledger = DelegatedKVStore(mesh, n_keys=args.batch, value_width=1,
                                   mode=led_mode, n_dedicated=led_n,
                                   name="ledger", **led_kw)

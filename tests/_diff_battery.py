@@ -193,6 +193,151 @@ def _dedicated_1x8():
                      what="dedicated(1x8,T=4)")
 
 
+# ---------------------------------------------------------------------------
+# Mixed-op conflict-heavy rounds: all four KV ops fused into ONE channel
+# round, keys squeezed onto 5 hot keys, across shared/shortcut/dedicated x
+# {ref,pallas} pack x {ref,pallas} serve — each bit-identical to the
+# sequential reference AND to the pre-refactor masked serve (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+N_HOT = 5                # key space for conflict-heavy rounds
+N_MIXED_ROUNDS = 4       # 4 rounds x 4 ops x 64 rows = 1024 ops
+
+
+def gen_mixed_trace(seed):
+    """Per round: one batch per op (get/put/add/cas), 64 rows each, keys
+    drawn from N_HOT hot keys.  CAS expects hit a plain-order sequential
+    replay ~half the time, so success and failure paths both exercise."""
+    from repro.core import SequentialKVReference
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    sim = SequentialKVReference(N_KEYS, VW)
+    sim.prefill(init)
+    rounds = []
+    for _ in range(N_MIXED_ROUNDS):
+        batches = {}
+        for op in ("get", "put", "add", "cas"):
+            keys = rng.integers(0, N_HOT, R).astype(np.int32)
+            vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+            expect = None
+            if op == "cas":
+                live = sim.table[keys].copy()
+                rand = rng.integers(0, 8, (R, VW)).astype(np.float32)
+                expect = np.where(rng.random(R)[:, None] < 0.5, live, rand)
+            batches[op] = (keys, vals, expect)
+        sim.get(batches["get"][0])
+        sim.put(*batches["put"][:2])
+        sim.add(*batches["add"][:2])
+        sim.cas(batches["cas"][0], batches["cas"][2], batches["cas"][1])
+        rounds.append(batches)
+    return init, rounds
+
+
+def mixed_ref_responses(init, rounds, shortcut: bool, n_dev: int = 8):
+    """Sequential replay of the fused rounds.  The fused batch concatenates
+    the four op batches and shards contiguously over clients, so with the
+    local shortcut each op's self-addressed rows serve AFTER its channel
+    rows; client id = global concat position // (4R / n_dev)."""
+    from repro.core import SequentialKVReference
+    ref = SequentialKVReference(N_KEYS, VW)
+    ref.prefill(init)
+    outs = []
+    for batches in rounds:
+        round_out = {}
+        for oi, op in enumerate(("get", "put", "add", "cas")):
+            keys, vals, expect = batches[op]
+            if shortcut:
+                client = (oi * R + np.arange(R)) // (4 * R // n_dev)
+                local = (keys % n_dev) == client
+                perm = np.concatenate([np.where(~local)[0],
+                                       np.where(local)[0]])
+            else:
+                perm = np.arange(R)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(R)
+            if op == "get":
+                round_out[op] = ref.get(keys[perm])[inv]
+            elif op == "put":
+                ref.put(keys[perm], vals[perm])
+            elif op == "add":
+                round_out[op] = ref.add(keys[perm], vals[perm])[inv]
+            else:
+                fl, old = ref.cas(keys[perm], expect[perm], vals[perm])
+                round_out[op] = (fl[inv], old[inv])
+        outs.append(round_out)
+    return outs, ref.dump()
+
+
+def mixed_store_responses(mesh, init, rounds, mode_kw, pack_impl, serve_impl):
+    import jax.numpy as jnp
+    from repro.core import DelegatedKVStore
+    st = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R, pack_impl=pack_impl,
+                          serve_impl=serve_impl, **mode_kw)
+    st.prefill(init)
+    outs = []
+    for batches in rounds:
+        fg = st.get_then(jnp.asarray(batches["get"][0]))
+        st.put_then(jnp.asarray(batches["put"][0]),
+                    jnp.asarray(batches["put"][1]))
+        fa = st.add_then(jnp.asarray(batches["add"][0]),
+                         jnp.asarray(batches["add"][1]))
+        ck, cv, ce = batches["cas"]
+        fc = st.trust.submit("cas", st.route(jnp.asarray(ck)),
+                             st._payload(jnp.asarray(ck), jnp.asarray(cv),
+                                         jnp.asarray(ce)))
+        st.flush()
+        outs.append({"get": np.asarray(fg.result()["value"]),
+                     "add": np.asarray(fa.result()["value"]),
+                     "cas": (np.asarray(fc.result()["flag"]),
+                             np.asarray(fc.result()["value"]))})
+    return outs, st.dump()
+
+
+def run_mixed_differential(mesh, trace, mode_kw, shortcut, what):
+    init, rounds = trace
+    want, want_table = mixed_ref_responses(init, rounds, shortcut)
+    runs = {}
+    for pack in ("ref", "pallas"):
+        for serve in ("ref", "pallas"):
+            runs[(pack, serve)] = mixed_store_responses(
+                mesh, init, rounds, mode_kw, pack, serve)
+    # the pre-refactor masked serve, same trace — every new path must also
+    # match it bit-for-bit
+    runs[("ref", "masked")] = mixed_store_responses(
+        mesh, init, rounds, mode_kw, "ref", "masked")
+    for cfg_key, (got, got_table) in runs.items():
+        tag = f"{what}/pack={cfg_key[0]}/serve={cfg_key[1]}"
+        for i, (g, w) in enumerate(zip(got, want)):
+            assert np.array_equal(g["get"], w["get"]), f"{tag} r{i}: get"
+            assert np.array_equal(g["add"], w["add"]), f"{tag} r{i}: add"
+            assert np.array_equal(g["cas"][0], w["cas"][0]), \
+                f"{tag} r{i}: cas flags"
+            assert np.array_equal(g["cas"][1], w["cas"][1]), \
+                f"{tag} r{i}: cas old"
+        assert np.array_equal(got_table, want_table), f"{tag}: table"
+
+
+@check("mixed_conflict_shared_matches_reference_and_masked")
+def _mixed_shared():
+    run_mixed_differential(mesh2x4(), gen_mixed_trace(50),
+                           {"local_shortcut": False}, shortcut=False,
+                           what="mixed/shared")
+
+
+@check("mixed_conflict_shortcut_matches_reference_and_masked")
+def _mixed_shortcut():
+    run_mixed_differential(mesh2x4(), gen_mixed_trace(51),
+                           {"local_shortcut": True}, shortcut=True,
+                           what="mixed/shortcut")
+
+
+@check("mixed_conflict_dedicated_matches_reference_and_masked")
+def _mixed_dedicated():
+    run_mixed_differential(mesh2x4(), gen_mixed_trace(52),
+                           {"mode": "dedicated", "n_dedicated": 3},
+                           shortcut=False, what="mixed/dedicated")
+
+
 @check("fused_round_op_table_order")
 def _fused():
     """submit(get) + submit(put) fused into ONE round serve all GETs before

@@ -247,9 +247,13 @@ def _stats():
     stats = ses.last_stats()
     assert set(stats) == {"kv", "rmw-lock"}, stats
     for name, d in stats.items():
-        assert set(d) == {"rounds", "residual", "demand_max"}, d
+        assert set(d) == {"rounds", "residual", "demand_max",
+                          "resp_bytes_saved"}, d
         assert d["rounds"] == 1 and d["residual"] == 0, (name, d)
         assert d["demand_max"] >= 1, (name, d)
+        # both stores GET+ADD in this round: only the flag plane elides,
+        # and the fused round reports the shared per-round saving
+        assert d["resp_bytes_saved"] >= 0, (name, d)
 
 
 @check("mux_defer_drain_matches_sequential")

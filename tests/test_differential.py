@@ -8,6 +8,10 @@ Two layers:
   with and without the local shortcut, dedicated mode on the 2x4 and 1x8
   meshes, and fused multi-op rounds — every response batch and the final
   table must be bit-identical to the reference on a >= 1k-op random trace.
+  The mixed_conflict checks fuse ALL FOUR KV ops into each channel round
+  over 5 hot keys and sweep {ref,pallas} pack x {ref,pallas} serve, each
+  compared bit-for-bit against the sequential reference AND the
+  pre-refactor masked serve (DESIGN.md §9).
 """
 import json
 import os
@@ -39,6 +43,9 @@ CHECKS = [
     "shared_shortcut_matches_reference",
     "dedicated_matches_reference",
     "dedicated_1x8_matches_reference",
+    "mixed_conflict_shared_matches_reference_and_masked",
+    "mixed_conflict_shortcut_matches_reference_and_masked",
+    "mixed_conflict_dedicated_matches_reference_and_masked",
     "fused_round_op_table_order",
 ]
 
