@@ -83,10 +83,7 @@ def main(argv=None):
 
         def async_round():
             for i in range(4):
-                st2.trust.submit("add", st2.route(keys[i * q:(i + 1) * q]),
-                                 {"key": keys[i * q:(i + 1) * q]
-                                  .astype(jnp.int32),
-                                  "value": ones[:q]})
+                st2.trust.op.add.then(keys[i * q:(i + 1) * q], ones[:q])
             st2.flush()
             block(st2.trust.state()["table"])
 

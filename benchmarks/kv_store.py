@@ -93,16 +93,13 @@ def main(argv=None):
             st = DelegatedKVStore(mesh, n_keys, W, capacity=0, **chan_kw)
             st.prefill(np.zeros((n_keys, W), np.float32))
 
-            route = st.route(keys)
-            get_dst = jnp.where(gk >= 0, route, -1)
-            put_dst = jnp.where(pk >= 0, route, -1)
+            get_mask = gk >= 0
+            put_mask = pk >= 0
 
             def trust_round():
-                st.trust.submit("get", get_dst,
-                                {"key": keys.astype(jnp.int32)})
-                st.trust.submit("put", put_dst,
-                                {"key": keys.astype(jnp.int32),
-                                 "value": vals})
+                # typed handles: routed by the schema, masked via where=
+                st.trust.op.get.then(keys, where=get_mask)
+                st.trust.op.put.then(keys, vals, where=put_mask)
                 st.flush()
                 block(st.trust.state()["table"])
 

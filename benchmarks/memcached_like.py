@@ -66,18 +66,15 @@ def main(argv=None):
             # ---- delegated memcached -------------------------------------
             st = DelegatedKVStore(mesh, n_keys, W, capacity=0)
             st.prefill(np.zeros((n_keys, W), np.float32))
-            route = st.route(keys)
-            get_dst = jnp.where(jnp.asarray(~is_write), route, -1)
-            put_dst = jnp.where(jnp.asarray(is_write), route, -1)
+            get_mask = jnp.asarray(~is_write)
+            put_mask = jnp.asarray(is_write)
             order = np.argsort(rng.random(R))    # response-reorder stub
 
             def delegated_round():
-                # state machine: parse (noop) -> async delegate per op kind
-                futs = [st.trust.submit("get", get_dst,
-                                        {"key": keys.astype(jnp.int32)}),
-                        st.trust.submit("put", put_dst,
-                                        {"key": keys.astype(jnp.int32),
-                                         "value": vals})]
+                # state machine: parse (noop) -> async typed delegate per
+                # op kind (schema-routed, masked via where=)
+                futs = [st.trust.op.get.then(keys, where=get_mask),
+                        st.trust.op.put.then(keys, vals, where=put_mask)]
                 st.flush()                       # one fused channel round
                 # order responses for the socket (paper §7 ordering step)
                 resp = futs[0].result()["value"][jnp.asarray(order)]

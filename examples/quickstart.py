@@ -1,4 +1,12 @@
-"""Quickstart: the Trust<T> API in five minutes (paper Figs. 1-3).
+"""Quickstart: the typed Trust<T> API in five minutes (paper Figs. 1-3).
+
+The Rust original is TYPE-safe as well as memory-safe: entrusted state is
+unreachable except through statically checked operations.  The SPMD
+translation of that contract is the declarative spec layer (DESIGN.md §10):
+declare ``Field``s, ``OpSpec``s and a ``TrustSchema``; ``entrust`` derives
+the runtime op table, the response structure and the routing rule, and the
+Trust grows typed op handles — ``trust.op.inc(deltas)`` — that validate
+every argument BEFORE anything rides the channel.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import (DelegatedKVStore, DelegatedOp, TrusteeGroup,
-                        current_session)
+from repro.core import (DelegatedKVStore, Field, OpSpec, SchemaError,
+                        TrusteeGroup, TrustSchema, current_session)
 
 
 def main():
@@ -17,30 +25,48 @@ def main():
     devs = np.array(jax.devices())
     mesh = Mesh(devs.reshape(1, len(devs)), ("data", "model"))
 
-    # --- Fig. 1: entrust a counter, apply closures to it -------------------
+    # --- Fig. 1: entrust a counter, apply typed ops to it -------------------
     def inc(state, rows, m, client):
         delta = jnp.where(m, rows["delta"], 0.0)
         return ({"ct": state["ct"].at[0].add(jnp.sum(delta))},
                 {"value": jnp.broadcast_to(state["ct"][0], m.shape)})
 
+    # the schema IS the delegated object's contract: payload/response
+    # fields, which fields each op writes (elision metadata), and the
+    # key→owner routing rule (the counter lives on trustee 0)
+    counter_schema = TrustSchema(
+        "counter",
+        ops=[OpSpec("inc",
+                    payload=[Field("delta", (), jnp.float32)],
+                    response=[Field("value", (), jnp.float32)],
+                    writes=["value"], serve=inc)],
+        state={"ct": Field("ct", (), jnp.float32)},
+        route=lambda payload, t: jnp.zeros_like(payload["delta"],
+                                                dtype=jnp.int32))
+
     group = TrusteeGroup(mesh, ("data", "model"))
     # one counter slot per trustee (state leading dim must divide over the
-    # group); trustee 0 owns the counter — every request routes to it
+    # group); trustee 0 owns the counter — the schema routes every request
     ct0 = jnp.zeros((group.n_trustees,)).at[0].set(17.0)
-    trust = group.entrust({"ct": ct0},
-                          ops=[DelegatedOp("inc", inc)],
-                          resp_like={"value": jnp.zeros((1,))}, capacity=8)
-    trust.apply("inc", jnp.zeros((2,), jnp.int32), {"delta": jnp.ones((2,))})
-    out = trust.apply("inc", jnp.zeros((1,), jnp.int32),
-                      {"delta": jnp.zeros((1,))})
+    trust = group.entrust({"ct": ct0}, schema=counter_schema, capacity=8)
+    trust.op.inc(jnp.ones((2,)))                 # typed, routed apply()
+    out = trust.op.inc(jnp.zeros((1,)))
     print(f"counter value: {float(out['value'][0])}  (paper asserts 19)")
     assert float(out["value"][0]) == 19.0
 
+    # a bad argument raises BEFORE any channel round — the submit-time
+    # type check the stringly API never had
+    try:
+        trust.op.inc(jnp.zeros((2, 3), jnp.int32))
+    except SchemaError as e:
+        print(f"typed API rejected a bad batch: {e}")
+    else:
+        raise AssertionError("SchemaError not raised for a bad batch")
+
     # --- Fig. 3: apply_then — async delegation with a then-callback --------
     got = []
-    fut = trust.submit("inc", jnp.zeros((1,), jnp.int32),
-                       {"delta": jnp.ones((1,))},
-                       then=lambda r: got.append(float(r["value"][0])))
+    fut = trust.op.inc.then(jnp.ones((1,)),
+                            then=lambda r: got.append(float(r["value"][0])))
     trust.flush()
     print(f"async then-callback saw counter = {got[0]}")
 
@@ -49,10 +75,11 @@ def main():
     store.put(jnp.arange(8), jnp.tile(jnp.arange(8.0)[:, None], (1, 4)))
     print("GET [3, 5] ->", np.asarray(store.get(jnp.array([3, 5]))[:, 0]))
 
-    # fetch-and-add, the paper's microbenchmark op
-    old = store.add(jnp.array([3, 3, 3]), jnp.ones((3, 4)))
+    # fetch-and-add, the paper's microbenchmark op — the facade above is a
+    # thin veneer over the same typed handles:
+    old = store.trust.op.add(jnp.array([3, 3, 3]), jnp.ones((3, 4)))
     print("three racing fetch-and-adds on key 3 returned (FIFO):",
-          np.asarray(old[:, 0]))
+          np.asarray(old["value"][:, 0]))
 
     # --- the session engine: ONE round for ALL trusts (DESIGN.md §8) --------
     # every entrusted object registers with the ambient TrustSession;
@@ -62,9 +89,9 @@ def main():
     session = current_session()
     counters = DelegatedKVStore(mesh, n_keys=64, value_width=4,
                                 name="counters")
-    got = store.get_then(jnp.array([3, 5]))
-    counters.put_then(jnp.arange(4), jnp.ones((4, 4)))
-    bumped = counters.add_then(jnp.arange(4), jnp.ones((4, 4)))
+    got = store.trust.op.get.then(jnp.array([3, 5]))
+    counters.trust.op.put.then(jnp.arange(4), jnp.ones((4, 4)))
+    bumped = counters.trust.op.add.then(jnp.arange(4), jnp.ones((4, 4)))
     session.step()              # ONE fused round serves both trusts
     print("fused-round GET [3, 5] ->", np.asarray(got.result()["value"][:, 0]))
     print("fused-round counters ->",

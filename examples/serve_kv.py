@@ -42,13 +42,10 @@ def main():
         keys = jnp.asarray(keys_np)
         vals = jnp.ones((len(keys_np), W), jnp.float32)
         if backend == "trust":
-            route = st.route(keys)
-            g = st.trust.submit("get",
-                                jnp.where(jnp.asarray(~is_write), route, -1),
-                                {"key": keys.astype(jnp.int32)})
-            st.trust.submit("put",
-                            jnp.where(jnp.asarray(is_write), route, -1),
-                            {"key": keys.astype(jnp.int32), "value": vals})
+            # typed handles (DESIGN.md §10): the schema routes the keys and
+            # validates the rows; where= deactivates the other op's subset
+            g = st.trust.op.get.then(keys, where=jnp.asarray(~is_write))
+            st.trust.op.put.then(keys, vals, where=jnp.asarray(is_write))
             # session API: step() flushes EVERY registered trust's pending
             # batches — with more entrusted objects in flight they would all
             # ride this one multiplexed channel round (DESIGN.md §8)

@@ -1,14 +1,18 @@
 # repro.core — Trust<T> delegation as a TPU-native distribution primitive.
 #
+# opspec.py    the typed spec layer: Field/OpSpec/TrustSchema, generated op
+#              handles, submit-time validation (DESIGN.md §10)
 # channel.py   the delegation channel (pack/transmit/serve/respond/unpack)
-# trust.py     Trust / TrusteeGroup — the user-facing apply()/apply_then() API
+# trust.py     Trust / TrusteeGroup — the user-facing typed-handle +
+#              apply()/apply_then() API
 # engine.py    DelegationEngine / TrustSession — one multiplexed round for
 #              all Trusts + the adaptive capacity planner (DESIGN.md §8)
-# kvstore.py   DelegatedKVStore (paper §6.3)
+# kvstore.py   DelegatedKVStore + make_kv_schema (paper §6.3)
 # lockstore.py lock-analog baselines (Fig. 6 competitors)
 # nested.py    launch()/nested delegation (chained channel rounds)
 # routing.py   key -> trustee routers + workload generators
 # meshctx.py   current-mesh + current-session threading for shard_map islands
+from .opspec import Field, OpSpec, SchemaError, TrustSchema
 from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
                       DelegationFuture, Grouping, Packed, Received,
                       check_response_structs, delegate, delegate_async,
@@ -17,7 +21,7 @@ from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
 from .engine import (CapacityPlanner, DelegationEngine, TrustSession,
                      check_payload_fields)
 from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
-from .kvstore import DelegatedKVStore, make_kv_ops
+from .kvstore import DelegatedKVStore, make_kv_ops, make_kv_schema
 from .lockstore import (AtomicAddStore, FetchRMWStore, SequentialKVReference,
                         conflict_ranks)
 from .meshctx import (constrain, current_mesh, current_session,
@@ -27,6 +31,7 @@ from .routing import partition_clients_trustees, trustee_device_slot
 from .nested import launch_serve
 
 __all__ = [
+    "Field", "OpSpec", "SchemaError", "TrustSchema",
     "ChannelConfig", "ChannelInfo", "DelegatedOp", "DelegationFuture",
     "Grouping", "Packed", "Received", "check_response_structs",
     "delegate", "delegate_async", "delegate_drain", "make_grouping",
@@ -34,7 +39,7 @@ __all__ = [
     "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
     "local_trustees", "CapacityPlanner", "DelegationEngine", "TrustSession",
     "check_payload_fields", "DelegatedKVStore", "make_kv_ops",
-    "AtomicAddStore",
+    "make_kv_schema", "AtomicAddStore",
     "FetchRMWStore", "SequentialKVReference", "conflict_ranks", "constrain",
     "current_mesh", "current_session", "delegation_mode",
     "set_delegation_mode", "set_session", "use_mesh", "use_session",

@@ -80,6 +80,18 @@ class ChannelConfig:
             return self.capacity + self.overflow_capacity
         return self.capacity
 
+    def fuse_sig(self) -> Tuple:
+        """Channel-compatibility signature: the config fields two Trusts
+        must agree on to share one multiplexed engine round (DESIGN.md §8).
+        Capacity is included deliberately — an explicit slot budget is a
+        SEMANTIC choice (what drops/defers), so differently provisioned
+        trusts never fuse.  Declared here (next to the fields) rather than
+        as an ad-hoc tuple inside the engine so config growth cannot
+        silently fall out of the fuse step."""
+        return (self.axis, self.overflow, self.local_shortcut,
+                self.pack_impl, self.serve_impl, self.mode, self.n_clients,
+                self.max_rounds, self.capacity, self.overflow_capacity)
+
     def n_slots(self, n_trustees: int) -> int:
         """Destination slots per device in the all_to_all block layout.
 
@@ -855,7 +867,12 @@ class DelegatedOp:
 
     ``apply`` itself stays the pre-grouping 4-arg masked implementation —
     ``serve_impl="masked"`` (the differential reference) and ops outside
-    the grouped path run it unchanged."""
+    the grouped path run it unchanged.
+
+    A DelegatedOp is the COMPILED ARTIFACT of an ``opspec.OpSpec``
+    (``TrustSchema.delegated_ops`` builds the table and ``spec`` points
+    back at the declaration); hand-constructing one remains supported for
+    schema-less trusts (DESIGN.md §10)."""
     name: str
     apply: Callable
     group_key: Optional[Callable] = None
@@ -863,6 +880,7 @@ class DelegatedOp:
     resp_fields: Optional[Tuple[str, ...]] = None
     apply_grouped: Optional[Callable] = None
     fused: Any = None
+    spec: Any = None
 
 
 def check_response_structs(named_resps) -> None:

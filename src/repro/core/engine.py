@@ -21,8 +21,11 @@ The engine (exposed as the ambient ``TrustSession`` via
     and one response transpose.  Each Trust gets its new state and per-batch
     responses back in request order.
   * the compiled-program cache lives here, keyed on the multiplexed batch
-    signature (trust tokens x op ids x batch sizes x payload avals x
-    capacity) — it replaces the per-Trust ``_exec_cache``.
+    signature (trust tokens x ``Trust.batch_signature`` x capacity, where
+    the batch signature is SCHEMA IDENTITY + op ids + sizes for schema'd
+    trusts — submit-time validation pins the payload avals — and the
+    per-leaf aval tuple otherwise) — it replaces the per-Trust
+    ``_exec_cache``.
   * a ``CapacityPlanner`` turns the per-trustee demand telemetry the channel
     always computed (``group_sizes`` from ``_group_positions``, previously
     discarded) into an EMA that auto-sizes ``capacity``/``overflow_capacity``
@@ -239,17 +242,15 @@ class DelegationEngine:
 
     # -- step: one multiplexed round for everything pending -----------------
     def _mux_signature(self, trust):
-        # capacity/overflow_capacity are part of the signature: a trust's
-        # explicit slot budget is a SEMANTIC choice (what drops/defers), so
-        # trusts provisioned differently never fuse — each lane must keep
-        # its solo capacity behavior bit-for-bit
+        # the fuse signature is DECLARED by the trust/config layer
+        # (Trust.fuse_signature -> ChannelConfig.fuse_sig) rather than
+        # assembled ad hoc here; capacity/overflow_capacity are part of it
+        # because an explicit slot budget is a SEMANTIC choice (what
+        # drops/defers), so trusts provisioned differently never fuse —
+        # each lane must keep its solo capacity behavior bit-for-bit
         sig = getattr(trust, "_mux_sig", None)
         if sig is None:
-            g, cfg = trust.group, trust.cfg
-            sig = (g.mesh, g.axes, g.mode, g.n_dedicated, cfg.overflow,
-                   cfg.local_shortcut, cfg.pack_impl, cfg.serve_impl,
-                   cfg.max_rounds, cfg.n_clients, cfg.capacity,
-                   cfg.overflow_capacity)
+            sig = trust.fuse_signature()
             trust._mux_sig = sig
         return sig
 
@@ -310,15 +311,24 @@ class DelegationEngine:
             cfg = dataclasses.replace(
                 cfg, capacity=cap,
                 overflow_capacity=trust.cfg.overflow_capacity or over)
+        # cache key: schema'd trusts key on SCHEMA IDENTITY (validation
+        # pinned the payload avals at submit), stringly trusts on the
+        # per-leaf aval tuple (trust.batch_signature)
         key = ("solo", (trust.token,),
-               tuple(b[0] for b in batches), tuple(sizes),
-               tuple(_payload_sig(b[2]) for b in batches),
+               trust.batch_signature([b[0] for b in batches], sizes,
+                                     [b[2] for b in batches]),
                cfg.capacity, cfg.overflow_capacity)
         if key not in self._cache:
             fn, saved = _build_solo(trust, batches, cfg)
             self._cache[key] = (jax.jit(fn), fn, saved)
-        new_state, resps, rounds, residual, demand = self._cache[key][0](
-            trust._state, [b[1] for b in batches], [b[2] for b in batches])
+        jitted, raw, _saved = self._cache[key]
+        args = (trust._state, [b[1] for b in batches],
+                [b[2] for b in batches])
+        new_state, resps, rounds, residual, demand = jitted(*args)
+        # jaxpr-inspection hook (shape/dtype avals only), matching _run_mux
+        self.last_exec = (raw, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.asarray(x).shape,
+                                           jnp.asarray(x).dtype), args))
         trust._state = new_state
         trust._last_stats = (rounds, residual)
         self.planner.observe(sig, demand)
@@ -374,9 +384,9 @@ class DelegationEngine:
             sizes = [[b[1].shape[0] for b in tb] for tb in batches]
             cfg = self._mux_cfg(trusts, [sum(s) for s in sizes])
             key = ("mux", tuple(t.token for t in trusts),
-                   tuple((tuple(b[0] for b in tb), tuple(sz),
-                          tuple(_payload_sig(b[2]) for b in tb))
-                         for tb, sz in zip(batches, sizes)),
+                   tuple(t.batch_signature([b[0] for b in tb], sz,
+                                           [b[2] for b in tb])
+                         for t, tb, sz in zip(trusts, batches, sizes)),
                    cfg.capacity, cfg.overflow_capacity)
             if key not in self._cache:
                 fn, saved = _build_mux(trusts, batches, cfg)

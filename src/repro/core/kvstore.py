@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .channel import DelegatedOp, Received
+from .opspec import Field, OpSpec, TrustSchema
 from .trust import Trust, TrusteeGroup
 from . import routing
 
@@ -201,11 +202,18 @@ class KVTableServe:
                 "flag": unsrt(flag_s).astype(jnp.int32)}
 
 
-def make_kv_ops(n_trustees: int, value_width: int,
-                dtype=jnp.float32) -> Tuple[DelegatedOp, ...]:
-    """Build the op table.  Local key index = key // n_trustees (mod router).
+def make_kv_schema(n_trustees: int, value_width: int,
+                   dtype=jnp.float32) -> TrustSchema:
+    """The paper's KV store (§6.3) as a declarative ``TrustSchema``.
 
-    Each op's ``apply`` is the pre-grouping masked implementation — the
+    Everything ``entrust`` needs derives from here (DESIGN.md §10): the
+    payload/response Fields (typed, validated at handle-call time), the
+    response struct (``resp_like``), the per-op ``writes`` elision
+    metadata, and the mod-router key→owner rule — so callers of the typed
+    handles pass keys, never shard ids.  Local key index =
+    key // n_trustees (mod router).
+
+    Each op's ``serve`` is the pre-grouping masked implementation — the
     ``serve_impl="masked"`` differential reference, byte-for-byte the old
     serve.  All four ops share ONE ``KVTableServe`` provider (``fused``),
     so grouped rounds (``serve_impl="ref"|"pallas"``) apply the whole mix
@@ -255,15 +263,31 @@ def make_kv_ops(n_trustees: int, value_width: int,
         return {**state, "table": table}, \
                {"value": _mask(cur, m), "flag": ok.astype(jnp.int32)}
 
-    kw = dict(group_key=fused.group_key, fused=fused)
-    return (DelegatedOp("get", get, kernel_lane="get",
-                        resp_fields=("value",), **kw),
-            DelegatedOp("put", put, kernel_lane="put",
-                        resp_fields=(), **kw),
-            DelegatedOp("add", add, kernel_lane="add",
-                        resp_fields=("value",), **kw),
-            DelegatedOp("cas", cas, kernel_lane="cas",
-                        resp_fields=("value", "flag"), **kw))
+    key_f = Field("key", (), jnp.int32)
+    value_f = Field("value", (value_width,), dtype)
+    expect_f = Field("expect", (value_width,), dtype)
+    resp = (Field("value", (value_width,), dtype), Field("flag", (), jnp.int32))
+    kw = dict(response=resp, group_key=fused.group_key, fused=fused)
+    return TrustSchema(
+        "kv",
+        ops=[OpSpec("get", payload=(key_f,), writes=("value",),
+                    serve=get, kernel_lane="get", **kw),
+             OpSpec("put", payload=(key_f, value_f), writes=(),
+                    serve=put, kernel_lane="put", **kw),
+             OpSpec("add", payload=(key_f, value_f), writes=("value",),
+                    serve=add, kernel_lane="add", **kw),
+             OpSpec("cas", payload=(key_f, value_f, expect_f),
+                    writes=("value", "flag"),
+                    serve=cas, kernel_lane="cas", **kw)],
+        state={"table": Field("table", (value_width,), dtype)},
+        route=lambda payload, t: routing.mod_router(payload["key"], t))
+
+
+def make_kv_ops(n_trustees: int, value_width: int,
+                dtype=jnp.float32) -> Tuple[DelegatedOp, ...]:
+    """Back-compat: the compiled op table of ``make_kv_schema`` (each
+    ``DelegatedOp`` is the compiled artifact of one ``OpSpec``)."""
+    return make_kv_schema(n_trustees, value_width, dtype).delegated_ops()
 
 
 class DelegatedKVStore:
@@ -293,14 +317,14 @@ class DelegatedKVStore:
         self.n_keys_padded = ((n_keys + t - 1) // t) * t
         self.value_width = value_width
         table = jnp.zeros((self.n_keys_padded, value_width), dtype)
-        resp_like = {"value": jnp.zeros((1, value_width), dtype),
-                     "flag": jnp.zeros((1,), jnp.int32)}
-        ops = make_kv_ops(t, value_width, dtype)
+        self.schema = make_kv_schema(t, value_width, dtype)
         # entrusting registers the trust with the (ambient or given)
         # TrustSession, so session.step() can fuse this store's pending
-        # batches with every other registered Trust's into one round
+        # batches with every other registered Trust's into one round;
+        # the op table, resp_like and elision metadata derive from the
+        # schema, and self.trust.op carries the typed handles
         self.trust = group.entrust(
-            {"table": table}, ops, resp_like,
+            {"table": table}, schema=self.schema,
             capacity=capacity, overflow=overflow,
             overflow_capacity=overflow_capacity,
             local_shortcut=local_shortcut, max_rounds=max_rounds,
@@ -316,9 +340,14 @@ class DelegatedKVStore:
 
     # -- routing ---------------------------------------------------------
     def route(self, keys: jax.Array) -> jax.Array:
+        """Key → trustee (the schema's router).  Only needed by callers of
+        the stringly ``trust.apply``/``submit`` shims; the typed handles
+        route internally."""
         return routing.mod_router(keys, self.t)
 
     def _payload(self, keys, value=None, expect=None):
+        """Back-compat payload builder for the stringly shims (the typed
+        handles bind and validate arguments through the schema instead)."""
         p = {"key": keys.astype(jnp.int32)}
         if value is not None:
             p["value"] = value.astype(self.dtype)
@@ -326,36 +355,33 @@ class DelegatedKVStore:
             p["expect"] = expect.astype(self.dtype)
         return p
 
-    # -- sync API ----------------------------------------------------------
+    # -- sync API (typed handles: routed + validated) -----------------------
     def get(self, keys):
-        r = self.trust.apply("get", self.route(keys), self._payload(keys))
-        return r["value"]
+        return self.trust.op.get(keys)["value"]
 
     def put(self, keys, values):
-        self.trust.apply("put", self.route(keys), self._payload(keys, values))
+        self.trust.op.put(keys, values)
 
     def add(self, keys, deltas):
-        r = self.trust.apply("add", self.route(keys),
-                             self._payload(keys, deltas))
-        return r["value"]
+        return self.trust.op.add(keys, deltas)["value"]
 
     def cas(self, keys, expect, values):
-        r = self.trust.apply("cas", self.route(keys),
-                             self._payload(keys, values, expect))
+        r = self.trust.op.cas(keys, value=values, expect=expect)
         return r["flag"], r["value"]
 
     # -- async API (apply_then) ---------------------------------------------
     def get_then(self, keys, then=None):
-        return self.trust.submit("get", self.route(keys),
-                                 self._payload(keys), then=then)
+        return self.trust.op.get.then(keys, then=then)
 
     def put_then(self, keys, values, then=None):
-        return self.trust.submit("put", self.route(keys),
-                                 self._payload(keys, values), then=then)
+        return self.trust.op.put.then(keys, values, then=then)
 
     def add_then(self, keys, deltas, then=None):
-        return self.trust.submit("add", self.route(keys),
-                                 self._payload(keys, deltas), then=then)
+        return self.trust.op.add.then(keys, deltas, then=then)
+
+    def cas_then(self, keys, expect, values, then=None):
+        return self.trust.op.cas.then(keys, value=values, expect=expect,
+                                      then=then)
 
     def flush(self):
         self.trust.flush()

@@ -160,19 +160,17 @@ class FetchRMWStore:
         ranks = jnp.asarray(ranks)
         out = jnp.zeros((keys.shape[0], self.value_width),
                         self.store.dtype)
+        op = self.store.trust.op
         for r in range(n_rounds):
             active = ranks == r
             ks = jnp.where(active, keys, -1)
-            dst = jnp.where(active, self.store.route(keys), -1)
-            # acquire + fetch: rows travel owner -> client
-            got = self.store.trust.apply(
-                "get", dst, {"key": ks.astype(jnp.int32)})
+            # acquire + fetch: rows travel owner -> client (typed handle:
+            # dst = schema route, masked rows deactivated via where=)
+            got = op.get(ks, where=active)
             new_rows = crit_fn(got["value"],
                                payload if payload is not None else got["value"])
             # write back + release: rows travel client -> owner
-            self.store.trust.apply(
-                "put", dst, {"key": ks.astype(jnp.int32),
-                             "value": new_rows.astype(self.store.dtype)})
+            op.put(ks, new_rows, where=active)
             m = active[:, None]
             out = jnp.where(m, got["value"], out)
             self.n_rounds_executed += 1
@@ -187,15 +185,12 @@ class FetchRMWStore:
         if self.rw_lock:
             # writers still serialize per conflicting key
             ranks = jnp.asarray(ranks)
+            op = self.store.trust.op
             for r in range(n_rounds):
                 active = ranks == r
-                dst = jnp.where(active, self.store.route(keys), -1)
-                got = self.store.trust.apply(           # exclusive acquire
-                    "get", dst, {"key": keys.astype(jnp.int32)})
+                got = op.get(keys, where=active)        # exclusive acquire
                 del got
-                self.store.trust.apply(
-                    "put", dst, {"key": keys.astype(jnp.int32),
-                                 "value": values.astype(self.store.dtype)})
+                op.put(keys, values, where=active)
                 self.n_rounds_executed += 1
         else:
             _, n = conflict_ranks(np.asarray(keys), 0)

@@ -2,16 +2,24 @@
 
 ``entrust`` places a pytree of state under the care of trustees laid out along
 one or more mesh axes.  The state is then *only* reachable through the
-``apply`` family, which routes batched requests to owners over the delegation
-channel and returns responses in request order:
+delegation channel.  The TYPED path (DESIGN.md §10) entrusts against a
+declarative ``TrustSchema`` (opspec.py) and uses the generated op handles —
+callers pass keys and row batches; routing, validation, response structure
+and elision metadata all derive from the schema:
 
     group = TrusteeGroup(mesh, axis=("data", "model"))     # every chip serves
     ded   = TrusteeGroup(mesh, axis=("data", "model"),     # reserved trustee
                          mode="dedicated", n_dedicated=2)  # cores serve rest
-    trust = group.entrust(table, ops=[GET, PUT], resp_like=...)
-    vals  = trust.apply("get", keys, {})                   # sync apply()
-    fut   = trust.submit("put", keys, {"value": v})        # apply_then()
+    trust = group.entrust(table, schema=kv_schema)
+    vals  = trust.op.get(keys)                             # sync apply()
+    fut   = trust.op.put.then(keys, values)                # apply_then()
     trust.flush()                                          # one fused program
+
+The stringly path is kept as a thin shim over the same machinery —
+``trust.apply("get", dst, {"key": k})`` / ``trust.submit(...)`` — validated
+through the schema when one exists, and required for schema-less trusts
+built from raw ``DelegatedOp`` tables.  Both paths produce bit-identical
+programs (they share the engine's compiled-program cache entry).
 
 Differences from the Rust original (DESIGN.md §2): closures are entries in a
 static op table; requests are rows of serializable values (the paper imposes
@@ -36,6 +44,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .channel import ChannelConfig, DelegatedOp
+from .opspec import OpNamespace, TrustSchema
 
 Pytree = Any
 
@@ -104,15 +113,24 @@ class TrusteeGroup:
             return self.axis_size - self.n_dedicated
         return self.axis_size
 
-    def entrust(self, state: Pytree, ops: Sequence[DelegatedOp],
-                resp_like: Pytree, state_specs: Optional[Pytree] = None,
+    def entrust(self, state: Pytree, ops: Optional[Sequence[DelegatedOp]] = None,
+                resp_like: Optional[Pytree] = None,
+                state_specs: Optional[Pytree] = None,
                 capacity: Optional[int] = None, overflow: str = "second_round",
                 overflow_capacity: int = 0, local_shortcut: bool = True,
                 max_rounds: int = 1, pack_impl: str = "ref",
                 serve_impl: str = "ref",
                 name: Optional[str] = None, plan_capacity: bool = False,
-                session=None) -> "Trust":
+                session=None, schema: Optional[TrustSchema] = None) -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
+
+        The TYPED form passes ``schema=`` (a ``TrustSchema``, DESIGN.md
+        §10): the op table, ``resp_like``, per-op elision metadata and the
+        routing rule all derive from it, the state pytree is validated
+        against the state schema, and the returned Trust carries generated
+        op handles (``trust.op.get(keys)``).  The legacy form passes
+        ``ops=`` (raw ``DelegatedOp``s) plus a hand-built ``resp_like``;
+        it remains fully supported but skips submit-time validation.
 
         state leaves must have a leading dim divisible by n_trustees (the
         owner shard dim) unless ``state_specs`` overrides the layout.  In
@@ -141,6 +159,18 @@ class TrusteeGroup:
         batches with every other registered Trust's into one multiplexed
         channel round.
         """
+        if schema is not None:
+            if ops is not None or resp_like is not None:
+                raise ValueError(
+                    "entrust takes EITHER schema= (typed, derives ops and "
+                    "resp_like) OR ops=/resp_like= (legacy), not both")
+            schema.validate_state(state)
+            ops = schema.delegated_ops()
+            resp_like = schema.resp_like()
+        elif ops is None or resp_like is None:
+            raise ValueError(
+                "entrust needs a schema= (typed path) or both ops= and "
+                "resp_like= (legacy path)")
         if state_specs is None:
             state_specs = jax.tree.map(lambda _: P(self.axes), state)
         if self.mode == "dedicated":
@@ -172,20 +202,31 @@ class TrusteeGroup:
                             else 0,
                             max_rounds=max_rounds)
         return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg,
-                     name=name, plan_capacity=plan_capacity, session=session)
+                     name=name, plan_capacity=plan_capacity, session=session,
+                     schema=schema)
 
 
 @dataclass
 class TrustFuture:
-    """Host-level future for ``submit`` (apply_then analog)."""
+    """Host-level future for ``submit`` (apply_then analog).
+
+    ``trust``/``op`` name the submission so an early ``result()`` read
+    raises a message that says WHICH queued batch is unserved (matching
+    the ``last_drain_stats`` RuntimeError contract)."""
     _result: Optional[Pytree] = None
     _then: Optional[Callable[[Pytree], None]] = None
+    trust: str = ""
+    op: str = ""
 
     def ready(self) -> bool:
         return self._result is not None
 
     def result(self) -> Pytree:
-        assert self._result is not None, "flush() the trust first"
+        if self._result is None:
+            raise RuntimeError(
+                f"result of op {self.op!r} on trust {self.trust!r} is not "
+                f"ready: the submitted batch has not been served — flush() "
+                f"the trust (or run session.step()) first")
         return self._result
 
     def _fulfil(self, value: Pytree) -> None:
@@ -197,6 +238,12 @@ class TrustFuture:
 class Trust:
     """Reference to entrusted state.  Clone freely (it is just a handle).
 
+    A schema'd Trust exposes the TYPED surface as ``trust.op`` — one
+    generated handle per OpSpec (``trust.op.get(keys)`` /
+    ``trust.op.get.then(keys)``), each validating its arguments and
+    routing through the schema before anything queues.  ``apply`` and
+    ``submit`` remain as stringly shims over the same machinery.
+
     Execution is owned by the session ``DelegationEngine`` the Trust
     registers with at construction: ``apply``/``flush`` run the solo fast
     path through it, ``submit`` enqueues for either ``flush`` (solo) or
@@ -206,7 +253,7 @@ class Trust:
                  ops: Tuple[DelegatedOp, ...], resp_like: Pytree,
                  state_specs: Pytree, cfg: ChannelConfig,
                  name: Optional[str] = None, plan_capacity: bool = False,
-                 session=None):
+                 session=None, schema: Optional[TrustSchema] = None):
         self.group = group
         self._state = state
         self.ops = ops
@@ -214,6 +261,8 @@ class Trust:
         self.resp_like = resp_like
         self.state_specs = state_specs
         self.cfg = cfg
+        self.schema = schema
+        self.op = OpNamespace(self, schema) if schema is not None else None
         self.plan_capacity = plan_capacity
         self._pending: List[Tuple[int, jax.Array, Pytree, TrustFuture]] = []
         self._last_stats = None
@@ -248,24 +297,56 @@ class Trust:
         return jax.tree.map(strip, self._state)
 
     # -- core API ------------------------------------------------------------
+    # The typed handles (``trust.op.<name>``) and the stringly shims below
+    # both funnel into ``_apply_validated``/``_submit_validated``; for a
+    # schema'd trust every entry point validates against the OpSpec FIRST,
+    # so a bad batch raises before anything is queued (queued batches stay
+    # untouched and no channel round runs).
+
+    def _apply_validated(self, op_id: int, dst: jax.Array, payload: Pytree,
+                         capacity: Optional[int] = None) -> Pytree:
+        self.flush()
+        resp = self.session.run_solo(self, [(op_id, dst, payload)], capacity)
+        return resp[0]
+
+    def _submit_validated(self, op_id: int, dst: jax.Array, payload: Pytree,
+                          then: Optional[Callable] = None) -> TrustFuture:
+        fut = TrustFuture(_then=then, trust=self.name,
+                          op=self.ops[op_id].name)
+        self._pending.append((op_id, dst, payload, fut))
+        self.session.notify(self)
+        return fut
+
+    def _shim(self, op: str, payload: Pytree) -> Tuple[int, Pytree]:
+        """The stringly entry points' validation step: an unknown op name
+        raises ``KeyError`` on both the schema'd and schema-less paths
+        (the pre-schema behavior); schema'd trusts additionally validate
+        and coerce the payload dict against the OpSpec (``SchemaError``)."""
+        if self.schema is not None:
+            payload = self.schema.bind_payload(op, payload)
+        elif op not in self.op_index:
+            raise KeyError(
+                f"trust {self.name!r} has no op {op!r} "
+                f"(ops: {[o.name for o in self.ops]})")
+        return self.op_index[op], payload
+
     def apply(self, op: str, dst: jax.Array, payload: Pytree,
               capacity: Optional[int] = None) -> Pytree:
-        """Synchronous delegation (paper apply()): blocks for the response."""
-        self.flush()
-        resp = self.session.run_solo(
-            self, [(self.op_index[op], dst, payload)], capacity)
-        return resp[0]
+        """Synchronous delegation (paper apply()): blocks for the response.
+        Stringly shim over the typed path — prefer ``trust.op.<name>(...)``
+        on schema'd trusts (same program, routed and validated)."""
+        op_id, payload = self._shim(op, payload)
+        return self._apply_validated(op_id, dst, payload, capacity)
 
     def submit(self, op: str, dst: jax.Array, payload: Pytree,
                then: Optional[Callable] = None) -> TrustFuture:
         """apply_then(): queue the request batch; executed at flush() or at
         the next ``session.step()``.  All queued batches ride ONE channel
         round (request batching, §5.3) — across every registered Trust when
-        the round runs through the session engine."""
-        fut = TrustFuture(_then=then)
-        self._pending.append((self.op_index[op], dst, payload, fut))
-        self.session.notify(self)
-        return fut
+        the round runs through the session engine.  Stringly shim — prefer
+        ``trust.op.<name>.then(...)`` on schema'd trusts."""
+        op_id, payload = self._shim(op, payload)
+        return self._submit_validated(op_id, dst, payload, then)
 
     def flush(self, capacity: Optional[int] = None) -> None:
         """Run this trust's queued batches as ONE solo channel round."""
@@ -308,6 +389,30 @@ class Trust:
         return dataclasses.replace(
             self.cfg, capacity=cap,
             overflow_capacity=self.cfg.overflow_capacity or over)
+
+    def fuse_signature(self) -> Tuple:
+        """Channel-compatibility signature for the engine's fuse step:
+        trustee-group identity plus ``ChannelConfig.fuse_sig()``.  Trusts
+        with equal signatures may share one multiplexed round (DESIGN.md
+        §8); the engine caches the tuple on the Trust."""
+        g = self.group
+        return (g.mesh, g.axes, g.mode, g.n_dedicated) + self.cfg.fuse_sig()
+
+    def batch_signature(self, op_ids, sizes, payloads) -> Tuple:
+        """Compiled-program cache-key component for a set of queued
+        batches.  A schema'd trust keys on SCHEMA IDENTITY — submit-time
+        validation pins every payload aval to the declared Fields, so
+        (schema, op ids, sizes) determines the program and the per-leaf
+        aval hashing the stringly path pays is skipped.  Schema-less
+        trusts keep the aval tuple."""
+        if self.schema is not None:
+            # the schema object itself (identity-hashed) — it outlives the
+            # cache entry because the trust holds it and dead trusts prune
+            # their entries
+            return (self.schema, tuple(op_ids), tuple(sizes))
+        from .engine import _payload_sig
+        return (tuple(op_ids), tuple(sizes),
+                tuple(_payload_sig(p) for p in payloads))
 
     def last_drain_stats(self) -> Dict[str, int]:
         """Telemetry from the most recent channel execution: rounds used and

@@ -160,12 +160,13 @@ def main(argv=None):
             outputs.append(np.asarray(prev))
             if session is not None:
                 # ONE multiplexed engine round serves every registered
-                # Trust's wave: ledger increments + meter traffic
-                ledger.add_then(led_keys, led_ones)
-                meter.add_then(meter_keys, led_ones)
+                # Trust's wave: ledger increments + meter traffic (typed
+                # handles — the schema routes the keys, DESIGN.md §10)
+                ledger.trust.op.add.then(led_keys, led_ones)
+                meter.trust.op.add.then(meter_keys, led_ones)
                 session.step()
             elif ledger is not None:
-                ledger.add(led_keys, led_ones)
+                ledger.trust.op.add(led_keys, led_ones)
     dt = time.monotonic() - t0
     if ledger is not None:
         counts = ledger.dump()[:, 0].astype(int)

@@ -19,6 +19,16 @@ Two mechanisms, both direct translations of the paper (DESIGN.md §3):
    its shard and responds with the updated bf16 shard.  Compression must
    happen client-side *before* combining — exactly why it needs the channel
    rather than an all-reduce.  Used by the pure-DP trainer and benchmarks.
+
+The combiner's wire format is DECLARED, not hand-wired (DESIGN.md §10):
+``combine_op_spec(chunk)`` is the ``OpSpec`` of the delegated combine —
+payload rows ``q`` (int8 chunk) + ``scale`` (f32), response rows ``p``
+(the updated f32 chunk) — and the combiner validates incoming gradient
+rows against it before they enter the channel, the same submit-time
+check the typed Trust handles perform.  (The serve itself stays fused
+into the training step's ``shard_map`` rather than going through a
+``Trust``: the combine is a bulk all-to-all of every row each step, so
+there is nothing to route or mask per row.)
 """
 from __future__ import annotations
 
@@ -32,9 +42,23 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..core.opspec import Field, OpSpec
 from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
 
 Pytree = Any
+
+
+def combine_op_spec(chunk: int) -> OpSpec:
+    """The delegated gradient-combine op, declaratively: what one request
+    row carries over the channel and what comes back.  Used for row
+    validation at step time and for wire-size accounting
+    (``payload plane width`` = chunk int8 planes + 1 scale plane)."""
+    return OpSpec(
+        "grad_combine",
+        payload=(Field("q", (chunk,), jnp.int8),
+                 Field("scale", (1,), jnp.float32)),
+        response=(Field("p", (chunk,), jnp.float32),),
+        writes=("p",))
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +120,7 @@ class GradChannelCombiner:
     compress: str = "int8"     # "int8" | "none"
 
     def init(self, params: Pytree):
+        self.spec = combine_op_spec(self.chunk)
         flat, self._unravel = jax.flatten_util.ravel_pytree(params)
         n = flat.shape[0]
         t = int(self.mesh.shape[self.axis])
@@ -134,13 +159,27 @@ class GradChannelCombiner:
         cfg, axis, chunk = self.cfg, self.axis, self.chunk
         t, rows = self._t, self._rows
         compress = self.compress
+        spec = getattr(self, "spec", None) or combine_op_spec(chunk)
+        q_field = spec.payload[0]
+        scale_field = spec.payload[1]
 
         def update(opt_shard, err, grads_local_flat):
             # grads_local_flat: (rows*chunk,) this client's grad, owner-major
+            if grads_local_flat.shape != (rows * chunk,):
+                raise ValueError(
+                    f"op {spec.name!r}: expected a ({rows * chunk},) "
+                    f"owner-major flat gradient, got "
+                    f"{list(grads_local_flat.shape)}")
             g = grads_local_flat.reshape(rows, chunk)
             if compress == "int8":
                 target = g + err
                 q, scale = int8_quantize(target)
+                # the wire rows, validated against the declared OpSpec
+                # (dtype-kind or row-shape drift raises before the
+                # collective, naming op and field — same contract as the
+                # typed Trust handles)
+                q = q_field.bind(q, spec.name)
+                scale = scale_field.bind(scale, spec.name)
                 new_err = target - int8_dequantize(q, scale)
                 # delegation: all_to_all rows to owners (int8 + f32 scale)
                 qs = jax.lax.all_to_all(q.reshape(t, rows // t, chunk), axis,
@@ -176,4 +215,4 @@ class GradChannelCombiner:
 
 # re-export for train drivers
 __all__ = ["fsdp_specs", "opt_state_specs", "GradChannelCombiner",
-           "int8_quantize", "int8_dequantize"]
+           "combine_op_spec", "int8_quantize", "int8_dequantize"]

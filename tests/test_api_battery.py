@@ -1,0 +1,43 @@
+"""Typed-API differential battery assertions (DESIGN.md §10).
+
+The battery itself (tests/_api_battery.py) runs as a subprocess with 8
+simulated devices: ≥1k-op mixed GET/PUT/ADD/CAS traces through the typed
+op handles, bit-identical to the legacy stringly path across
+shared/shortcut/dedicated × pack_impl × serve_impl, plus the
+program-identity and collective-count acceptance checks.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_api_battery.py")
+
+
+@pytest.fixture(scope="session")
+def api_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "typed_matches_stringly_shared",
+    "typed_matches_stringly_shortcut",
+    "typed_matches_stringly_dedicated",
+    "typed_solo_same_collectives_as_legacy",
+    "typed_mux_one_request_one_response",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_typed_api_multidevice(api_battery, name):
+    res = api_battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"

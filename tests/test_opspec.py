@@ -1,0 +1,269 @@
+"""Typed delegation API (opspec.py, DESIGN.md §10) — in-process tests.
+
+Covers the spec-layer derivations (resp_like / resp_fields / plane widths
+from Field declarations), submit-time validation (bad batches raise naming
+op + field + expected vs got, BEFORE any channel round — queued batches
+stay untouched), the generated op handles (routed typed dispatch
+bit-identical to the stringly shims, sharing one compiled program), and
+the ``TrustFuture.result`` RuntimeError contract.  The 8-device
+differential battery lives in tests/test_api_battery.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (DelegatedKVStore, Field, OpSpec, SchemaError,
+                        TrusteeGroup, TrustSchema, make_kv_schema)
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Schema construction + derivation
+# ---------------------------------------------------------------------------
+
+def test_kv_schema_derives_resp_like_and_resp_fields():
+    schema = make_kv_schema(4, 3)
+    rl = schema.resp_like()
+    assert set(rl) == {"value", "flag"}
+    assert rl["value"].shape == (1, 3) and rl["value"].dtype == jnp.float32
+    assert rl["flag"].shape == (1,) and rl["flag"].dtype == jnp.int32
+    ops = {o.name: o for o in schema.delegated_ops()}
+    # writes= becomes the compiled op's resp_fields (elision metadata)
+    assert ops["get"].resp_fields == ("value",)
+    assert ops["put"].resp_fields == ()
+    assert ops["cas"].resp_fields == ("value", "flag")
+    # DelegatedOp is the compiled artifact of its OpSpec
+    assert ops["get"].spec is schema.ops[schema.op_index["get"]]
+    # the compiled table is cached (one table per schema)
+    assert schema.delegated_ops() is schema.delegated_ops()
+
+
+def test_plane_widths_match_channel_encoding():
+    """Field.plane_width must agree with channel._encode_planes, leaf by
+    leaf — the schema's wire-width derivation cannot drift from the
+    actual planes encoder."""
+    from repro.core.channel import _encode_planes
+    schema = make_kv_schema(2, 3)
+    r = 5
+    payload = {"key": jnp.zeros((r,), jnp.int32),
+               "value": jnp.zeros((r, 3), jnp.float32),
+               "expect": jnp.zeros((r, 3), jnp.float32)}
+    planes, _td, _decs = _encode_planes(payload, r)
+    assert planes.shape[1] == schema.payload_plane_width()
+    # int32 key -> hi/lo plane pair; f32 values -> one plane per element
+    assert schema.payload_plane_width() == 2 + 3 + 3
+    assert schema.payload_plane_width("get") == 2
+    resp = {"value": jnp.zeros((r, 3), jnp.float32),
+            "flag": jnp.zeros((r,), jnp.int32)}
+    rplanes, _td, _decs = _encode_planes(resp, r)
+    assert rplanes.shape[1] == schema.response_plane_width()
+
+
+def test_schema_rejects_inconsistent_field_declarations():
+    f = Field("x", (2,), jnp.float32)
+    g = Field("x", (3,), jnp.float32)          # same name, different shape
+    with pytest.raises(SchemaError, match="'x'"):
+        TrustSchema("bad", ops=[
+            OpSpec("a", payload=(f,), serve=lambda *a: None),
+            OpSpec("b", payload=(g,), serve=lambda *a: None)])
+
+
+def test_schema_rejects_mismatched_response_structs():
+    v = Field("v", (2,), jnp.float32)
+    w = Field("w", (2,), jnp.float32)
+    with pytest.raises(SchemaError, match="same struct"):
+        TrustSchema("bad", ops=[
+            OpSpec("a", response=(v,), serve=lambda *a: None),
+            OpSpec("b", response=(v, w), serve=lambda *a: None)])
+
+
+def test_opspec_rejects_unknown_writes():
+    with pytest.raises(SchemaError, match="writes"):
+        OpSpec("a", response=(Field("v", (2,)),), writes=("nope",),
+               serve=lambda *a: None)
+
+
+def test_opspec_rejects_reserved_field_names():
+    # 'where'/'then'/'capacity' are handle keywords; a payload field with
+    # one of those names could never be passed by keyword
+    for bad in ("where", "then", "capacity"):
+        with pytest.raises(SchemaError, match="reserved"):
+            OpSpec("a", payload=(Field(bad, ()),), serve=lambda *a: None)
+
+
+def test_entrust_validates_state_against_schema():
+    schema = make_kv_schema(1, 2)
+    group = TrusteeGroup(_mesh1(), ("data", "model"))
+    with pytest.raises(SchemaError, match="table"):
+        group.entrust({"table": jnp.zeros((8, 5))}, schema=schema)
+    with pytest.raises(SchemaError, match="leaves"):
+        group.entrust({"wrong": jnp.zeros((8, 2))}, schema=schema)
+
+
+def test_entrust_rejects_schema_plus_legacy_args():
+    schema = make_kv_schema(1, 2)
+    group = TrusteeGroup(_mesh1(), ("data", "model"))
+    with pytest.raises(ValueError, match="EITHER"):
+        group.entrust({"table": jnp.zeros((8, 2))}, schema=schema,
+                      resp_like={"value": jnp.zeros((1, 2))})
+    with pytest.raises(ValueError, match="schema="):
+        group.entrust({"table": jnp.zeros((8, 2))})
+
+
+# ---------------------------------------------------------------------------
+# Submit-time validation (satellite: no channel round runs on a bad batch)
+# ---------------------------------------------------------------------------
+
+def _store(**kw):
+    return DelegatedKVStore(_mesh1(), 16, 2, **kw)
+
+
+def test_handle_call_validates_before_anything_queues():
+    st = _store()
+    eng = st.session
+    st.trust.op.put.then(jnp.arange(4), jnp.ones((4, 2)))   # a good batch
+    queued = list(st.trust._pending)
+    n_cache = len(eng._cache)
+    cases = [
+        (lambda: st.trust.op.get(jnp.ones((3,))),            # float keys
+         ["'get'", "'key'", "int32", "float32"]),
+        (lambda: st.trust.op.put(jnp.arange(3)),             # missing field
+         ["'put'", "'value'", "missing"]),
+        (lambda: st.trust.op.add(jnp.arange(3), jnp.ones((3, 5))),  # shape
+         ["'add'", "'value'", "[2]", "[3, 5]"]),
+        (lambda: st.trust.op.get(jnp.arange(3), flag=1),     # unknown field
+         ["'get'", "'flag'"]),
+        (lambda: st.trust.op.cas.then(jnp.arange(3)),        # missing 2
+         ["'cas'", "'value'", "'expect'"]),
+    ]
+    for fn, needles in cases:
+        with pytest.raises(SchemaError) as ei:
+            fn()
+        msg = str(ei.value)
+        for needle in needles:
+            assert needle in msg, f"{needle!r} not in {msg!r}"
+        # nothing ran, nothing was queued or dropped, nothing compiled
+        assert st.trust._pending == queued
+        assert len(eng._cache) == n_cache
+    st.flush()                                  # the good batch still serves
+    assert np.array_equal(st.dump()[:4], np.ones((4, 2), np.float32))
+
+
+def test_stringly_shim_validates_on_schema_trusts():
+    st = _store()
+    with pytest.raises(SchemaError, match="'put'.*'value'"):
+        st.trust.submit("put", jnp.zeros((2,), jnp.int32),
+                        {"key": jnp.zeros((2,), jnp.int32)})
+    # unknown op names stay KeyError (the pre-schema shim behavior)
+    with pytest.raises(KeyError, match="no op"):
+        st.trust.apply("evict", jnp.zeros((2,), jnp.int32), {})
+    assert st.trust._pending == []
+
+
+def test_then_keyword_on_sync_call_points_at_then_api():
+    st = _store()
+    with pytest.raises(SchemaError, match="handle.then"):
+        st.trust.op.get(jnp.zeros((2,), jnp.int32), then=lambda r: None)
+
+
+def test_same_kind_casts_are_implicit_cross_kind_raise():
+    st = _store()
+    # int64-ish / int16 keys cast to the declared int32 silently (the
+    # legacy facades did the same astype)
+    st.trust.op.put(np.arange(4, dtype=np.int16),
+                    np.ones((4, 2), np.float64))   # f64 -> f32: same kind
+    assert np.array_equal(st.dump()[:4], np.ones((4, 2), np.float32))
+    with pytest.raises(SchemaError, match="kind"):
+        st.trust.op.put(jnp.arange(4), jnp.ones((4, 2), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Typed handles: routing, bit-identity with the shims, program sharing
+# ---------------------------------------------------------------------------
+
+def test_typed_and_stringly_paths_share_one_compiled_program():
+    """The acceptance bar: the typed handle and the legacy apply are the
+    SAME program — same engine cache entry (schema-identity key), same
+    responses bit-for-bit."""
+    st = _store(capacity=8)
+    eng = st.session
+    keys = jnp.array([3, 5, 3, 9])
+    vals = jnp.arange(8.0).reshape(4, 2)
+    st.prefill(np.arange(32, dtype=np.float32).reshape(16, 2))
+    legacy = st.trust.apply("add", st.route(keys),
+                            st._payload(keys, vals))
+    n_cache = len(eng._cache)
+    st.prefill(np.arange(32, dtype=np.float32).reshape(16, 2))
+    typed = st.trust.op.add(keys, vals)
+    assert len(eng._cache) == n_cache, \
+        "typed dispatch missed the legacy round's compiled program"
+    assert np.array_equal(np.asarray(legacy["value"]),
+                          np.asarray(typed["value"]))
+
+
+def test_where_mask_deactivates_rows():
+    st = _store(capacity=8)
+    st.prefill(np.arange(32, dtype=np.float32).reshape(16, 2))
+    keys = jnp.array([1, 2, 3, 4])
+    mask = jnp.array([True, False, True, False])
+    out = np.asarray(st.trust.op.get(keys, where=mask)["value"])
+    want = np.arange(32, dtype=np.float32).reshape(16, 2)[np.asarray(keys)]
+    assert np.array_equal(out[0], want[0]) and np.array_equal(out[2], want[2])
+    assert not out[1].any() and not out[3].any()   # masked rows: zeros
+
+
+def test_route_required_for_typed_handles():
+    def inc(state, rows, m, client):
+        return state, {"v": jnp.zeros(m.shape)}
+    schema = TrustSchema("routeless", ops=[
+        OpSpec("inc", payload=(Field("delta", ()),),
+               response=(Field("v", ()),), serve=inc)])
+    group = TrusteeGroup(_mesh1(), ("data", "model"))
+    t = group.entrust({"s": jnp.zeros((1,))}, schema=schema, capacity=4)
+    with pytest.raises(SchemaError, match="route"):
+        t.op.inc(jnp.ones((2,)))
+    # the stringly shim still works with an explicit dst
+    t.apply("inc", jnp.zeros((2,), jnp.int32), {"delta": jnp.ones((2,))})
+
+
+def test_op_namespace_surface():
+    st = _store()
+    assert st.trust.op.get is st.trust.op["get"]
+    assert "get" in repr(st.trust.op)
+    assert st.trust.op.get.spec.payload_names == ("key",)
+    with pytest.raises(AttributeError, match="evict"):
+        st.trust.op.evict
+    assert sorted(h.spec.name for h in st.trust.op) == \
+        ["add", "cas", "get", "put"]
+
+
+# ---------------------------------------------------------------------------
+# TrustFuture.result RuntimeError (satellite)
+# ---------------------------------------------------------------------------
+
+def test_future_result_raises_until_served():
+    st = _store(name="ledger9")
+    fut = st.trust.op.add.then(jnp.array([1]), jnp.ones((1, 2)))
+    assert not fut.ready()
+    with pytest.raises(RuntimeError) as ei:
+        fut.result()
+    msg = str(ei.value)
+    assert "'add'" in msg and "'ledger9'" in msg and "flush" in msg
+    st.flush()
+    assert fut.ready()
+    assert fut.result()["value"].shape == (1, 2)
+
+
+def test_future_names_op_through_stringly_shim():
+    st = _store(name="shimmed")
+    fut = st.trust.submit("get", st.route(jnp.array([1])),
+                          {"key": jnp.array([1], jnp.int32)})
+    with pytest.raises(RuntimeError, match="'get'.*'shimmed'"):
+        fut.result()
+    st.flush()
+    assert fut.ready()
