@@ -19,7 +19,14 @@ transfers across machines.
         --settings mixed,conflict_heavy --max-regression 0.20
 
 A file with fewer than two entries passes trivially (nothing to compare —
-the first run of a fresh baseline).
+the first run of a fresh baseline) — UNLESS ``--require-baseline N`` asks
+for at least N entries, which CI sets for established trajectories so a
+truncated/corrupted artifact (or a gate typo that matches zero rows) fails
+loudly instead of green-washing the run.
+
+``--metric`` picks the gated field: ``ops_per_s`` (higher is better,
+default) or a lower-is-better latency field such as ``p99_us`` from the
+streaming rows (the drop sign flips accordingly).
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ def row_key(row) -> str:
 
 
 def gated_rows(entry, experiment: str, impl: str, settings,
-               normalize_impl: str = ""):
+               normalize_impl: str = "", metric: str = "ops_per_s"):
     ops, norm = {}, {}
     for row in entry.get("rows", []):
         if row.get("experiment") != experiment:
@@ -44,9 +51,9 @@ def gated_rows(entry, experiment: str, impl: str, settings,
         if settings and key not in settings:
             continue
         if not impl or row.get("pack_impl") == impl:
-            ops[key] = row.get("ops_per_s") or 0.0
+            ops[key] = row.get(metric) or 0.0
         if normalize_impl and row.get("pack_impl") == normalize_impl:
-            norm[key] = row.get("ops_per_s") or 0.0
+            norm[key] = row.get(metric) or 0.0
     if normalize_impl:
         return {k: (v / norm[k] if norm.get(k) else 0.0)
                 for k, v in ops.items()}
@@ -70,28 +77,50 @@ def main(argv=None) -> int:
                     help="fail when the gated metric drops more than this "
                          "fraction vs the checked-in baseline (per-row "
                          "median over all prior entries)")
+    ap.add_argument("--metric", default="ops_per_s",
+                    choices=["ops_per_s", "p50_us", "p99_us"],
+                    help="gated row field; the *_us latency metrics are "
+                         "lower-is-better (regression = increase)")
+    ap.add_argument("--require-baseline", type=int, default=0,
+                    help="fail (instead of trivially passing) when the "
+                         "trajectory holds fewer than N entries — set for "
+                         "established checked-in baselines")
     args = ap.parse_args(argv)
     settings = set(s for s in args.settings.split(",") if s)
 
     with open(args.path) as f:
         data = json.load(f)
     entries = data.get("entries", [])
-    if len(entries) < 2:
-        print(f"check_bench: {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
-              f"in {args.path} — nothing to compare, passing")
+    if len(entries) < max(2, args.require_baseline):
+        n = len(entries)
+        msg = (f"check_bench: {n} entr{'y' if n == 1 else 'ies'} "
+               f"in {args.path}")
+        if args.require_baseline and n < args.require_baseline:
+            print(f"{msg} — fewer than the required baseline of "
+                  f"{args.require_baseline}, FAILING", file=sys.stderr)
+            return 1
+        print(f"{msg} — nothing to compare, passing")
         return 0
+    lower_better = args.metric.endswith("_us")
     # baseline = per-row MEDIAN over the checked-in (prior) entries, so one
     # noisy historical run cannot make the gate flap either way
     prior = [gated_rows(e, args.experiment, args.impl, settings,
-                        args.normalize_impl)
+                        args.normalize_impl, args.metric)
              for e in entries[:-1]]
     base = {}
     for key in set().union(*[set(p) for p in prior]):
         vals = sorted(p[key] for p in prior if key in p)
         base[key] = vals[len(vals) // 2]
+    if args.require_baseline and not base:
+        print(f"check_bench: no baseline rows matched experiment="
+              f"{args.experiment} impl={args.impl} settings="
+              f"{sorted(settings)} in {args.path} — gate matches nothing, "
+              f"FAILING", file=sys.stderr)
+        return 1
     cur = gated_rows(entries[-1], args.experiment, args.impl, settings,
-                     args.normalize_impl)
-    unit = f"x {args.normalize_impl}" if args.normalize_impl else "ops/s"
+                     args.normalize_impl, args.metric)
+    unit = f"x {args.normalize_impl}" if args.normalize_impl \
+        else args.metric.replace("ops_per_s", "ops/s")
     failures = []
     for key, base_ops in sorted(base.items()):
         cur_ops = cur.get(key)
@@ -100,7 +129,8 @@ def main(argv=None) -> int:
             continue
         if base_ops <= 0:
             continue
-        drop = 1.0 - cur_ops / base_ops
+        drop = (cur_ops / base_ops - 1.0) if lower_better \
+            else (1.0 - cur_ops / base_ops)
         status = "REGRESSED" if drop > args.max_regression else "ok"
         print(f"check_bench: {key}: {base_ops:.2f} -> {cur_ops:.2f} {unit} "
               f"({-drop * 100:+.1f}%) [{status}]")

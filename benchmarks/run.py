@@ -39,6 +39,9 @@ REDUCED = {
                   ["--dist", "zipf", "--tables", "10000", "--writes", "5",
                    "--requests", "2048", "--iters", "2"]),
     "channel_micro": ("benchmarks.channel_micro", ["--requests", "1024"]),
+    "streaming": ("benchmarks.loadgen",
+                  ["--dist", "zipf", "--objects", "4096", "--loads", "512",
+                   "--reqs", "8192", "--arrivals", "closed,open"]),
 }
 
 FULL = {
@@ -60,6 +63,10 @@ FULL = {
                           ["--dist", "uniform"]),
     "memcached_zipf": ("benchmarks.memcached_like", ["--dist", "zipf"]),
     "channel_micro": ("benchmarks.channel_micro", []),
+    "streaming": ("benchmarks.loadgen",
+                  ["--dist", "zipf", "--objects", "65536",
+                   "--loads", "512,2048", "--reqs", "32768",
+                   "--arrivals", "closed,open,burst"]),
 }
 
 
@@ -85,11 +92,19 @@ def summarize(name: str, stdout: str):
                             "n_keys", "write_pct", "solution") if row.get(k))
             out.append((f"{name}:{key}", round(us, 3),
                         f"mops={row['mops_wall']}", row))
-        elif "mean_us_per_req" in row:
+        elif "wall_us_per_req" in row:
             out.append((f"{name}:{row['dist']}/load{row['load_req_per_round']}"
                         f"/{row['solution']}",
-                        float(row["mean_us_per_req"]),
-                        f"p99={row['p99_us_per_req']}us", row))
+                        float(row["wall_us_per_req"]),
+                        f"round_p99={row['round_us_p99']}us", row))
+        elif "us_per_req" in row:
+            # streaming loadgen: us_per_req is wall share (1/throughput),
+            # p50/p99 are honest per-request latency percentiles; the
+            # driver mode (lockstep/pipelined) rides in pack_impl
+            out.append((f"{name}:{row['experiment']}/{row['setting']}"
+                        f"/{row['pack_impl']}",
+                        float(row["us_per_req"]),
+                        f"p50={row['p50_us']}us p99={row['p99_us']}us", row))
         elif "us_per_round" in row:
             key = f"{name}:{row['experiment']}/{row['setting']}"
             if row.get("pack_impl"):
@@ -136,6 +151,12 @@ def write_bench_json(tag: str, args, summary) -> str:
                      # the trajectory tracks the multiplexed-round speedup
                      "experiment": fields.get("experiment", ""),
                      "setting": fields.get("setting", "")})
+        # streaming rows carry per-request latency percentiles so the
+        # trajectory can gate tails (check_bench --metric p99_us), not
+        # just throughput
+        for k in ("p50_us", "p99_us"):
+            if fields.get(k):
+                rows[-1][k] = float(fields[k])
     entry = {"timestamp": datetime.datetime.now(datetime.timezone.utc)
              .strftime("%Y-%m-%dT%H:%M:%SZ"),
              "mode": args.mode, "full": bool(args.full), "rows": rows}

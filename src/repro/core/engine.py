@@ -138,6 +138,18 @@ class CapacityPlanner:
     def observe(self, sig, demand_max) -> None:
         self._staged[sig] = demand_max
 
+    def prune(self, live_sigs) -> None:
+        """Evict EMA/staged entries whose signature no live trust can
+        produce again.  Signatures embed the trust token (solo) or the full
+        fuse signature (mux), so a session that churns trusts — entrust,
+        serve, drop, repeat — would otherwise accumulate one EMA float and
+        possibly one staged DEVICE ARRAY per dead signature forever.  The
+        engine calls this from ``_prune`` whenever trusts die."""
+        live = set(live_sigs)
+        for d in (self._ema, self._staged):
+            for sig in [s for s in d if s not in live]:
+                del d[sig]
+
     def _resolve(self, sig) -> None:
         staged = self._staged.pop(sig, None)
         if staged is None:
@@ -183,17 +195,38 @@ class DelegationEngine:
     multiplexed round and flushing the rest solo.  ``apply``/``flush`` on a
     single Trust always take the solo fast path."""
 
-    def __init__(self, planner: Optional[CapacityPlanner] = None):
+    def __init__(self, planner: Optional[CapacityPlanner] = None,
+                 donate_states: bool = False):
         self._trusts: Dict[int, Any] = {}
         self._next_token = 0
         self._dirty: List[int] = []
         self._cache: Dict[Any, Tuple[Callable, Callable]] = {}
         self.planner = planner if planner is not None else CapacityPlanner()
+        # donate the state buffers into each round's jitted program: the old
+        # state is dead the moment the round commits (``trust._state`` is
+        # replaced with the program output), so XLA may serve in place
+        # instead of allocating a fresh state per round.  Opt-in (streaming
+        # driver sessions) because donation invalidates the PREVIOUS state
+        # array — callers that keep ``trust.state()`` references across
+        # rounds (checkpoint diffing, the test batteries' oracles) must stay
+        # on undonated sessions.  Request/response buffers are NOT donated:
+        # requests are caller-owned (benchmarks replay one trace through
+        # several drivers) and responses outlive the round by design.
+        self.donate_states = donate_states
+        # dispatched channel rounds (solo + mux) over the session lifetime —
+        # cheap host-side telemetry for the streaming driver's occupancy math
+        self.rounds_dispatched = 0
         self._last_step_stats: Dict[str, Dict[str, Any]] = {}
         self._stats_owner: Dict[str, int] = {}
         self.last_step_info: Dict[str, Any] = {"fused": [], "solo": []}
         # (unjitted fused fn, aval-shaped args) — jaxpr inspection in tests
         self.last_exec = None
+
+    def _jit(self, fn) -> Callable:
+        """jit a round program, donating the leading states argument when
+        the session opts in (argument 0 is the state pytree in both the
+        solo and mux builders)."""
+        return jax.jit(fn, donate_argnums=(0,) if self.donate_states else ())
 
     # -- registry -----------------------------------------------------------
     def register(self, trust) -> int:
@@ -220,6 +253,19 @@ class DelegationEngine:
             self._cache = {k: v for k, v in self._cache.items()
                            if not gone & set(k[1])}
             self._dirty = [tok for tok in self._dirty if tok not in gone]
+            # planner entries are keyed by ("solo", token) / ("mux", fuse
+            # signature) — both outlive their trusts unless evicted here
+            # (a session churning trusts would leak one EMA entry, and
+            # possibly a staged device array, per dead signature)
+            live_sigs = set()
+            for t in self.trusts():
+                live_sigs.add(("solo", t.token))
+                live_sigs.add(("mux", self._mux_signature(t)))
+            self.planner.prune(live_sigs)
+            live_toks = {t.token for t in self.trusts()}
+            self._stats_owner = {n: tok for n, tok in
+                                 self._stats_owner.items()
+                                 if tok in live_toks}
 
     def notify(self, trust) -> None:
         """A trust has pending submissions (called by ``Trust.submit``)."""
@@ -254,11 +300,17 @@ class DelegationEngine:
             trust._mux_sig = sig
         return sig
 
-    def step(self) -> Dict[str, Dict[str, int]]:
+    def step(self, sync: bool = True) -> Optional[Dict[str, Dict[str, int]]]:
         """Flush every pending batch in as few channel rounds as possible.
 
         Channel-compatible trusts fuse into ONE multiplexed round; the rest
-        flush solo.  Returns ``last_stats()``."""
+        flush solo.  Returns ``last_stats()``, UNLESS ``sync=False``:
+        resolving the stats host-reads the round's telemetry outputs, which
+        blocks the caller until the round has finished executing — exactly
+        the barrier a dispatch-ahead driver (launch/streaming.py) must not
+        pay.  ``sync=False`` dispatches the round asynchronously and
+        returns ``None``; call ``last_stats()`` later (after consuming the
+        responses) for the same numbers."""
         self._prune()
         pending_trusts = []
         for tok in list(self._dirty):
@@ -291,7 +343,7 @@ class DelegationEngine:
                 if t._pending:
                     self.notify(t)
             raise
-        return self.last_stats()
+        return self.last_stats() if sync else None
 
     # -- solo fast path (the pre-engine per-Trust program) ------------------
     def run_solo(self, trust, batches, capacity: Optional[int] = None):
@@ -320,18 +372,20 @@ class DelegationEngine:
                cfg.capacity, cfg.overflow_capacity)
         if key not in self._cache:
             fn, saved = _build_solo(trust, batches, cfg)
-            self._cache[key] = (jax.jit(fn), fn, saved)
+            self._cache[key] = (self._jit(fn), fn, saved)
         jitted, raw, _saved = self._cache[key]
         args = (trust._state, [b[1] for b in batches],
                 [b[2] for b in batches])
-        new_state, resps, rounds, residual, demand = jitted(*args)
-        # jaxpr-inspection hook (shape/dtype avals only), matching _run_mux
+        # jaxpr-inspection hook (shape/dtype avals only), matching _run_mux;
+        # captured BEFORE the call — donation invalidates the state buffers
         self.last_exec = (raw, jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.asarray(x).shape,
                                            jnp.asarray(x).dtype), args))
+        new_state, resps, rounds, residual, demand = jitted(*args)
         trust._state = new_state
         trust._last_stats = (rounds, residual)
         self.planner.observe(sig, demand)
+        self.rounds_dispatched += 1
         self._last_step_stats[self._stats_key(trust)] = {
             "rounds": rounds, "residual": residual, "demand_max": demand,
             "resp_bytes_saved": self._cache[key][2]}
@@ -390,11 +444,17 @@ class DelegationEngine:
                    cfg.capacity, cfg.overflow_capacity)
             if key not in self._cache:
                 fn, saved = _build_mux(trusts, batches, cfg)
-                self._cache[key] = (jax.jit(fn), fn, saved)
+                self._cache[key] = (self._jit(fn), fn, saved)
             jitted, raw, saved = self._cache[key]
             states = tuple(t._state for t in trusts)
             dsts = [[b[1] for b in tb] for tb in batches]
             payloads = [[b[2] for b in tb] for tb in batches]
+            # aval capture must precede the call: donation invalidates the
+            # state buffers the moment the program consumes them
+            aval_args = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.asarray(x).shape,
+                                               jnp.asarray(x).dtype),
+                (states, dsts, payloads))
             (new_states, resps, rounds, residual_pt,
              demand_pt, demand_merged) = jitted(states, dsts, payloads)
         except Exception:
@@ -408,9 +468,8 @@ class DelegationEngine:
         # jaxpr-inspection hook: keep only shape/dtype avals, not the real
         # arrays — holding the previous round's states/payloads alive would
         # double the engine's memory footprint between steps
-        self.last_exec = (raw, jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-            (states, dsts, payloads)))
+        self.last_exec = (raw, aval_args)
+        self.rounds_dispatched += 1
         self.planner.observe(("mux", self._mux_signature(trusts[0])),
                              demand_merged)
         # per-batch responses were sliced INSIDE the program; stats stay

@@ -49,7 +49,15 @@ def main(argv=None):
                          "meter ride ONE multiplexed engine round per "
                          "request wave (one all_to_all pair for all "
                          "Trusts) instead of one solo round per store")
+    ap.add_argument("--stream-depth", type=int, default=0,
+                    help="with --session: run the ledger/meter waves "
+                         "through the streaming driver, keeping up to this "
+                         "many engine rounds in flight behind the decode "
+                         "loop (0 = one blocking session.step per token); "
+                         "admission control caps the in-flight ledger rows")
     args = ap.parse_args(argv)
+    if args.stream_depth > 0 and not args.session:
+        ap.error("--stream-depth requires --session")
 
     import jax
     import jax.numpy as jnp
@@ -149,6 +157,18 @@ def main(argv=None):
             meter.prefill(np.zeros((max(mesh.size, 1), 1), np.float32))
             meter_keys = led_keys % max(mesh.size, 1)
 
+    driver = wave_rows = None
+    if session is not None and args.stream_depth > 0:
+        # dispatch-ahead: the ledger/meter engine round of token t runs
+        # behind the decode step of token t+1 instead of blocking it; the
+        # admission bucket bounds how many token-waves of ledger rows may
+        # be outstanding (DESIGN.md §11)
+        from .streaming import AdmissionControl, StreamingDriver
+        wave_rows = args.batch + max(mesh.size, 1)
+        driver = StreamingDriver(
+            session, depth=args.stream_depth,
+            admission=AdmissionControl(wave_rows * (args.stream_depth + 1)))
+
     t0 = time.monotonic()
     prev = None
     outputs = []
@@ -164,9 +184,15 @@ def main(argv=None):
                 # handles — the schema routes the keys, DESIGN.md §10)
                 ledger.trust.op.add.then(led_keys, led_ones)
                 meter.trust.op.add.then(meter_keys, led_ones)
-                session.step()
+                if driver is not None:
+                    driver.admit(wave_rows)
+                    driver.dispatch(rows=wave_rows)
+                else:
+                    session.step()
             elif ledger is not None:
                 ledger.trust.op.add(led_keys, led_ones)
+    if driver is not None:
+        driver.drain()
     dt = time.monotonic() - t0
     if ledger is not None:
         counts = ledger.dump()[:, 0].astype(int)
@@ -184,6 +210,8 @@ def main(argv=None):
         print(f"[serve] session engine (last wave): "
               f"{session.last_step_info['fused'] or 'solo rounds'} — "
               f"per-trust stats {session.last_stats()}", flush=True)
+        if driver is not None:
+            print(f"[serve] streaming driver: {driver.stats()}", flush=True)
     total_steps = args.prompt_len + args.gen - 1
     print(f"[serve] {total_steps} steps in {dt:.2f}s "
           f"({1e3*dt/total_steps:.1f} ms/step, "

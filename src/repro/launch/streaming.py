@@ -1,0 +1,275 @@
+"""Continuous serving driver — double-buffered engine rounds (DESIGN.md §11).
+
+Everything below the engine is bulk-synchronous: callers enqueue, one
+blocking ``session.step()`` runs one fused round, responses come back, the
+next wave starts.  The paper's headline numbers (5-9x on memcached, §7) are
+about *sustained serving under live traffic*, where the client side packs
+the NEXT wave while the trustees serve the current one.  This module is
+that loop:
+
+  * **dispatch-ahead** — ``StreamingDriver.dispatch()`` runs
+    ``session.step(sync=False)`` (an asynchronous engine round: JAX's
+    async dispatch returns as soon as the program is enqueued) and parks a
+    ``WaveHandle``; ``jax.block_until_ready`` is paid only when the wave's
+    responses are CONSUMED, up to ``depth`` waves later.  In between, the
+    host packs and dispatches the following waves — wave k+1's program
+    chains on wave k's state output inside the runtime, so ordering (and
+    bit-identity with a lockstep run) is preserved by dataflow, not by
+    host barriers.
+  * **admission control** — ``AdmissionControl`` is a host-side row-token
+    bucket bounding the rows in flight across all unconsumed waves (the
+    streaming analog of the ``launch/serve.py`` token ledger: what has
+    been admitted but not yet served).  ``admit()`` consumes oldest waves
+    until the bucket has room, so a burst cannot queue unboundedly ahead
+    of the trustees — latency is bounded by ``depth`` waves instead.
+  * **adaptive wave sizing** — ``wave_budget()`` turns the
+    ``CapacityPlanner`` demand EMA (max per-(client, trustee, lane) pair
+    rows, §5.3.1 telemetry) into a target row count for the next wave:
+    ``headroom * EMA * n_pairs`` keeps the hot pair's expected demand at
+    the planned primary-block size.  The EMA is refreshed only at
+    pipeline-QUIESCE points (a consume that leaves nothing in flight):
+    the planner's staged demand scalar always belongs to the newest
+    dispatched round, so resolving it any earlier would host-sync on an
+    in-flight program — the exact stall ``step(sync=False)`` exists to
+    avoid.  (Same reason streaming stores should use static ``capacity``:
+    auto-capacity trusts make the ENGINE consult ``planner.plan()`` at
+    pack time.)
+
+Ordering/consistency: overlapped waves commit in dispatch order (state
+chains through the jitted programs); responses of wave k reflect exactly
+the waves ≤ k.  The §4 drain-round caveat carries over unchanged — a
+``defer`` trust's wave may internally run several drain rounds, but they
+stay inside that wave's program.  See DESIGN.md §11.
+
+Sessions used for streaming may opt into state-buffer donation
+(``TrustSession(donate_states=True)``): each round's state input is dead
+as soon as the round commits, so XLA may reuse the buffer instead of
+allocating a fresh state per wave.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+Pytree = Any
+
+
+@dataclass
+class WaveHandle:
+    """One dispatched engine round and the bookkeeping to consume it."""
+    wave_id: int
+    outputs: Any = None              # pytree of arrays / TrustFutures
+    rows: int = 0
+    rids: Tuple[int, ...] = ()
+    on_consume: Optional[Callable[["WaveHandle"], None]] = None
+    dispatched_at: float = 0.0
+    consumed_at: float = -1.0
+
+    @property
+    def wave_latency_s(self) -> float:
+        return self.consumed_at - self.dispatched_at
+
+
+class AdmissionControl:
+    """Row-token bucket over the waves in flight.
+
+    ``max_inflight_rows`` bounds the admitted-but-unserved backlog; a
+    request wave is admitted only while the bucket has room, and a consumed
+    wave returns its rows.  With ``depth``-bounded pipelining this is the
+    knob that trades throughput (deeper backlog keeps the trustees busy)
+    against tail latency (every admitted row waits behind the rows ahead
+    of it) — the §7 serving trade-off the streaming benchmark reports."""
+
+    def __init__(self, max_inflight_rows: int):
+        if max_inflight_rows <= 0:
+            raise ValueError(
+                f"max_inflight_rows must be positive, got {max_inflight_rows}")
+        self.max_inflight_rows = max_inflight_rows
+        self.inflight_rows = 0
+        self.admitted = 0
+        self.refused = 0
+
+    def try_admit(self, rows: int) -> bool:
+        if self.inflight_rows + rows > self.max_inflight_rows:
+            self.refused += 1
+            return False
+        self.inflight_rows += rows
+        self.admitted += rows
+        return True
+
+    def release(self, rows: int) -> None:
+        self.inflight_rows -= rows
+        assert self.inflight_rows >= 0, "released more rows than admitted"
+
+
+class StreamingDriver:
+    """Double-buffered driver over one ``TrustSession``.
+
+    ``depth`` is the number of dispatched-but-unconsumed waves allowed to
+    remain in flight after ``dispatch()`` returns: ``0`` degenerates to the
+    lockstep loop (dispatch, block, return), ``1`` is classic double
+    buffering (the host packs wave k+1 while wave k serves), larger values
+    queue deeper.  The caller's loop is::
+
+        driver = StreamingDriver(session, depth=1,
+                                 admission=AdmissionControl(4096))
+        for wave in waves:
+            driver.admit(rows)                  # blocks via consume()
+            futs = [trust.op.add.then(...), ...]   # pack (enqueue)
+            driver.dispatch(outputs=futs, rows=rows, rids=rids)
+        driver.drain()
+
+    Every consumed wave is stamped with a wall-clock ``consumed_at``;
+    per-request latency is ``consumed_at - arrival`` of each rid riding
+    the wave (the load generator owns the arrival clock).  ``events``
+    records ``("dispatch", k)`` / ``("consume", k)`` in host order so
+    tests can assert overlap actually happened (wave k+1 dispatched before
+    wave k consumed)."""
+
+    def __init__(self, session, depth: int = 1,
+                 admission: Optional[AdmissionControl] = None,
+                 headroom: float = 1.5, min_wave: int = 64,
+                 max_wave: int = 65536):
+        if depth < 0:
+            raise ValueError(f"depth must be >= 0, got {depth}")
+        self.session = session
+        self.depth = depth
+        self.admission = admission
+        self.headroom = headroom
+        self.min_wave = min_wave
+        self.max_wave = max_wave
+        self._inflight: deque = deque()
+        self._next_wave = 0
+        self.events: List[Tuple[str, int]] = []
+        self.consumed: List[WaveHandle] = []
+        self._ema_cache: Dict[Any, float] = {}
+
+    # -- pipeline core ------------------------------------------------------
+    def dispatch(self, outputs: Any = None, rows: int = 0,
+                 rids: Tuple[int, ...] = (),
+                 on_consume: Optional[Callable] = None) -> WaveHandle:
+        """Run ONE asynchronous engine round over everything pending on the
+        session and park its handle.  Blocks only to keep the pipeline at
+        ``depth`` in-flight waves (consuming oldest-first)."""
+        h = WaveHandle(wave_id=self._next_wave, outputs=outputs, rows=rows,
+                       rids=tuple(rids), on_consume=on_consume,
+                       dispatched_at=time.perf_counter())
+        self._next_wave += 1
+        self.session.step(sync=False)
+        self._inflight.append(h)
+        self.events.append(("dispatch", h.wave_id))
+        while len(self._inflight) > self.depth:
+            self._consume_oldest()
+        return h
+
+    def admit(self, rows: int) -> None:
+        """Reserve ``rows`` admission tokens, consuming in-flight waves
+        oldest-first until the bucket has room.  No-op without admission
+        control.  Raises if ``rows`` can never fit."""
+        if self.admission is None:
+            return
+        if rows > self.admission.max_inflight_rows:
+            raise ValueError(
+                f"wave of {rows} rows exceeds the admission budget "
+                f"{self.admission.max_inflight_rows} outright")
+        while not self.admission.try_admit(rows):
+            if not self._inflight:
+                raise AssertionError(
+                    "admission bucket too small for already-released rows")
+            self._consume_oldest()
+
+    def _consume_oldest(self) -> WaveHandle:
+        h = self._inflight.popleft()
+        if h.outputs is not None:
+            jax.block_until_ready(_concrete(h.outputs))
+        h.consumed_at = time.perf_counter()
+        self.events.append(("consume", h.wave_id))
+        if self.admission is not None:
+            self.admission.release(h.rows)
+        # refresh the EMA cache for wave_budget() only at QUIESCE points:
+        # planner.observe() overwrites the staged demand scalar at every
+        # dispatch, so with waves still in flight the staged value belongs
+        # to an unfinished round and resolving it would host-sync on it —
+        # the stall this driver exists to avoid
+        if not self._inflight:
+            for sig in list(self.session.planner._staged):
+                self._ema_cache[sig] = self.session.planner.ema(sig)
+        if h.on_consume is not None:
+            h.on_consume(h)
+        self.consumed.append(h)
+        return h
+
+    def drain(self) -> List[WaveHandle]:
+        """Consume every wave still in flight (end of stream)."""
+        while self._inflight:
+            self._consume_oldest()
+        return self.consumed
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    # -- adaptive wave sizing ----------------------------------------------
+    def wave_budget(self, trusts, fallback: Optional[int] = None) -> int:
+        """Target row count for the next wave, from the planner demand EMA.
+
+        The EMA tracks the max per-(client, trustee, lane) pair rows of
+        recent waves; a wave of ``headroom * EMA * n_pairs`` rows keeps
+        the expected hot-pair demand at the planned primary-block size
+        (§5.3.1), so admitted waves neither drown the hot trustee nor
+        under-fill the round.  Uses only telemetry cached at pipeline
+        quiesce points (see ``_consume_oldest``); before any such point
+        returns ``fallback`` (or ``max_wave``)."""
+        trusts = [getattr(t, "trust", t) for t in trusts]
+        if len(trusts) > 1:
+            sig = ("mux", self.session._mux_signature(trusts[0]))
+        else:
+            sig = ("solo", trusts[0].token)
+        ema = self._ema_cache.get(sig)
+        if ema is None or ema <= 0:
+            return fallback if fallback is not None else self.max_wave
+        g = trusts[0].group
+        n_pairs = g.n_clients * g.n_trustees * max(1, len(trusts))
+        target = int(self.headroom * ema * n_pairs)
+        return max(self.min_wave, min(self.max_wave, target))
+
+    # -- telemetry ----------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Host-side pipeline telemetry over the consumed waves."""
+        waves = self.consumed
+        lat = [h.wave_latency_s for h in waves if h.consumed_at >= 0]
+        # a wave overlapped if some LATER wave was dispatched before it was
+        # consumed — count from the event log
+        overlapped = 0
+        for kind, wid in self.events:
+            if kind != "consume":
+                continue
+            i = self.events.index(("consume", wid))
+            if any(k == "dispatch" and w > wid for k, w in self.events[:i]):
+                overlapped += 1
+        out = {"waves": len(waves),
+               "rows": sum(h.rows for h in waves),
+               "depth": self.depth,
+               "overlapped_waves": overlapped,
+               "mean_wave_latency_s": (sum(lat) / len(lat)) if lat else 0.0}
+        if self.admission is not None:
+            out["admitted_rows"] = self.admission.admitted
+            out["admission_refusals"] = self.admission.refused
+        return out
+
+
+def _concrete(outputs):
+    """Resolve TrustFutures inside an outputs pytree to their result trees
+    (futures are fulfilled at dispatch; their leaves may still be
+    computing — that is what block_until_ready is for)."""
+    from ..core.trust import TrustFuture
+
+    def leaf(x):
+        return x.result() if isinstance(x, TrustFuture) else x
+    if isinstance(outputs, (list, tuple)):
+        return type(outputs)(leaf(x) for x in outputs)
+    return leaf(outputs)

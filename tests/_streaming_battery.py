@@ -1,0 +1,231 @@
+"""Streaming-driver differential battery — executed as a SUBPROCESS with
+8 simulated host devices (the main pytest process keeps a single device per
+the dry-run protocol).
+
+Coverage (ISSUE satellite: streaming differential battery):
+
+* a double-buffered, admission-controlled ``StreamingDriver`` run over a
+  seeded >= 1k-op trace (2 stores x 48 rows x 12 rounds = 1152 ops) is
+  BIT-IDENTICAL — every per-round response and the final tables — to
+  sequential ``session.step()`` waves, across shared / shared+shortcut /
+  dedicated modes and both serve impls (ref, masked);
+* the same identity holds with state-buffer donation on
+  (``TrustSession(donate_states=True)``), i.e. donation only recycles
+  buffers, never changes results;
+* the driver actually pipelines: the event log shows a later wave
+  dispatched before an earlier wave was consumed.
+
+Bit-identity is free by construction — wave k+1's jitted round chains on
+wave k's state OUTPUT inside the JAX runtime, so overlap changes timing,
+never dataflow — which is exactly what this battery pins down.
+
+Ordering note (DESIGN.md §8/§11): shortcut layouts use per-round distinct
+keys (order-free), mirroring the engine battery's §4 strategy.
+
+Prints one JSON dict of named check results; tests/test_streaming.py
+asserts.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+N_KEYS = 67          # prime: exercises owner-shard padding
+VW = 2
+R = 48               # rows per store per wave
+N_ROUNDS = 12        # 2 stores x R x N_ROUNDS = 1152 ops (>= 1k)
+DEPTH = 2
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def gen_trace(seed, n_rounds=N_ROUNDS, distinct=False):
+    rng = np.random.default_rng(seed)
+    init = rng.integers(1, 8, (N_KEYS, VW)).astype(np.float32)
+    rounds = []
+    for _ in range(n_rounds):
+        op = ["get", "put", "add", "cas"][int(rng.integers(0, 4))]
+        if distinct:
+            keys = rng.choice(N_KEYS, R, replace=False).astype(np.int32)
+        else:
+            keys = rng.integers(0, N_KEYS, R).astype(np.int32)
+        vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+        expect = rng.integers(0, 8, (R, VW)).astype(np.float32)
+        rounds.append((op, keys, vals, expect))
+    return init, rounds
+
+
+def _submit(st, op, keys, vals, expect):
+    keys = jnp.asarray(keys, jnp.int32)
+    if op == "get":
+        return st.get_then(keys)
+    if op == "put":
+        return st.put_then(keys, jnp.asarray(vals))
+    if op == "add":
+        return st.add_then(keys, jnp.asarray(vals))
+    return st.cas_then(keys, jnp.asarray(expect), jnp.asarray(vals))
+
+
+def _normalize(op, resp):
+    if op == "cas":
+        return (np.asarray(resp["flag"]), np.asarray(resp["value"]))
+    if op == "put":                          # PUT responses are empty
+        return np.zeros((0,))
+    return np.asarray(resp["value"])
+
+
+def drive_lockstep(stores, traces, session):
+    """Sequential reference: one blocking step + consume per wave."""
+    outs = [[] for _ in stores]
+    for rnd in range(N_ROUNDS):
+        futs = []
+        for st, (_init, rounds) in zip(stores, traces):
+            op, keys, vals, expect = rounds[rnd]
+            futs.append((op, _submit(st, op, keys, vals, expect)))
+        session.step()
+        for i, (op, fut) in enumerate(futs):
+            outs[i].append(_normalize(op, fut.result()))
+    return outs
+
+
+def drive_streaming(stores, traces, session):
+    """Same wave composition through the double-buffered, admission-
+    controlled driver; responses are normalized only at consume time."""
+    from repro.launch.streaming import AdmissionControl, StreamingDriver
+    drv = StreamingDriver(session, depth=DEPTH,
+                          admission=AdmissionControl(2 * R * (DEPTH + 1)))
+    outs = [[] for _ in stores]
+
+    def consumed_with(h, futs):
+        for i, (op, fut) in enumerate(futs):
+            outs[i].append(_normalize(op, fut.result()))
+
+    for rnd in range(N_ROUNDS):
+        drv.admit(2 * R)
+        futs = []
+        for st, (_init, rounds) in zip(stores, traces):
+            op, keys, vals, expect = rounds[rnd]
+            futs.append((op, _submit(st, op, keys, vals, expect)))
+        drv.dispatch(outputs=[f for _op, f in futs], rows=2 * R,
+                     on_consume=lambda h, futs=futs: consumed_with(h, futs))
+
+    drv.drain()
+    # the pipeline must actually have overlapped: some later wave was
+    # dispatched before an earlier wave's consume event
+    overlap = any(
+        kind == "consume" and any(
+            k == "dispatch" and w > wid for k, w in
+            drv.events[:drv.events.index(("consume", wid))])
+        for kind, wid in drv.events)
+    assert overlap, f"no overlap in event log: {drv.events}"
+    assert drv.stats()["waves"] == N_ROUNDS
+    return outs
+
+
+def make_pair(mode_kw, session):
+    from repro.core import DelegatedKVStore
+    mesh = mesh2x4()
+    kw = dict(capacity=R)
+    kw.update(mode_kw)
+    a = DelegatedKVStore(mesh, N_KEYS, VW, name="kv", session=session, **kw)
+    b = DelegatedKVStore(mesh, N_KEYS, VW, name="kv2", session=session, **kw)
+    return a, b
+
+
+def run_pair(mode_kw, seeds, distinct=False, donate_streaming=False):
+    from repro.core import TrustSession
+    traces = [gen_trace(s, distinct=distinct) for s in seeds]
+    ses_seq = TrustSession()
+    ses_str = TrustSession(donate_states=donate_streaming)
+    seq_stores = make_pair(mode_kw, ses_seq)
+    str_stores = make_pair(mode_kw, ses_str)
+    for st_s, st_f, (init, _r) in zip(seq_stores, str_stores, traces):
+        st_s.prefill(init)
+        st_f.prefill(init)
+    want = drive_lockstep(seq_stores, traces, ses_seq)
+    got = drive_streaming(str_stores, traces, ses_str)
+    for i, (g_rounds, w_rounds) in enumerate(zip(got, want)):
+        assert len(g_rounds) == len(w_rounds) == N_ROUNDS
+        for rnd, (g, w) in enumerate(zip(g_rounds, w_rounds)):
+            if isinstance(g, tuple):
+                assert np.array_equal(g[0], w[0]), \
+                    f"store {i} round {rnd}: cas flags differ"
+                assert np.array_equal(g[1], w[1]), \
+                    f"store {i} round {rnd}: cas old values differ"
+            else:
+                assert np.array_equal(g, w), \
+                    f"store {i} round {rnd}: responses differ"
+    for i, (st_f, st_s) in enumerate(zip(str_stores, seq_stores)):
+        assert np.array_equal(st_f.dump(), st_s.dump()), \
+            f"store {i}: final tables differ"
+
+
+# ---------------------------------------------------------------------------
+@check("stream_shared_ref_matches_lockstep")
+def _shared_ref():
+    run_pair({"local_shortcut": False}, seeds=(30, 31))
+
+
+@check("stream_shared_masked_matches_lockstep")
+def _shared_masked():
+    run_pair({"local_shortcut": False, "serve_impl": "masked"},
+             seeds=(32, 33))
+
+
+@check("stream_shortcut_ref_matches_lockstep")
+def _shortcut_ref():
+    run_pair({"local_shortcut": True}, seeds=(34, 35), distinct=True)
+
+
+@check("stream_shortcut_masked_matches_lockstep")
+def _shortcut_masked():
+    run_pair({"local_shortcut": True, "serve_impl": "masked"},
+             seeds=(36, 37), distinct=True)
+
+
+@check("stream_dedicated_ref_matches_lockstep")
+def _dedicated_ref():
+    run_pair({"mode": "dedicated", "n_dedicated": 3}, seeds=(38, 39))
+
+
+@check("stream_dedicated_masked_matches_lockstep")
+def _dedicated_masked():
+    run_pair({"mode": "dedicated", "n_dedicated": 3,
+              "serve_impl": "masked"}, seeds=(40, 41))
+
+
+@check("stream_donated_states_match_lockstep")
+def _donated():
+    """State donation (streaming side only) must be invisible in results."""
+    run_pair({"local_shortcut": False}, seeds=(42, 43),
+             donate_streaming=True)
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

@@ -300,3 +300,28 @@ def test_dead_trusts_are_pruned():
     ses.step()                                     # prune on next step
     assert ses.trusts() == []
     assert len(ses._cache) == 0
+
+
+def test_planner_entries_pruned_with_dead_trusts():
+    """Regression: CapacityPlanner._staged/._ema are keyed by trust-token
+    (solo) / fuse-signature (mux) and used to grow without bound under
+    trust churn — every dead generation left one staged device array and
+    one EMA float behind forever.  _prune() must evict them alongside the
+    trust weakrefs, keeping live trusts' telemetry intact."""
+    import gc
+    from repro.core import DelegatedKVStore, TrustSession
+    ses = TrustSession()
+    keep = DelegatedKVStore(_mesh1(), 8, 1, session=ses, name="keep")
+    keep.prefill(np.ones((8, 1), np.float32))
+    keep.get(jnp.arange(2, dtype=jnp.int32))
+    for gen in range(6):                           # churn signatures
+        st = DelegatedKVStore(_mesh1(), 8, 1, session=ses,
+                              name=f"gen{gen}", capacity=2 + gen)
+        st.prefill(np.ones((8, 1), np.float32))
+        st.get(jnp.arange(2, dtype=jnp.int32))     # observes ("solo", token)
+        del st
+        gc.collect()
+    assert len(ses.planner._staged) + len(ses.planner._ema) >= 2
+    ses.step()                                     # prune on next step
+    live = set(ses.planner._staged) | set(ses.planner._ema)
+    assert live == {("solo", keep.trust.token)}, live

@@ -1,0 +1,168 @@
+"""Streaming serve driver tests (launch/streaming.py).
+
+Two layers:
+
+* in-process single-device tests: pipeline overlap actually occurs (wave
+  k+1 packed and dispatched before wave k's results are consumed),
+  depth=0 degenerates to lockstep, admission control bounds the in-flight
+  rows and backpressures via consumption, adaptive wave sizing engages
+  once consumed-wave telemetry exists;
+* the 8-device subprocess battery (tests/_streaming_battery.py): a
+  double-buffered admission-controlled run over a >= 1k-op trace is
+  bit-identical to sequential ``session.step()`` waves across
+  shared / shortcut / dedicated x serve{ref,masked}, including with
+  donated state buffers.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_streaming_battery.py")
+
+
+@pytest.fixture(scope="session")
+def streaming_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "stream_shared_ref_matches_lockstep",
+    "stream_shared_masked_matches_lockstep",
+    "stream_shortcut_ref_matches_lockstep",
+    "stream_shortcut_masked_matches_lockstep",
+    "stream_dedicated_ref_matches_lockstep",
+    "stream_dedicated_masked_matches_lockstep",
+    "stream_donated_states_match_lockstep",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_streaming_multidevice(streaming_battery, name):
+    res = streaming_battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"
+
+
+# ---------------------------------------------------------------------------
+# in-process (single device)
+# ---------------------------------------------------------------------------
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _store(ses, **kw):
+    from repro.core import DelegatedKVStore
+    st = DelegatedKVStore(_mesh1(), 32, 1, session=ses, name="kv",
+                          capacity=8, local_shortcut=False, **kw)
+    st.prefill(np.zeros((32, 1), np.float32))
+    return st
+
+
+def _drive(drv, st, n_waves, rows=8):
+    rng = np.random.default_rng(0)
+    for _ in range(n_waves):
+        keys = jnp.asarray(rng.integers(0, 32, rows).astype(np.int32))
+        drv.admit(rows)
+        fut = st.add_then(keys, jnp.ones((rows, 1), jnp.float32))
+        drv.dispatch(outputs=fut, rows=rows)
+    drv.drain()
+
+
+def test_overlap_occurs():
+    """The tentpole property: with depth=1 the driver dispatches wave k+1
+    BEFORE consuming wave k — visible in the host-order event log."""
+    from repro.core import TrustSession
+    from repro.launch.streaming import StreamingDriver
+    ses = TrustSession()
+    st = _store(ses)
+    drv = StreamingDriver(ses, depth=1)
+    _drive(drv, st, n_waves=4)
+    ev = drv.events
+    assert ev.index(("dispatch", 1)) < ev.index(("consume", 0)), ev
+    assert drv.stats()["overlapped_waves"] >= 3, (ev, drv.stats())
+    # every wave was consumed, in dispatch order
+    assert [w for k, w in ev if k == "consume"] == [0, 1, 2, 3]
+
+
+def test_depth_zero_is_lockstep():
+    from repro.core import TrustSession
+    from repro.launch.streaming import StreamingDriver
+    ses = TrustSession()
+    st = _store(ses)
+    drv = StreamingDriver(ses, depth=0)
+    _drive(drv, st, n_waves=3)
+    assert drv.events == [("dispatch", 0), ("consume", 0),
+                          ("dispatch", 1), ("consume", 1),
+                          ("dispatch", 2), ("consume", 2)]
+    assert drv.stats()["overlapped_waves"] == 0
+
+
+def test_admission_bounds_inflight_rows():
+    """A deep pipeline is still capped by the admission bucket: admit()
+    backpressures by consuming the oldest wave, so in-flight rows never
+    exceed the budget and dispatch order is preserved."""
+    from repro.core import TrustSession
+    from repro.launch.streaming import AdmissionControl, StreamingDriver
+    ses = TrustSession()
+    st = _store(ses)
+    adm = AdmissionControl(16)               # two 8-row waves
+    drv = StreamingDriver(ses, depth=10, admission=adm)
+    rng = np.random.default_rng(1)
+    for w in range(5):
+        keys = jnp.asarray(rng.integers(0, 32, 8).astype(np.int32))
+        drv.admit(8)
+        assert adm.inflight_rows <= 16
+        assert drv.inflight <= 2
+        fut = st.add_then(keys, jnp.ones((8, 1), jnp.float32))
+        drv.dispatch(outputs=fut, rows=8)
+    drv.drain()
+    assert adm.inflight_rows == 0
+    assert adm.refused >= 3                  # waves 2..4 had to wait
+    assert adm.admitted == 40
+    assert [w for k, w in drv.events if k == "consume"] == list(range(5))
+
+
+def test_admission_oversize_wave_raises():
+    from repro.core import TrustSession
+    from repro.launch.streaming import AdmissionControl, StreamingDriver
+    drv = StreamingDriver(TrustSession(), depth=1,
+                          admission=AdmissionControl(8))
+    with pytest.raises(ValueError, match="exceeds the admission budget"):
+        drv.admit(9)
+
+
+def test_wave_budget_tracks_consumed_telemetry():
+    """Before any consumed wave the budget is the fallback; afterwards it
+    derives from the planner EMA cached at consume time (never a pack-time
+    device sync) and clamps to [min_wave, max_wave]."""
+    from repro.core import TrustSession
+    from repro.launch.streaming import StreamingDriver
+    ses = TrustSession()
+    st = _store(ses)
+    drv = StreamingDriver(ses, depth=1, min_wave=4, max_wave=256)
+    assert drv.wave_budget([st], fallback=128) == 128
+    _drive(drv, st, n_waves=3)
+    budget = drv.wave_budget([st])
+    assert 4 <= budget <= 256
+    assert drv.wave_budget([st], fallback=128) == budget  # EMA wins now
+
+
+def test_invalid_depth_raises():
+    from repro.core import TrustSession
+    from repro.launch.streaming import StreamingDriver
+    with pytest.raises(ValueError, match="depth"):
+        StreamingDriver(TrustSession(), depth=-1)
