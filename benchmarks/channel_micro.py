@@ -18,6 +18,13 @@
   * api_overhead: typed-handle dispatch (schema binding + routing,
     DESIGN.md §10) vs the raw stringly apply over the same compiled
     program — the CI-gated typed/raw within-run ratio.
+  * serve_scale: the DIRECT serve path (no mesh round-trip) over a row-
+    batch sweep — masked vs shared-grouping ref at every R, the tiled
+    Pallas serve (interpret mode off-TPU) up to --scale-pallas-max-r.
+    The CI gate tracks the within-run ref/masked ratio at r8192/r32768
+    (check_bench --normalize-impl masked) so the shared-grouping serve
+    cannot silently lose its scaling edge; the kernel's scaling numbers
+    come from the accelerator lane (benchmarks/kernel_sweep.py).
 """
 from __future__ import annotations
 
@@ -87,6 +94,50 @@ def serve_hotpath(csv, mesh, args):
             dt = bench(wave, iters=4)
             csv.add("serve_hotpath", f"{mix_name}_elide{saved}", impl,
                     round(dt * 1e6, 1), 1.0)
+
+
+def serve_scale(csv, mesh, args):
+    """Serve-path scaling: one fused mixed-op batch served DIRECTLY via
+    serve_optable (single shard, no channel round) at growing row counts.
+    This is the sweep the tiled kernels exist for — the retired dense
+    kernel's (N, N) masks made R past a few thousand unrunnable."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Received, make_kv_ops, serve_optable
+    from repro.core.routing import sample_keys
+    from benchmarks.common import bench, block
+
+    n_keys, vw = 4096, 2
+    ops = make_kv_ops(1, vw)
+    rs = [int(x) for x in args.scale_rs.split(",") if x]
+    for r in rs:
+        rng = np.random.default_rng(11)
+        rows = {"op": jnp.asarray(rng.integers(0, 4, r).astype(np.int16)),
+                "key": jnp.asarray(sample_keys(rng, n_keys, r, "zipf")),
+                "value": jnp.asarray(
+                    rng.integers(0, 8, (r, vw)).astype(np.float32)),
+                "expect": jnp.asarray(
+                    rng.integers(0, 8, (r, vw)).astype(np.float32))}
+        received = Received(rows, jnp.ones((r,), bool),
+                            jnp.zeros((r,), jnp.int32))
+        state = {"table": jnp.asarray(
+            rng.integers(0, 8, (n_keys, vw)).astype(np.float32))}
+        impls = ["masked", "ref"]
+        # interpret-mode Pallas executes the grid in Python-built XLA loops:
+        # honest on semantics, useless on wall-clock past a few 10k rows —
+        # the uninterpreted sweep lives in the accelerator lane
+        if r <= args.scale_pallas_max_r:
+            impls.append("pallas")
+        for impl in impls:
+            serve = jax.jit(serve_optable(ops, active_ids=(0, 1, 2, 3),
+                                          serve_impl=impl))
+
+            def round_():
+                new_state, resp = serve(state, received)
+                block((new_state["table"], resp["value"]))
+
+            dt = bench(round_, iters=4)
+            csv.add("serve_scale", f"r{r}", impl, round(dt * 1e6, 1), 1.0)
 
 
 def api_overhead(csv, mesh, args):
@@ -172,6 +223,11 @@ def main(argv=None):
                     help="run only experiments whose name contains this "
                          "substring (e.g. serve_hotpath for the CI "
                          "bench-smoke job)")
+    ap.add_argument("--scale-rs", default="8192,16384,32768,65536",
+                    help="serve_scale row-batch sweep (comma-separated)")
+    ap.add_argument("--scale-pallas-max-r", type=int, default=8192,
+                    help="serve_scale: largest R for the interpret-mode "
+                         "Pallas serve (lax impls run the full sweep)")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -199,7 +255,7 @@ def main(argv=None):
     # --experiment names ONE experiment to run alone (CI bench-smoke uses
     # serve_hotpath, the api-overhead gate api_overhead); only experiments
     # that can run standalone are filterable
-    filterable = ("serve_hotpath", "api_overhead")
+    filterable = ("serve_hotpath", "api_overhead", "serve_scale")
     if args.experiment and args.experiment not in filterable:
         ap.error(f"--experiment must be one of {filterable}, "
                  f"got {args.experiment!r}")
@@ -207,6 +263,9 @@ def main(argv=None):
         serve_hotpath(csv, mesh, args)
     if not args.experiment or args.experiment == "api_overhead":
         api_overhead(csv, mesh, args)
+    # serve_scale is opt-in only (the sweep dwarfs the default suite)
+    if args.experiment == "serve_scale":
+        serve_scale(csv, mesh, args)
     if args.experiment:
         if args.out:
             csv.dump(args.out)

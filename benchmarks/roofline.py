@@ -1,75 +1,28 @@
-"""Roofline report — renders EXPERIMENTS.md §Roofline from the dry-run
-artifacts (benchmarks/artifacts/dryrun/*.json).
+"""Roofline report CLI — a thin wrapper over ``repro.launch.rooflines``.
 
-Per (arch x shape x mesh): the three terms in seconds, the dominant
-bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction
-  frac = model_flops_per_chip / PEAK / max(term)
-(i.e. achieved-vs-peak useful compute if the step ran at the binding term).
+Two modes:
+
+  default        render EXPERIMENTS.md §Roofline from the dry-run artifacts
+                 (benchmarks/artifacts/dryrun/*.json)
+  --delegation   the closed-form tiled delegation-serve roofline
+                 (DESIGN.md §12) over a row-batch sweep — no artifacts
+                 needed
+
+All loading/derivation/rendering lives in ``repro.launch.rooflines`` so the
+launch layer and the benchmarks share one implementation.
 """
 from __future__ import annotations
 
 import argparse
-import glob
-import json
 import os
+import sys
 
-from benchmarks.common import V5E
-
-
-def load_cells(art_dir: str, mesh: str = "single", tag: str = ""):
-    cells = []
-    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
-        with open(p) as f:
-            d = json.load(f)
-        if d.get("mesh") != mesh or d.get("tag", "") != tag:
-            continue
-        cells.append(d)
-    return cells
-
-
-def fraction(d):
-    r = d["roofline"]
-    t = max(r["compute_s"], r["memory_s"], r["collective_s"])
-    if t <= 0:
-        return 0.0
-    return r["model_flops_per_chip"] / V5E["peak_flops"] / t
-
-
-def render(cells, fmt="md"):
-    rows = []
-    for d in cells:
-        if d["status"] == "skipped":
-            rows.append((d["arch"], d["shape"], "SKIP",
-                         d.get("reason", "")[:60], "", "", "", "", ""))
-            continue
-        if d["status"] == "error":
-            rows.append((d["arch"], d["shape"], "ERR",
-                         d.get("error", "")[:60], "", "", "", "", ""))
-            continue
-        r = d["roofline"]
-        rows.append((
-            d["arch"], d["shape"], r["bottleneck"],
-            f"{r['compute_s']*1e3:.1f}", f"{r['memory_s']*1e3:.1f}",
-            f"{r['collective_s']*1e3:.1f}", f"{r['useful_ratio']:.2f}",
-            f"{fraction(d)*100:.1f}%",
-            "yes" if d.get("fits_hbm") else "NO",
-        ))
-    header = ("arch", "shape", "bottleneck", "compute_ms", "memory_ms",
-              "collective_ms", "useful", "roofline_frac", "fits_hbm")
-    if fmt == "csv":
-        print(",".join(header))
-        for r in rows:
-            print(",".join(str(x) for x in r))
-    else:
-        widths = [max(len(str(h)), max((len(str(r[i])) for r in rows),
-                                       default=0))
-                  for i, h in enumerate(header)]
-        line = " | ".join(h.ljust(w) for h, w in zip(header, widths))
-        print(line)
-        print("-|-".join("-" * w for w in widths))
-        for r in rows:
-            print(" | ".join(str(x).ljust(w) for x, w in zip(r, widths)))
-    return rows
+try:
+    from repro.launch import rooflines
+except ImportError:      # "python benchmarks/roofline.py" without PYTHONPATH
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.launch import rooflines
 
 
 def main(argv=None):
@@ -77,14 +30,30 @@ def main(argv=None):
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--tag", default="")
     ap.add_argument("--fmt", default="md", choices=["md", "csv"])
+    ap.add_argument("--delegation", action="store_true",
+                    help="closed-form tiled serve roofline instead of the "
+                         "dry-run artifact table")
+    ap.add_argument("--rs", default="8192,16384,32768,65536,262144,1048576",
+                    help="--delegation row-batch sweep (comma-separated)")
+    ap.add_argument("--keys", type=int, default=65536,
+                    help="--delegation table lines per trustee")
+    ap.add_argument("--width", type=int, default=4,
+                    help="--delegation value width")
+    ap.add_argument("--br", type=int, default=256)
+    ap.add_argument("--bk", type=int, default=512)
     args = ap.parse_args(argv)
+    if args.delegation:
+        rs = [int(x) for x in args.rs.split(",") if x]
+        rooflines.render_delegation(rs, args.keys, args.width, br=args.br,
+                                    bk=args.bk, fmt=args.fmt)
+        return
     art = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
-    cells = load_cells(art, args.mesh, args.tag)
+    cells = rooflines.load_cells(art, args.mesh, args.tag)
     if not cells:
         print(f"no dry-run artifacts for mesh={args.mesh} tag={args.tag!r} "
               f"in {art}; run python -m repro.launch.dryrun --all first")
         return
-    render(cells, args.fmt)
+    rooflines.render(cells, args.fmt)
 
 
 if __name__ == "__main__":

@@ -23,16 +23,54 @@ Payloads are pytrees of ``(R, ...)`` arrays — the "captured environment" rows.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Implementation-event side channel (satellite of DESIGN.md §12)
+#
+# Some impl decisions are STATIC (trace-time): e.g. the KV serve provider
+# can only route serve_impl="pallas" through the kernel for f32 tables and
+# silently served via lax otherwise.  Such decisions happen while the round
+# traces, so they cannot ride a traced array — they ride this stack of
+# collector lists instead.  ``delegate``/``delegate_async`` (and the engine
+# around its jit boundary) open a collector around the serve; providers call
+# ``report_impl_event`` at the decision point.  Nested collectors all
+# receive the event (the engine's sits outside the channel's).
+# ---------------------------------------------------------------------------
+
+_impl_event_sinks: List[List[str]] = []
+
+
+def report_impl_event(event: str) -> None:
+    """Record a trace-time implementation fallback (no-op outside any
+    collector).  ``event`` is a short human-readable reason string."""
+    for sink in _impl_event_sinks:
+        sink.append(event)
+
+
+@contextlib.contextmanager
+def collect_impl_events():
+    """Collect ``report_impl_event`` calls made while the body runs (i.e.
+    while the round traces — jit-cached re-executions re-use the decision
+    made at trace time, so the collected events are the truth for every
+    execution of that program)."""
+    events: List[str] = []
+    _impl_event_sinks.append(events)
+    try:
+        yield events
+    finally:
+        _impl_event_sinks.remove(events)
 
 
 @dataclass(frozen=True)
@@ -74,6 +112,17 @@ class ChannelConfig:
     #                                (e.g. a PUT-only trust) — their slot
     #                                rows are dropped from the response
     #                                transpose ("planes" wire format only)
+    serve_block_rows: int = 256    # tiled serve kernel: rows per grid tile
+    serve_block_keys: int = 512    # tiled serve kernel: table lines per tile
+    pack_block_rows: int = 256     # tiled pack kernel: rows per grid tile
+    pack_block_slots: int = 512    # tiled pack kernel: slot lines per tile
+    #                                (all multiples of 128; clamped for
+    #                                small inputs — DESIGN.md §12 tuning)
+    strict_impl: bool = False      # raise instead of silently falling back
+    #                                when the requested serve_impl cannot
+    #                                engage (e.g. "pallas" on a non-f32
+    #                                table); False reports the fallback via
+    #                                ChannelInfo.impl_fallback / last_stats
 
     def total_capacity(self) -> int:
         if self.overflow == "second_round":
@@ -90,7 +139,10 @@ class ChannelConfig:
         silently fall out of the fuse step."""
         return (self.axis, self.overflow, self.local_shortcut,
                 self.pack_impl, self.serve_impl, self.mode, self.n_clients,
-                self.max_rounds, self.capacity, self.overflow_capacity)
+                self.max_rounds, self.capacity, self.overflow_capacity,
+                self.serve_block_rows, self.serve_block_keys,
+                self.pack_block_rows, self.pack_block_slots,
+                self.strict_impl)
 
     def n_slots(self, n_trustees: int) -> int:
         """Destination slots per device in the all_to_all block layout.
@@ -126,6 +178,26 @@ class Received(NamedTuple):
     #                        when the active ops declare ``group_key``)
 
 
+class TileMeta(NamedTuple):
+    """Per-row-tile segment metadata for the TILED serve consumers.
+
+    The tiled Pallas serve walks the sorted rows in ``block_rows`` tiles;
+    segments may straddle tile boundaries, so each tile needs to know
+    whether its leading run continues the previous tile's trailing segment
+    (the ADD prefix-prior carry).  ``Grouping.tile_meta`` derives this once
+    from the sorted segment ids — the lax path needs none of it (its scans
+    are global), which is exactly the contract: one grouped representation,
+    two consumers (DESIGN.md §12)."""
+    block_rows: int        # static: effective row tile size (the kernel's
+    #                        clamp rule applied — multiples of 128)
+    n_tiles: int           # static: row tiles covering the padded batch
+    first_sid: jax.Array   # (n_tiles,) int32 — segment id of each tile's
+    #                        first row (-1 for all-padding tiles)
+    last_sid: jax.Array    # (n_tiles,) int32 — segment id of the last row
+    cont: jax.Array        # (n_tiles,) bool — tile t's first row continues
+    #                        tile t-1's trailing segment (False for t = 0)
+
+
 class Grouping(NamedTuple):
     """ONE stable sort of the received rows by (op, group key) per round.
 
@@ -154,6 +226,29 @@ class Grouping(NamedTuple):
     #                        inv[i] == seg_end_row[i] - 1 — the one shared
     #                        gather that lets PUT commit winners without
     #                        sorting any payload rows
+
+    def tile_meta(self, block_rows: int = 256) -> TileMeta:
+        """Per-tile segment boundaries/carry metadata for a tiled consumer.
+
+        ``seg_start`` doubles as the segment id (monotone over sorted rows,
+        equal exactly within one segment), so tiling it answers every
+        cross-tile question the kernels ask.  Padding rows (up to the tile
+        multiple) carry sid -1, matching the kernel wrapper's padding —
+        build the meta with the SAME ``block_rows`` handed to the kernel."""
+        from ..kernels.delegation_serve import row_block
+        n = int(self.seg_start.shape[0])
+        br = row_block(n, block_rows)
+        n_tiles = -(-n // br)
+        sid = self.seg_start.astype(jnp.int32)
+        pad = n_tiles * br - n
+        if pad:
+            sid = jnp.concatenate(
+                [sid, jnp.full((pad,), -1, jnp.int32)])
+        tiles = sid.reshape(n_tiles, br)
+        first, last = tiles[:, 0], tiles[:, -1]
+        cont = jnp.concatenate(
+            [jnp.zeros((1,), bool), first[1:] == last[:-1]])
+        return TileMeta(br, n_tiles, first, last, cont)
 
 
 def make_grouping(gid: jax.Array, n_bins: int = 0) -> Grouping:
@@ -283,7 +378,8 @@ def _pack_with_kernel(dst: jax.Array, payload: Pytree, n_trustees: int,
     interp = jax.default_backend() != "tpu"
     planes, treedef, decs = _encode_planes(payload, r)
     s1, counts1, req1 = kops.delegation_pack_planes(
-        dst, planes, n_trustees, c1, interpret=interp)
+        dst, planes, n_trustees, c1, interpret=interp,
+        br=cfg.pack_block_rows, bs=cfg.pack_block_slots)
     slots1 = _decode_planes(s1, treedef, decs, n_trustees * c1)
     active = dst >= 0
     group_sizes = jnp.zeros((n_trustees,), jnp.int32).at[
@@ -295,7 +391,8 @@ def _pack_with_kernel(dst: jax.Array, payload: Pytree, n_trustees: int,
         c2 = cfg.overflow_capacity
         dst2 = jnp.where(req1 >= 0, -1, dst)
         s2, counts2, req2 = kops.delegation_pack_planes(
-            dst2, planes, n_trustees, c2, interpret=interp)
+            dst2, planes, n_trustees, c2, interpret=interp,
+            br=cfg.pack_block_rows, bs=cfg.pack_block_slots)
         slots2 = _decode_planes(s2, treedef, decs, n_trustees * c2)
         request_slot = jnp.where(req2 >= 0, n_trustees * c1 + req2, req1)
     dropped = (request_slot < 0) & active
@@ -514,6 +611,12 @@ class ChannelInfo(NamedTuple):
     #                            NOT moved this round thanks to response-
     #                            plane / lane elision (cfg.elide_resp /
     #                            cfg.elide_lanes)
+    impl_fallback: int = 0     # static: trace-time implementation
+    #                            fallbacks during the serve (e.g. the
+    #                            requested "pallas" serve routed through
+    #                            lax for a non-f32 table); > 0 means the
+    #                            round did NOT run the impl the config
+    #                            asked for (cfg.strict_impl raises instead)
 
 
 def _resp_bytes_per_row(leaf, wire_fmt: str) -> int:
@@ -682,9 +785,11 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
         dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis,
                                                    cfg.n_lanes)
         if n_slots == 1:
-            new_state, local_resp = serve_fn(state, local_recv)
+            with collect_impl_events() as impl_events:
+                new_state, local_resp = serve_fn(state, local_recv)
             info = ChannelInfo(jnp.zeros((n_bins,), jnp.int32),
-                               jnp.zeros((r,), bool), 0)
+                               jnp.zeros((r,), bool), 0,
+                               impl_fallback=len(impl_events))
             return new_state, local_resp, info
 
     packed, group_sizes = pack(dst, payload, n_bins, cfg)
@@ -692,7 +797,8 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     n_chan = received.valid.shape[0]
     if local_recv is not None:
         received = _concat_received(received, local_recv)
-    new_state, resp_rows = serve_fn(state, received)
+    with collect_impl_events() as impl_events:
+        new_state, resp_rows = serve_fn(state, received)
     local_resp = None
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
@@ -702,7 +808,8 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     n_rows = n_bins * cfg.total_capacity()
     info = ChannelInfo(group_sizes, packed.dropped, n_rows,
                        resp_bytes_saved=resp_elision_bytes(
-                           resp_rows, cfg, n_rows))
+                           resp_rows, cfg, n_rows),
+                       impl_fallback=len(impl_events))
     return new_state, responses, info
 
 
@@ -769,7 +876,8 @@ def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
         cond, body, (state, responses, remaining, jnp.int32(1), total))
     return state, responses, ChannelInfo(info.group_sizes, remaining,
                                          info.n_rows, rounds, total,
-                                         info.resp_bytes_saved)
+                                         info.resp_bytes_saved,
+                                         info.impl_fallback)
 
 
 class DelegationFuture(NamedTuple):
@@ -806,10 +914,12 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
         dst, local_recv, local_mask = _split_local(dst, payload, cfg.axis,
                                                    cfg.n_lanes)
         if n_slots == 1:
-            new_state, local_resp = serve_fn(state, local_recv)
+            with collect_impl_events() as impl_events:
+                new_state, local_resp = serve_fn(state, local_recv)
             fut = DelegationFuture(None, None, 1, cfg, local_resp, local_mask)
             info = ChannelInfo(jnp.zeros((n_bins,), jnp.int32),
-                               jnp.zeros((r,), bool), 0)
+                               jnp.zeros((r,), bool), 0,
+                               impl_fallback=len(impl_events))
             return new_state, fut, info
 
     packed, group_sizes = pack(dst, payload, n_bins, cfg)
@@ -817,7 +927,8 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
     n_chan = received.valid.shape[0]
     if local_recv is not None:
         received = _concat_received(received, local_recv)
-    new_state, resp_rows = serve_fn(state, received)
+    with collect_impl_events() as impl_events:
+        new_state, resp_rows = serve_fn(state, received)
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
@@ -826,7 +937,8 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
     n_rows = n_bins * cfg.total_capacity()
     info = ChannelInfo(group_sizes, packed.dropped, n_rows,
                        resp_bytes_saved=resp_elision_bytes(
-                           resp_rows, cfg, n_rows))
+                           resp_rows, cfg, n_rows),
+                       impl_fallback=len(impl_events))
     return new_state, fut, info
 
 
@@ -979,10 +1091,14 @@ def _serve_optable_masked(ops: Tuple[DelegatedOp, ...],
 
 def serve_optable(ops: Tuple[DelegatedOp, ...],
                   active_ids: Optional[Tuple[int, ...]] = None,
-                  serve_impl: str = "ref") -> ServeFn:
+                  serve_impl: str = "ref",
+                  cfg: Optional["ChannelConfig"] = None) -> ServeFn:
     """Multi-op serve: payload rows carry an 'op' column selecting the op.
     When the caller statically knows which ops appear in the batch (Trust
-    does), ``active_ids`` skips the rest at trace time.
+    does), ``active_ids`` skips the rest at trace time.  ``cfg`` (when
+    given) hands the fused provider the kernel tiling knobs
+    (``serve_block_rows``/``serve_block_keys``) and the ``strict_impl``
+    fallback policy.
 
     ``serve_impl`` selects the trustee hot path (DESIGN.md §9):
 
@@ -1018,7 +1134,7 @@ def serve_optable(ops: Tuple[DelegatedOp, ...],
         grouping = _serve_grouping(ops, ids, state, received)
         received = received._replace(grouping=grouping)
         if fused is not None and grouping is not None:
-            return fused.serve(ops, ids, state, received, serve_impl)
+            return fused.serve(ops, ids, state, received, serve_impl, cfg)
         op_ids = rows.get("op") if hasattr(rows, "get") else rows["op"]
         out_resp = None
         first = None
@@ -1043,7 +1159,8 @@ def serve_multiplex(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
                                            Tuple[int, ...]]],
                     renames: Sequence[dict],
                     merge_resp: bool = False,
-                    serve_impl: str = "ref") -> ServeFn:
+                    serve_impl: str = "ref",
+                    cfg: Optional["ChannelConfig"] = None) -> ServeFn:
     """Merged serve table for one MULTIPLEXED round over several Trusts.
 
     ``state`` is a tuple of per-trust state pytrees; request rows carry a
@@ -1061,7 +1178,8 @@ def serve_multiplex(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
     (legal whenever every trust's response structure matches), ONE tree with
     each row carrying its own trust's response: the row sets are disjoint,
     so merging halves the response-transpose bytes per extra trust."""
-    serves = tuple(serve_optable(ops, active, serve_impl=serve_impl)
+    serves = tuple(serve_optable(ops, active, serve_impl=serve_impl,
+                                 cfg=cfg)
                    for ops, active in tables)
 
     def serve(states, received: Received):
@@ -1096,7 +1214,8 @@ def serve_multiplex_strided(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
                                                    Tuple[int, ...]]],
                             renames: Sequence[dict], n_lanes: int,
                             t_send: int, c1: int, c2: int,
-                            serve_impl: str = "ref") -> ServeFn:
+                            serve_impl: str = "ref",
+                            cfg: Optional["ChannelConfig"] = None) -> ServeFn:
     """``serve_multiplex`` for the LANE slot layout (``cfg.n_lanes > 1``).
 
     With per-trust lanes the received buffer is block-structured: for each
@@ -1111,7 +1230,8 @@ def serve_multiplex_strided(tables: Sequence[Tuple[Tuple[DelegatedOp, ...],
     back to the masked variant otherwise): per-trust responses reassemble
     into one merged buffer by restacking the lane slices, so the response
     transpose moves each row's bytes exactly once."""
-    serves = tuple(serve_optable(ops, active, serve_impl=serve_impl)
+    serves = tuple(serve_optable(ops, active, serve_impl=serve_impl,
+                                 cfg=cfg)
                    for ops, active in tables)
     n1, n2 = t_send * n_lanes * c1, t_send * n_lanes * c2
 

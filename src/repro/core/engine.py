@@ -217,6 +217,10 @@ class DelegationEngine:
         # cheap host-side telemetry for the streaming driver's occupancy math
         self.rounds_dispatched = 0
         self._last_step_stats: Dict[str, Dict[str, Any]] = {}
+        # trace-time impl downgrade events (e.g. the f32-only serve kernel
+        # falling back to lax) per compiled program — captured once when the
+        # program traces, reported in every step's stats thereafter
+        self._impl_events: Dict[Any, Tuple[str, ...]] = {}
         self._stats_owner: Dict[str, int] = {}
         self.last_step_info: Dict[str, Any] = {"fused": [], "solo": []}
         # (unjitted fused fn, aval-shaped args) — jaxpr inspection in tests
@@ -252,6 +256,8 @@ class DelegationEngine:
             gone = set(dead)
             self._cache = {k: v for k, v in self._cache.items()
                            if not gone & set(k[1])}
+            self._impl_events = {k: v for k, v in self._impl_events.items()
+                                 if not gone & set(k[1])}
             self._dirty = [tok for tok in self._dirty if tok not in gone]
             # planner entries are keyed by ("solo", token) / ("mux", fuse
             # signature) — both outlive their trusts unless evicted here
@@ -366,10 +372,13 @@ class DelegationEngine:
         # cache key: schema'd trusts key on SCHEMA IDENTITY (validation
         # pinned the payload avals at submit), stringly trusts on the
         # per-leaf aval tuple (trust.batch_signature)
+        # the fuse signature carries every semantic knob of the compiled
+        # program (impl choices, tile sizes, strict_impl, ...) — two configs
+        # differing only in e.g. serve_block_rows must not share a program
         key = ("solo", (trust.token,),
                trust.batch_signature([b[0] for b in batches], sizes,
                                      [b[2] for b in batches]),
-               cfg.capacity, cfg.overflow_capacity)
+               cfg.capacity, cfg.overflow_capacity, cfg.fuse_sig())
         if key not in self._cache:
             fn, saved = _build_solo(trust, batches, cfg)
             self._cache[key] = (self._jit(fn), fn, saved)
@@ -381,14 +390,20 @@ class DelegationEngine:
         self.last_exec = (raw, jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.asarray(x).shape,
                                            jnp.asarray(x).dtype), args))
-        new_state, resps, rounds, residual, demand = jitted(*args)
+        # impl events fire at trace time (first call per cache entry): pin
+        # them to the program so later cache-hit steps still report them
+        with ch.collect_impl_events() as impl_events:
+            new_state, resps, rounds, residual, demand = jitted(*args)
+        if impl_events:
+            self._impl_events[key] = tuple(impl_events)
         trust._state = new_state
         trust._last_stats = (rounds, residual)
         self.planner.observe(sig, demand)
         self.rounds_dispatched += 1
         self._last_step_stats[self._stats_key(trust)] = {
             "rounds": rounds, "residual": residual, "demand_max": demand,
-            "resp_bytes_saved": self._cache[key][2]}
+            "resp_bytes_saved": self._cache[key][2],
+            "impl_fallback": len(self._impl_events.get(key, ()))}
         return list(resps)
 
     # -- the multiplexed round ----------------------------------------------
@@ -441,7 +456,7 @@ class DelegationEngine:
                    tuple(t.batch_signature([b[0] for b in tb], sz,
                                            [b[2] for b in tb])
                          for t, tb, sz in zip(trusts, batches, sizes)),
-                   cfg.capacity, cfg.overflow_capacity)
+                   cfg.capacity, cfg.overflow_capacity, cfg.fuse_sig())
             if key not in self._cache:
                 fn, saved = _build_mux(trusts, batches, cfg)
                 self._cache[key] = (self._jit(fn), fn, saved)
@@ -455,8 +470,11 @@ class DelegationEngine:
                 lambda x: jax.ShapeDtypeStruct(jnp.asarray(x).shape,
                                                jnp.asarray(x).dtype),
                 (states, dsts, payloads))
-            (new_states, resps, rounds, residual_pt,
-             demand_pt, demand_merged) = jitted(states, dsts, payloads)
+            with ch.collect_impl_events() as impl_events:
+                (new_states, resps, rounds, residual_pt,
+                 demand_pt, demand_merged) = jitted(states, dsts, payloads)
+            if impl_events:
+                self._impl_events[key] = tuple(impl_events)
         except Exception:
             # a build/dispatch error must not discard the queued batches:
             # restore every member's queue (state is untouched) so callers
@@ -482,7 +500,8 @@ class DelegationEngine:
                 "demand_max": (demand_pt, i),
                 # round-level response-transpose bytes elided (shared by
                 # every member of the fused round)
-                "resp_bytes_saved": saved}
+                "resp_bytes_saved": saved,
+                "impl_fallback": len(self._impl_events.get(key, ()))}
             for (_o, _d, _p, fut), resp in zip(pend, resps[i]):
                 fut._fulfil(resp)
 
@@ -517,11 +536,13 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig):
     check_payload_fields(
         [(ops[oid].name, p) for (oid, _d, p) in batches])
     active = tuple(sorted(set(op_ids)))
-    serve = ch.serve_optable(ops, active_ids=active,
-                             serve_impl=cfg.serve_impl)
     # response-plane elision: fields no active op writes stay off the wire
+    # (replace cfg BEFORE building the serve — the fused serve reads the
+    # tile/strict knobs off the cfg it is handed)
     cfg = dataclasses.replace(
         cfg, elide_resp=_elidable_fields(ops, active, resp_like))
+    serve = ch.serve_optable(ops, active_ids=active,
+                             serve_impl=cfg.serve_impl, cfg=cfg)
     # Request batches are sharded over the whole mesh.  Shared mode: every
     # device is a client and originates its own slice.  Dedicated mode: the
     # fused batch is repacked so all real rows land on the leading n_clients
@@ -700,11 +721,11 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
     if strided:
         serve = ch.serve_multiplex_strided(
             tables, tuple(lane_of), n_lanes=n_trusts, t_send=t_send,
-            c1=cfg.capacity, c2=c2, serve_impl=cfg.serve_impl)
+            c1=cfg.capacity, c2=c2, serve_impl=cfg.serve_impl, cfg=cfg)
     else:
         serve = ch.serve_multiplex(tables, tuple(lane_of),
                                    merge_resp=merged_resp,
-                                   serve_impl=cfg.serve_impl)
+                                   serve_impl=cfg.serve_impl, cfg=cfg)
     state_specs = tuple(t.state_specs for t in trusts)
     resp_specs = jax.tree.map(lambda _: req_spec, trusts[0].resp_like) \
         if merged_resp else \

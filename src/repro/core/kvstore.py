@@ -74,10 +74,13 @@ class KVTableServe:
         round-entry table, PUT before ADD before CAS) and the response
         planes assemble once (the per-op row sets are disjoint).
 
-    ``impl="pallas"`` routes the same grouped mix through the fused MXU
-    serve kernel (``kernels/delegation_serve``) — gathers, segment
-    primitives and scatters as one-hot matmuls — falling back to the lax
-    pass bit-identically when the table is not f32."""
+    ``impl="pallas"`` routes the same grouped mix through the tiled MXU
+    serve kernels (``kernels/delegation_serve``) — gathers, segment
+    primitives and scatters as one-hot matmuls over (block_rows,
+    block_keys) tiles.  When the table is not f32 it falls back to the lax
+    pass bit-identically, reporting the downgrade through the channel's
+    impl-event side channel (and raising under
+    ``ChannelConfig.strict_impl``)."""
 
     def __init__(self, n_trustees: int, value_width: int, dtype):
         self.n_trustees = n_trustees
@@ -99,10 +102,12 @@ class KVTableServe:
             lanes[ops[i].kernel_lane] = m
         return lanes
 
-    def serve(self, ops, ids, state, received, impl: str):
-        """Entry point used by ``channel.serve_optable``."""
+    def serve(self, ops, ids, state, received, impl: str, cfg=None):
+        """Entry point used by ``channel.serve_optable``.  ``cfg`` (a
+        ``ChannelConfig``, optional for direct callers) supplies the serve
+        kernel's tile sizes and the ``strict_impl`` fallback policy."""
         if impl == "pallas":
-            return self.serve_kernel(ops, ids, state, received)
+            return self.serve_kernel(ops, ids, state, received, cfg)
         return self.serve_lax(ops, ids, state, received)
 
     def serve_lax(self, ops, ids, state, received):
@@ -166,12 +171,28 @@ class KVTableServe:
         return {**state, "table": table}, \
                {"value": resp_value, "flag": flag}
 
-    def serve_kernel(self, ops, ids, state, received):
-        """The same grouped mix in ONE Pallas kernel pass — the MXU sibling
-        of ``delegation_pack`` (bit-identical on integer-exact payloads)."""
+    def serve_kernel(self, ops, ids, state, received, cfg=None):
+        """The same grouped mix as tiled Pallas passes — the MXU sibling
+        of ``delegation_pack`` (bit-identical on integer-exact payloads).
+        Tile sizes come from ``cfg`` (``serve_block_rows`` /
+        ``serve_block_keys``); the row-tile carry metadata comes from the
+        shared grouping (``Grouping.tile_meta``)."""
         from ..kernels import ops as kops
+        from . import channel as _channel
         table = state["table"]
         if table.dtype != jnp.float32:
+            # static (trace-time) decision: the MXU serve path is f32-only.
+            # Report it through the impl-event side channel so ChannelInfo /
+            # engine stats can surface the silent downgrade, and hard-fail
+            # when the caller demanded the pallas path.
+            event = (f"serve_kernel: table dtype {table.dtype} is not "
+                     f"float32; fell back to serve_lax")
+            _channel.report_impl_event(event)
+            if cfg is not None and cfg.strict_impl:
+                raise TypeError(
+                    event + " (ChannelConfig.strict_impl=True forbids the "
+                    "silent lax fallback; use serve_impl='ref' or an f32 "
+                    "table)")
             return self.serve_lax(ops, ids, state, received)
         rows, g = received.rows, received.grouping
         n_local, w = table.shape
@@ -192,10 +213,13 @@ class KVTableServe:
             expect = jnp.zeros((n, w), table.dtype)
         srt = lambda x: jnp.take(x, g.order, axis=0)
         interp = jax.default_backend() != "tpu"
+        br = cfg.serve_block_rows if cfg is not None else 256
+        bk = cfg.serve_block_keys if cfg is not None else 512
+        meta = g.tile_meta(block_rows=br)
         new_table, val_s, flag_s = kops.delegation_serve(
             table, srt(keys), srt(lane), srt(value.astype(jnp.float32)),
-            srt(expect.astype(jnp.float32)), g.seg_start, g.seg_end,
-            interpret=interp)
+            srt(expect.astype(jnp.float32)), g.seg_start, meta.cont,
+            br=meta.block_rows, bk=bk, interpret=interp)
         unsrt = lambda x: jnp.take(x, g.inv, axis=0)
         return {**state, "table": new_table.astype(table.dtype)}, \
                {"value": unsrt(val_s).astype(table.dtype),
@@ -307,7 +331,10 @@ class DelegatedKVStore:
                  n_dedicated: int = 0, max_rounds: int = 1,
                  pack_impl: str = "ref", serve_impl: str = "ref",
                  name: Optional[str] = None,
-                 plan_capacity: bool = False, session=None):
+                 plan_capacity: bool = False, session=None,
+                 strict_impl: bool = False,
+                 serve_blocks: Tuple[int, int] = (256, 512),
+                 pack_blocks: Tuple[int, int] = (256, 512)):
         axis = axis if axis is not None else tuple(mesh.axis_names)
         group = TrusteeGroup(mesh, axis, mode=mode, n_dedicated=n_dedicated)
         t = group.n_trustees
@@ -329,7 +356,9 @@ class DelegatedKVStore:
             overflow_capacity=overflow_capacity,
             local_shortcut=local_shortcut, max_rounds=max_rounds,
             pack_impl=pack_impl, serve_impl=serve_impl, name=name,
-            plan_capacity=plan_capacity, session=session)
+            plan_capacity=plan_capacity, session=session,
+            strict_impl=strict_impl, serve_blocks=serve_blocks,
+            pack_blocks=pack_blocks)
         self.t = t
         self.dtype = dtype
 

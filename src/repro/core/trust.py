@@ -121,7 +121,10 @@ class TrusteeGroup:
                 max_rounds: int = 1, pack_impl: str = "ref",
                 serve_impl: str = "ref",
                 name: Optional[str] = None, plan_capacity: bool = False,
-                session=None, schema: Optional[TrustSchema] = None) -> "Trust":
+                session=None, schema: Optional[TrustSchema] = None,
+                strict_impl: bool = False,
+                serve_blocks: Tuple[int, int] = (256, 512),
+                pack_blocks: Tuple[int, int] = (256, 512)) -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
 
         The TYPED form passes ``schema=`` (a ``TrustSchema``, DESIGN.md
@@ -158,6 +161,13 @@ class TrusteeGroup:
         Trust with that session, so ``session.step()`` can fuse its pending
         batches with every other registered Trust's into one multiplexed
         channel round.
+
+        ``serve_blocks``/``pack_blocks`` are the (row, key|slot) tile sizes
+        of the tiled Pallas kernels (multiples of 128; clamped for small
+        inputs — DESIGN.md §12).  ``strict_impl=True`` turns the serve
+        kernel's silent lax fallback (non-f32 tables) into a TypeError.
+        All of these are part of the fuse signature: trusts configured
+        differently never share a compiled round program.
         """
         if schema is not None:
             if ops is not None or resp_like is not None:
@@ -200,7 +210,12 @@ class TrusteeGroup:
                             mode=self.mode,
                             n_clients=self.n_clients if self.mode == "dedicated"
                             else 0,
-                            max_rounds=max_rounds)
+                            max_rounds=max_rounds,
+                            serve_block_rows=serve_blocks[0],
+                            serve_block_keys=serve_blocks[1],
+                            pack_block_rows=pack_blocks[0],
+                            pack_block_slots=pack_blocks[1],
+                            strict_impl=strict_impl)
         return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg,
                      name=name, plan_capacity=plan_capacity, session=session,
                      schema=schema)

@@ -8,11 +8,20 @@ adaptation"):
   1. position-in-group: a lower-triangular ones matmul against the one-hot
      destination matrix gives each request its running rank within its
      destination group (prefix count), offset by a per-trustee counter
-     carried in VMEM scratch across grid steps.
-  2. scatter: the slot one-hot (T*C x bR) transposed-matmul against the
-     payload tile accumulates rows directly into the slot buffer — a
-     scatter expressed as dense MXU work, which beats per-row dynamic
-     stores on a systolic machine.
+     carried in VMEM scratch across row tiles.
+  2. scatter: the slot one-hot transposed-matmul against the payload tile
+     accumulates rows directly into the slot buffer — a scatter expressed
+     as dense MXU work, which beats per-row dynamic stores on a systolic
+     machine.
+
+The grid is (slot tiles, row tiles) with rows INNERMOST: each slot tile of
+the output walks every row tile consecutively (the TPU's only safe
+output-revisit pattern), accumulating a BLOCK-LOCAL (br, bs) slot one-hot
+— the dense (br, T*C) one-hot of the old single-slot-block kernel is
+retired, so the slot buffer can grow past VMEM (DESIGN.md §12).  The
+running per-trustee counters recompute identically on every slot-tile
+pass (the prefix matmul is cheap); ``request_slot`` is only written on
+the first pass, with later passes redirected to a sliced-off dump block.
 
 Outputs match ``ref.delegation_pack`` bit-for-bit (FIFO within destination).
 """
@@ -28,11 +37,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _pack_kernel(dst_ref, payload_ref, slots_ref, counts_ref, reqslot_ref,
                  running_ref, *, n_trustees: int, capacity: int, br: int,
-                 n_tiles: int):
-    ti = pl.program_id(0)
+                 bs: int, n_rt: int, n_st: int):
+    st, rt = pl.program_id(0), pl.program_id(1)
     t, c = n_trustees, capacity
 
-    @pl.when(ti == 0)
+    @pl.when(rt == 0)
     def _init():
         slots_ref[...] = jnp.zeros_like(slots_ref)
         running_ref[...] = jnp.zeros_like(running_ref)
@@ -53,64 +62,77 @@ def _pack_kernel(dst_ref, payload_ref, slots_ref, counts_ref, reqslot_ref,
     running_ref[0] = base + jnp.sum(oh, axis=0)
 
     ok = active & (pos < c)
-    slot_idx = dst_c * c + jnp.minimum(pos, c - 1)          # (br,)
+    slot_idx = dst_c * c + jnp.minimum(pos, c - 1)          # (br,) global
+    # identical on every slot-tile pass; passes past the first write the
+    # dump block (see the index map in the wrapper)
     reqslot_ref[0] = jnp.where(ok, slot_idx, -1)
 
-    # 2) scatter rows into slots via one-hot transpose matmul (MXU)
-    slot_oh = ((slot_idx[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (br, t * c), 1)) & ok[:, None]).astype(jnp.float32)
-    payload = payload_ref[0].astype(jnp.float32)            # (br, W)
-    slots_ref[...] += jnp.dot(slot_oh.T, payload,
+    # 2) scatter rows into THIS slot tile via one-hot transpose matmul
+    sh = slot_idx - st * bs                                 # tile-local slot
+    slot_oh = ((sh[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (br, bs), 1)) & ok[:, None]).astype(jnp.float32)
+    slots_ref[...] += jnp.dot(slot_oh.T, payload_ref[...],
                               preferred_element_type=jnp.float32
                               ).astype(slots_ref.dtype)
 
-    @pl.when(ti == n_tiles - 1)
+    @pl.when((st == n_st - 1) & (rt == n_rt - 1))
     def _done():
         counts_ref[0] = jnp.minimum(running_ref[0], float(c)).astype(jnp.int32)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_trustees", "capacity", "br", "interpret"))
+                   static_argnames=("n_trustees", "capacity", "br", "bs",
+                                    "interpret"))
 def delegation_pack(dst: jax.Array, payload: jax.Array, *, n_trustees: int,
-                    capacity: int, br: int = 256, interpret: bool = True):
+                    capacity: int, br: int = 256, bs: int = 512,
+                    interpret: bool = True):
     """dst: (R,) int32 in [-1, T); payload: (R, W).  Any R works: ragged
     request counts are padded to a tile multiple with inactive rows
     (dst = -1, zero payload) and the padding is sliced back off the
-    request_slot output.
+    request_slot output; the T*C slot buffer likewise pads to a multiple
+    of the ``bs`` slot tile (rows never target the padding — slot ids are
+    < T*C by construction).
     Returns (slots (T*C, W) f32, counts (T,) i32, request_slot (R,) i32)."""
     r, w = payload.shape
-    # shrink the tile for small batches but keep it lane-aligned: a ragged
-    # block like (1, 97) would not lower on real TPU hardware
+    t, c = n_trustees, capacity
+    # shrink the tiles for small inputs but keep them lane-aligned: a
+    # ragged block like (1, 97) would not lower on real TPU hardware
     br = min(br, -(-r // 128) * 128)
+    bs = min(bs, -(-(t * c) // 128) * 128)
+    wp = -(-w // 128) * 128
     pad = (-r) % br
     if pad:
         dst = jnp.concatenate([dst, jnp.full((pad,), -1, dst.dtype)])
-        payload = jnp.concatenate(
-            [payload, jnp.zeros((pad, w), payload.dtype)], 0)
+    if pad or wp != w:
+        payload = jnp.pad(payload, ((0, pad), (0, wp - w)))
     rp = r + pad
-    n_tiles = rp // br
-    grid = (n_tiles,)
-    t, c = n_trustees, capacity
+    sp = -(-(t * c) // bs) * bs
+    n_rt, n_st = rp // br, sp // bs
 
     slots, counts, request_slot = pl.pallas_call(
         functools.partial(_pack_kernel, n_trustees=t, capacity=c, br=br,
-                          n_tiles=n_tiles),
-        grid=grid,
+                          bs=bs, n_rt=n_rt, n_st=n_st),
+        grid=(n_st, n_rt),
         in_specs=[
-            pl.BlockSpec((1, br), lambda i: (0, i)),
-            pl.BlockSpec((1, br, w), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, br), lambda st, rt: (0, rt)),
+            pl.BlockSpec((br, wp), lambda st, rt: (rt, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((t * c, w), lambda i: (0, 0)),
-            pl.BlockSpec((1, t), lambda i: (0, 0)),
-            pl.BlockSpec((1, br), lambda i: (0, i)),
+            pl.BlockSpec((bs, wp), lambda st, rt: (st, 0)),
+            pl.BlockSpec((1, t), lambda st, rt: (0, 0)),
+            # request_slot is recomputed identically per slot tile; only the
+            # st == 0 pass lands in the real rows, the rest hit an extra
+            # dump block sliced off below (consecutive revisits only)
+            pl.BlockSpec((1, br),
+                         lambda st, rt: (0, jnp.where(st == 0, rt, n_rt))),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((t * c, w), jnp.float32),
+            jax.ShapeDtypeStruct((sp, wp), jnp.float32),
             jax.ShapeDtypeStruct((1, t), jnp.int32),
-            jax.ShapeDtypeStruct((1, rp), jnp.int32),
+            jax.ShapeDtypeStruct((1, (n_rt + 1) * br), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, t), jnp.float32)],
         interpret=interpret,
-    )(dst.reshape(1, rp), payload.reshape(1, rp, w))
-    return slots, counts.reshape(t), request_slot.reshape(rp)[:r]
+    )(dst.reshape(1, rp), payload)
+    return (slots[:t * c, :w], counts.reshape(t),
+            request_slot.reshape((n_rt + 1) * br)[:r])

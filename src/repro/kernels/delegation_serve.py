@@ -1,35 +1,56 @@
-"""Delegation-serve Pallas kernel — the trustee's serve phase, fused.
+"""Delegation-serve Pallas kernels — the trustee's serve phase, tiled.
 
-The MXU sibling of ``delegation_pack``: where the pack kernel turns the
-client-side binning loop into one-hot matmuls, this kernel applies a whole
-grouped KV op-mix (GET / PUT / ADD / CAS lanes) to the entrusted table in
-ONE pass over the received rows, pre-sorted by the channel's shared
-grouping pass (channel.Grouping, DESIGN.md §9):
+The MXU sibling of ``delegation_pack``: applies a whole grouped KV op-mix
+(GET / PUT / ADD / CAS lanes) to the entrusted table in one fused pass over
+the received rows, pre-sorted by the channel's shared grouping pass
+(channel.Grouping, DESIGN.md §9/§12).
 
-  1. gather: ``onehot(keys) @ table`` reads each row's table line on the
-     MXU (replacing per-op dynamic gathers).
-  2. segment primitives as masked matmuls: ADD's fetch-and-add prior is a
-     (strict-lower-triangular AND same-segment) matmul against the delta
-     rows; CAS's "last matching row wins" is the transposed mask against
-     the compare flags.  Both reuse ONE (N, N) same-segment mask — rows of
-     one (op, key) segment are contiguous in the sorted order and keep
-     request order, so "earlier in segment" is a triangular slice.
-  3. scatter: per-lane winner one-hots transposed-matmul the new rows back
-     into the table (segment-last rows have unique keys, so a dense
-     accumulate places each winner exactly once).
-  4. responses (value planes + CAS flags) come out in sorted coordinates;
-     the caller inverts the permutation.
+Unlike the retired single-block kernel (grid=(1,), dense (N, K) one-hots
+and an (N, N) same-segment mask — O(N²) work and VMEM that capped the row
+batch at a few thousand), the serve is now FOUR small multi-block grid
+kernels composed by one jitted wrapper.  No (N, N) or (K, N) intermediate
+ever materializes: every mask/one-hot lives at BLOCK granularity —
+(br, br) same-segment masks and (br, bk) key one-hots — and the table
+streams through key-partitioned (bk, W) tiles:
+
+  phase snapshots   T0 --PUT--> T1 --ADD--> T2 --CAS--> T3
+
+  1. ``_scatter_last`` (PUT, then CAS commit): grid (key tiles, row tiles)
+     with rows INNERMOST.  Each step picks the block-local last-OK row per
+     segment ((br, br) masked matmul) and overwrites its table line via a
+     (br, bk) one-hot transpose matmul; later row tiles overwrite earlier
+     ones, so the sequential row walk realizes global last-writer-wins
+     exactly (sorted segments keep request order inside a tile and across
+     tiles).
+  2. ``_scatter_add`` (ADD totals): same grid; deltas accumulate into the
+     key tile via the masked one-hot transpose matmul.
+  3. ``_gather`` (all read lanes + ADD priors): grid (row tiles, key
+     tiles) with KEYS innermost.  Each row block computes its ADD
+     exclusive-prefix priors block-locally ((br, br) strict-lower same-
+     segment matmul) plus a CARRY — a VMEM running delta-sum for the one
+     segment that can straddle a row-tile boundary, keyed by the
+     Grouping's per-tile metadata (``cont``: does tile t continue tile
+     t-1's last segment?).  The key-tile walk then accumulates the GET
+     (from T0), ADD-base (from T1) and CAS-current (from T2) gathers.
+  4. CAS compare (``cur == expect``) runs as plain jnp between the calls
+     (exact — no kernel needed), and the commit reuses ``_scatter_last``.
 
 Op-phase order matches the masked reference serve exactly: GET reads the
 round-entry table, PUT commits before ADD reads, CAS compares against the
 post-ADD table.  Bit-identical to the grouped lax path on integer-exact
-payloads (both are exact); general floats agree within the accumulation
-orders the round-batch semantics already leave unspecified (§4).
+payloads (both are exact: every gather one-hot matmul has a single nonzero
+term, winners write whole rows, and f32 addition is commutative so
+prior-then-base equals base-then-prior bit-for-bit); general floats agree
+within the accumulation orders the round-batch semantics already leave
+unspecified (§4).
 
-Single-block kernel: the (N, N) segment mask keeps the whole row batch in
-VMEM, which covers per-device slot counts up to a few thousand rows — the
-regime this runtime's channel rounds operate in.  Tiling the row dimension
-with carried per-segment state is the path to larger batches.
+Output-block discipline (the TPU rule that shapes the grids): an output
+block may only be revisited on CONSECUTIVE grid steps, so gathers (output
+indexed by row tile) iterate keys innermost while scatters (output indexed
+by key tile) iterate rows innermost — hence separate pallas_calls per
+phase, with the table snapshots threaded between them by XLA.  The cost is
+three extra table copies (T1/T2/T3) vs the old in-place update; the win is
+row batches bounded by HBM, not by one VMEM-resident (N, N) mask.
 """
 from __future__ import annotations
 
@@ -38,76 +59,203 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _serve_kernel(table_ref, keys_ref, lane_ref, value_ref, expect_ref,
-                  segid_ref, segend_ref, table_out, val_out, flag_out, *,
-                  n: int, k: int):
-    keys = keys_ref[0]                                      # (N,) int32
-    lane = lane_ref[0]                                      # (N,) int32
-    seg = segid_ref[0]                                      # (N,) int32
-    seg_end = segend_ref[0]                                 # (N,) int32
-    table = table_ref[...].astype(jnp.float32)              # (K, W)
-    value = value_ref[...].astype(jnp.float32)              # (N, W)
-    expect = expect_ref[...].astype(jnp.float32)            # (N, W)
+def row_block(n: int, br: int) -> int:
+    """Effective row-block size for an N-row batch: clamped so small
+    batches run one lane-aligned tile, never below the 128-lane minimum.
+    Grouping.tile_meta applies the SAME rule — the channel and the kernel
+    must agree on the tiling for the per-tile carry metadata to line up."""
+    return max(128, min(br, -(-n // 128) * 128))
+
+
+def key_block(k: int, bk: int) -> int:
+    """Effective key-block size for a K-line table (same clamp rule)."""
+    return max(128, min(bk, -(-k // 128) * 128))
+
+
+def num_row_tiles(n: int, br: int) -> int:
+    b = row_block(n, br)
+    return -(-n // b)
+
+
+def _scatter_last_kernel(tin_ref, keys_ref, sid_ref, ok_ref, value_ref,
+                         out_ref, *, br: int, bk: int):
+    """One (key tile, row tile) step of last-writer-wins commit.
+
+    ``ok`` flags the candidate rows (one lane per call, so same key <=>
+    same segment and each key has at most one block-local winner); the
+    block-local winner is the last OK row of its segment, and later row
+    tiles overwrite earlier ones — global last-writer without any
+    cross-tile state."""
+    kt, rt = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(rt == 0)
+    def _init():
+        out_ref[...] = tin_ref[...]
 
     f = lambda b: b.astype(jnp.float32)
-    pos = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
-    # row -> table-line one-hot; the wrapper remaps every inactive key to
-    # the PADDED table size k, which has no column here — sentinel rows
-    # therefore match nothing even when the caller's table was padded
-    # (every use below is additionally lane-masked)
-    oh = f(keys[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, k), 1))
-    sameseg = seg[:, None] == seg[None, :]                  # (N, N)
-    earlier = pos[:, None] > pos[None, :]                   # j strictly before i
-    m_get, m_put = lane == 0, lane == 1
-    m_add, m_cas = lane == 2, lane == 3
-    is_last = pos == seg_end - 1
-
-    # GET — gather from the round-entry table
-    resp_get = jnp.dot(oh * f(m_get)[:, None], table,
-                       preferred_element_type=jnp.float32)
-
-    # PUT — segment-last rows are the per-key winners (unique keys)
-    oh_p = oh * f(m_put & is_last)[:, None]
-    wrote = jnp.sum(oh_p, axis=0)                           # (K,) 0/1
-    table = table * (1.0 - wrote)[:, None] + \
-        jnp.dot(oh_p.T, value, preferred_element_type=jnp.float32)
-
-    # ADD — prior = earlier same-segment deltas (masked MXU matmul);
-    # old value = post-PUT table line + prior; totals scatter-add back
-    delta = value * f(m_add)[:, None]
-    prior = jnp.dot(f(earlier & sameseg), delta,
-                    preferred_element_type=jnp.float32)
-    oh_a = oh * f(m_add)[:, None]
-    base = jnp.dot(oh_a, table, preferred_element_type=jnp.float32)
-    resp_add = (base + prior) * f(m_add)[:, None]
-    table = table + jnp.dot(oh_a.T, delta,
-                            preferred_element_type=jnp.float32)
-
-    # CAS — compare against the post-ADD table; the LAST matching row of
-    # each segment commits (no later same-segment match exists)
-    oh_c = oh * f(m_cas)[:, None]
-    cur = jnp.dot(oh_c, table, preferred_element_type=jnp.float32)
-    ok = m_cas & jnp.all(cur == expect, axis=-1)
+    keys = keys_ref[0]                                      # (br,) int32
+    sid = sid_ref[0]                                        # (br,) int32
+    ok = ok_ref[0] > 0                                      # (br,) bool
+    pos = jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)[:, 0]
+    sameseg = sid[:, None] == sid[None, :]                  # (br, br)
+    earlier = pos[:, None] > pos[None, :]
     later_ok = jnp.dot(f(earlier & sameseg).T, f(ok)[:, None],
                        preferred_element_type=jnp.float32)[:, 0]
-    oh_w = oh * f(ok & (later_ok == 0.0))[:, None]
-    wrote = jnp.sum(oh_w, axis=0)
-    table = table * (1.0 - wrote)[:, None] + \
-        jnp.dot(oh_w.T, value, preferred_element_type=jnp.float32)
+    win = ok & (later_ok == 0.0)
+    kh = keys - kt * bk                                     # tile-local key
+    oh_w = f((kh[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (br, bk), 1)) & win[:, None])            # (br, bk)
+    wrote = jnp.sum(oh_w, axis=0)                           # (bk,) 0/1
+    out_ref[...] = out_ref[...] * (1.0 - wrote)[:, None] + \
+        jnp.dot(oh_w.T, value_ref[...], preferred_element_type=jnp.float32)
 
-    table_out[...] = table
-    val_out[...] = resp_get + resp_add + cur
-    flag_out[0] = f(ok)
+
+def _scatter_add_kernel(tin_ref, keys_ref, lane_ref, value_ref, out_ref, *,
+                        br: int, bk: int):
+    """One (key tile, row tile) step of the ADD total scatter."""
+    kt, rt = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(rt == 0)
+    def _init():
+        out_ref[...] = tin_ref[...]
+
+    m_add = lane_ref[0] == 2
+    kh = keys_ref[0] - kt * bk
+    oh = ((kh[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (br, bk), 1)) & m_add[:, None]).astype(jnp.float32)
+    out_ref[...] += jnp.dot(oh.T, value_ref[...],
+                            preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_kernel(t0_ref, t1_ref, t2_ref, keys_ref, lane_ref, sid_ref,
+                   value_ref, cont_ref, resp_ref, carry_ref, *,
+                   br: int, bk: int):
+    """One (row tile, key tile) step of the response gather.
+
+    At the first key step of each row tile the block computes its ADD
+    priors: block-local strict-lower same-segment prefix plus the carried
+    delta sum of the segment straddling the tile boundary (``cont`` from
+    Grouping.tile_meta says whether this tile's leading run continues the
+    previous tile's trailing segment; the carry scratch persists across
+    the whole grid because row tiles advance outermost)."""
+    rt, kt = pl.program_id(0), pl.program_id(1)
+    f = lambda b: b.astype(jnp.float32)
+    keys = keys_ref[0]
+    lane = lane_ref[0]
+    sid = sid_ref[0]
+    m_get, m_add, m_cas = lane == 0, lane == 2, lane == 3
+
+    @pl.when(kt == 0)
+    def _prior():
+        delta = value_ref[...] * f(m_add)[:, None]          # (br, W)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)[:, 0]
+        sameseg = sid[:, None] == sid[None, :]              # (br, br)
+        earlier = pos[:, None] > pos[None, :]
+        prior = jnp.dot(f(earlier & sameseg), delta,
+                        preferred_element_type=jnp.float32)
+        cont = cont_ref[0, 0] > 0
+        sid_first, sid_last = sid_ref[0, 0], sid_ref[0, br - 1]
+        # select, don't multiply: the scratch is UNINITIALIZED before the
+        # first carrying tile (NaN/garbage), and 0 * NaN is NaN
+        carry = jnp.where(cont, carry_ref[0], 0.0)          # (W,)
+        # sorted segment ids are monotone, so rows continuing the previous
+        # tile's segment are exactly the leading sid_first run
+        from_carry = f((sid == sid_first) & cont)
+        resp_ref[...] = (prior + from_carry[:, None] * carry[None, :]) * \
+            f(m_add)[:, None]
+        # roll the carry forward: the trailing segment's in-tile delta sum,
+        # plus the old carry when ONE segment spans the whole tile
+        in_last = f(sid == sid_last)
+        carry_ref[0] = jnp.sum(delta * in_last[:, None], axis=0) + \
+            f((sid_last == sid_first) & cont) * carry
+
+    kh = keys - kt * bk
+    oh = kh[:, None] == jax.lax.broadcasted_iota(jnp.int32, (br, bk), 1)
+    resp_ref[...] += (
+        jnp.dot(f(oh & m_get[:, None]), t0_ref[...],
+                preferred_element_type=jnp.float32) +
+        jnp.dot(f(oh & m_add[:, None]), t1_ref[...],
+                preferred_element_type=jnp.float32) +
+        jnp.dot(f(oh & m_cas[:, None]), t2_ref[...],
+                preferred_element_type=jnp.float32))
+
+
+def _row_spec(n_rt_axis):
+    """(1, br) row-vector blocks indexed by the row-tile grid axis."""
+    if n_rt_axis == 0:
+        return pl.BlockSpec((1, None), lambda rt, kt: (0, rt))
+    return pl.BlockSpec((1, None), lambda kt, rt: (0, rt))
+
+
+def _scatter_last(table, keys, sid, ok, value, *, br, bk, interpret):
+    kp, wp = table.shape
+    np_ = value.shape[0]
+    n_kt, n_rt = kp // bk, np_ // br
+    return pl.pallas_call(
+        functools.partial(_scatter_last_kernel, br=br, bk=bk),
+        grid=(n_kt, n_rt),
+        in_specs=[
+            pl.BlockSpec((bk, wp), lambda kt, rt: (kt, 0)),
+            pl.BlockSpec((1, br), lambda kt, rt: (0, rt)),
+            pl.BlockSpec((1, br), lambda kt, rt: (0, rt)),
+            pl.BlockSpec((1, br), lambda kt, rt: (0, rt)),
+            pl.BlockSpec((br, wp), lambda kt, rt: (rt, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, wp), lambda kt, rt: (kt, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, wp), jnp.float32),
+        interpret=interpret,
+    )(table, keys, sid, ok, value)
+
+
+def _scatter_add(table, keys, lane, value, *, br, bk, interpret):
+    kp, wp = table.shape
+    np_ = value.shape[0]
+    n_kt, n_rt = kp // bk, np_ // br
+    return pl.pallas_call(
+        functools.partial(_scatter_add_kernel, br=br, bk=bk),
+        grid=(n_kt, n_rt),
+        in_specs=[
+            pl.BlockSpec((bk, wp), lambda kt, rt: (kt, 0)),
+            pl.BlockSpec((1, br), lambda kt, rt: (0, rt)),
+            pl.BlockSpec((1, br), lambda kt, rt: (0, rt)),
+            pl.BlockSpec((br, wp), lambda kt, rt: (rt, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, wp), lambda kt, rt: (kt, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, wp), jnp.float32),
+        interpret=interpret,
+    )(table, keys, lane, value)
+
+
+def _gather(t0, t1, t2, keys, lane, sid, value, cont, *, br, bk, interpret):
+    kp, wp = t0.shape
+    np_ = value.shape[0]
+    n_kt, n_rt = kp // bk, np_ // br
+    tbl = pl.BlockSpec((bk, wp), lambda rt, kt: (kt, 0))
+    row = pl.BlockSpec((1, br), lambda rt, kt: (0, rt))
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, br=br, bk=bk),
+        grid=(n_rt, n_kt),
+        in_specs=[
+            tbl, tbl, tbl, row, row, row,
+            pl.BlockSpec((br, wp), lambda rt, kt: (rt, 0)),
+            pl.BlockSpec((1, 1), lambda rt, kt: (0, rt)),
+        ],
+        out_specs=pl.BlockSpec((br, wp), lambda rt, kt: (rt, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, wp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, wp), jnp.float32)],
+        interpret=interpret,
+    )(t0, t1, t2, keys, lane, sid, value, cont)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bk", "interpret"))
 def delegation_serve(table: jax.Array, keys: jax.Array, lane: jax.Array,
-                     value: jax.Array, expect: jax.Array,
-                     seg_id: jax.Array, seg_end: jax.Array,
+                     value: jax.Array, expect: jax.Array, sid: jax.Array,
+                     cont: jax.Array, *, br: int = 256, bk: int = 512,
                      interpret: bool = True):
-    """Apply a grouped GET/PUT/ADD/CAS row batch to ``table`` in one pass.
+    """Apply a grouped GET/PUT/ADD/CAS row batch to ``table`` tile by tile.
 
     All row inputs are in SORTED (grouping) coordinates:
       table    (K, W) f32      the entrusted table shard
@@ -115,57 +263,58 @@ def delegation_serve(table: jax.Array, keys: jax.Array, lane: jax.Array,
       lane     (N,)  int32     0 GET | 1 PUT | 2 ADD | 3 CAS | -1 inactive
       value    (N, W) f32      PUT/CAS new rows, ADD deltas
       expect   (N, W) f32      CAS compare rows
-      seg_id   (N,)  int32     segment id (same value <=> same (op, key))
-      seg_end  (N,)  int32     one past the segment's last sorted position
+      sid      (N,)  int32     segment id, monotone over sorted rows (same
+                               value <=> same (op, key) segment — the
+                               Grouping's ``seg_start`` works verbatim)
+      cont     (n_row_tiles,)  per-tile carry metadata from
+                               ``Grouping.tile_meta(block_rows=br)``:
+                               tile t's first row continues tile t-1's
+                               trailing segment (False for tile 0)
+
+    ``br``/``bk`` are the row/key block sizes (multiples of 128; clamped
+    for small inputs by ``row_block``/``key_block``).  The wrapper pads N
+    to the tile multiple with inactive rows (lane -1, sid -1, sentinel
+    key) and K/W to lane-aligned tile multiples, then slices back.
 
     Returns (new_table (K, W) f32, resp_value (N, W) f32, flag (N,) f32):
-    resp_value carries GET/ADD old values and CAS current values (zeros for
-    PUT/inactive rows), flag the CAS compare results.
+    resp_value carries GET/ADD old values and CAS current values (zeros
+    for PUT/inactive rows), flag the CAS compare results.
     """
     k, w = table.shape
     n = keys.shape[0]
-    # lane-align every axis (f32 tiling: 8 sublanes x 128 lanes); padded
-    # rows are inactive (lane -1, sentinel key, empty segment).  Inactive
-    # keys (>= the UNPADDED k) are remapped to the padded size kp, which
-    # the kernel's one-hot has no column for — otherwise a sentinel of
-    # exactly k would alias padded table line k when 8 does not divide k
-    kp, np_, wp = -(-k // 8) * 8, -(-n // 8) * 8, -(-w // 128) * 128
-    table_p = jnp.pad(table.astype(jnp.float32),
-                      ((0, kp - k), (0, wp - w)))
+    br = row_block(n, br)
+    bk = key_block(k, bk)
+    np_, kp = -(-n // br) * br, -(-k // bk) * bk
+    wp = -(-w // 128) * 128
+    n_rt = np_ // br
+    assert cont.shape[0] == n_rt, (
+        f"cont carries {cont.shape[0]} row tiles but N={n} at br={br} "
+        f"tiles into {n_rt} — build it with Grouping.tile_meta(block_rows="
+        f"{br}) so the channel and kernel agree on the tiling")
     rpad = np_ - n
+    t0 = jnp.pad(table.astype(jnp.float32), ((0, kp - k), (0, wp - w)))
+    # inactive keys (>= the UNPADDED k) are remapped to the padded size kp,
+    # which lies outside every key tile — sentinel rows match nothing even
+    # when the caller's table was padded
     keys_p = jnp.pad(jnp.where(keys >= k, kp, keys), (0, rpad),
                      constant_values=kp)
     lane_p = jnp.pad(lane, (0, rpad), constant_values=-1)
-    segid_p = jnp.pad(seg_id, (0, rpad), constant_values=-1)
-    segend_p = jnp.pad(seg_end, (0, rpad), constant_values=0)
-    value_p = jnp.pad(value.astype(jnp.float32),
-                      ((0, rpad), (0, wp - w)))
-    expect_p = jnp.pad(expect.astype(jnp.float32),
-                       ((0, rpad), (0, wp - w)))
+    sid_p = jnp.pad(sid, (0, rpad), constant_values=-1)
+    value_p = jnp.pad(value.astype(jnp.float32), ((0, rpad), (0, wp - w)))
+    expect_p = jnp.pad(expect.astype(jnp.float32), ((0, rpad), (0, wp - w)))
+    row = lambda x: x.reshape(1, np_)
+    kw = dict(br=br, bk=bk, interpret=interpret)
 
-    new_table, resp_value, flag = pl.pallas_call(
-        functools.partial(_serve_kernel, n=np_, k=kp),
-        grid=(1,),
-        in_specs=[
-            pl.BlockSpec((kp, wp), lambda i: (0, 0)),
-            pl.BlockSpec((1, np_), lambda i: (0, 0)),
-            pl.BlockSpec((1, np_), lambda i: (0, 0)),
-            pl.BlockSpec((np_, wp), lambda i: (0, 0)),
-            pl.BlockSpec((np_, wp), lambda i: (0, 0)),
-            pl.BlockSpec((1, np_), lambda i: (0, 0)),
-            pl.BlockSpec((1, np_), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((kp, wp), lambda i: (0, 0)),
-            pl.BlockSpec((np_, wp), lambda i: (0, 0)),
-            pl.BlockSpec((1, np_), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((kp, wp), jnp.float32),
-            jax.ShapeDtypeStruct((np_, wp), jnp.float32),
-            jax.ShapeDtypeStruct((1, np_), jnp.float32),
-        ],
-        interpret=interpret,
-    )(table_p, keys_p.reshape(1, np_), lane_p.reshape(1, np_),
-      value_p, expect_p, segid_p.reshape(1, np_), segend_p.reshape(1, np_))
-    return new_table[:k, :w], resp_value[:n, :w], flag[0, :n]
+    # PUT: every lane-1 row is a candidate; the last per segment commits
+    t1 = _scatter_last(t0, row(keys_p), row(sid_p),
+                       row((lane_p == 1).astype(jnp.int32)), value_p, **kw)
+    # ADD totals
+    t2 = _scatter_add(t1, row(keys_p), row(lane_p), value_p, **kw)
+    # responses: GET from T0, ADD base (from T1) + priors, CAS cur from T2
+    resp = _gather(t0, t1, t2, row(keys_p), row(lane_p), row(sid_p),
+                   value_p, cont.astype(jnp.int32).reshape(1, n_rt), **kw)
+    # CAS compare is a plain elementwise reduce — exact outside the kernel
+    ok_cas = (lane_p == 3) & jnp.all(resp == expect_p, axis=-1)
+    t3 = _scatter_last(t2, row(keys_p), row(sid_p),
+                       row(ok_cas.astype(jnp.int32)), value_p, **kw)
+    return t3[:k, :w], resp[:n, :w], ok_cas[:n].astype(jnp.float32)

@@ -55,19 +55,23 @@ def int_join_f32(hi: jax.Array, lo: jax.Array, dtype) -> jax.Array:
 
 
 def delegation_pack_planes(dst, planes, n_trustees: int, capacity: int,
-                           interpret: bool = True, br: int = 256):
+                           interpret: bool = True, br: int = 256,
+                           bs: int = 512):
     """Pallas pack over a pre-encoded f32 plane matrix (R, W).  Handles the
-    128-lane padding; ragged R is padded inside the kernel wrapper.  Returns
+    128-lane padding; ragged R is padded inside the kernel wrapper.
+    ``br``/``bs`` are the row/slot tile sizes (multiples of 128; clamped
+    for small inputs).  Returns
     (slots (T*C, W) f32, counts (T,) i32, request_slot (R,) i32)."""
     planesp, w = _pad_to(planes, 1, 128)
     slots, counts, req = _pack_pallas(
         dst, planesp, n_trustees=n_trustees, capacity=capacity, br=br,
-        interpret=interpret)
+        bs=bs, interpret=interpret)
     return slots[:, :w], counts, req
 
 
 def delegation_pack(dst, payload, n_trustees: int, capacity: int,
-                    impl: str = "ref", interpret: bool = True):
+                    impl: str = "ref", interpret: bool = True,
+                    br: int = 256, bs: int = 512):
     if impl == "ref":
         return ref.delegation_pack(dst, payload, n_trustees, capacity)
     dtype = payload.dtype
@@ -78,22 +82,24 @@ def delegation_pack(dst, payload, n_trustees: int, capacity: int,
         hi, lo = int_split_f32(payload)
         slots, counts, req = delegation_pack_planes(
             dst, jnp.concatenate([hi, lo], 1), n_trustees, capacity,
-            interpret=interpret)
+            interpret=interpret, br=br, bs=bs)
         return int_join_f32(slots[:, :w], slots[:, w:2 * w], dtype), counts, req
     slots, counts, req = delegation_pack_planes(
         dst, payload.astype(jnp.float32), n_trustees, capacity,
-        interpret=interpret)
+        interpret=interpret, br=br, bs=bs)
     return slots.astype(dtype), counts, req
 
 
-def delegation_serve(table, keys, lane, value, expect, seg_id, seg_end,
-                     interpret: bool = True):
+def delegation_serve(table, keys, lane, value, expect, sid, cont,
+                     interpret: bool = True, br: int = 256, bk: int = 512):
     """Fused trustee serve: apply a grouped GET/PUT/ADD/CAS row batch (in
-    the shared grouping's sorted order) to the table in ONE Pallas pass —
-    gathers, segment primitives and scatters as MXU matmuls.  See
-    ``delegation_serve.delegation_serve`` for the row contract."""
-    return _serve_pallas(table, keys, lane, value, expect, seg_id, seg_end,
-                         interpret=interpret)
+    the shared grouping's sorted order) to the table as tiled Pallas
+    passes — gathers, block-local segment scans with a cross-tile carry,
+    and scatters as MXU matmuls over (br, bk) tiles.  ``cont`` is the
+    per-row-tile carry metadata from ``Grouping.tile_meta(block_rows=br)``.
+    See ``delegation_serve.delegation_serve`` for the row contract."""
+    return _serve_pallas(table, keys, lane, value, expect, sid, cont,
+                         br=br, bk=bk, interpret=interpret)
 
 
 def grouped_matmul(x, w, impl: str = "ref", interpret: bool = True,

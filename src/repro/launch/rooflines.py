@@ -148,6 +148,153 @@ def attention_scan_correction(cfg, shape, mesh_model: int, dp_world: int,
     }
 
 
+def delegation_serve_roofline(n_rows: int, n_keys: int, width: int,
+                              br: int = 256, bk: int = 512,
+                              dtype_bytes: int = 4) -> Dict[str, float]:
+    """Closed-form roofline for ONE tiled delegation-serve round
+    (kernels/delegation_serve, DESIGN.md §12) on one trustee shard.
+
+    The tiled serve is six one-hot matmuls over the (rows x key-tiles)
+    product space — 3 gather lanes (GET/ADD-base/CAS-cur), 2 last-writer
+    scatters (PUT, CAS commit), 1 ADD scatter — plus per-row-tile (br, br)
+    segment-prefix matmuls (ADD priors and the two scatter winner scans):
+
+        mxu_flops  = 6 * 2 * N * Kp * W  +  3 * 2 * N * br * W'
+        hbm_bytes  = table traffic (4 kernel passes stream the K x W table
+                     through (bk, W) tiles: 3 scatter read+write passes plus
+                     the gather's 3 snapshot reads PER ROW TILE) + row
+                     traffic (keys/lane/sid re-fetched per opposing tile,
+                     value/resp streamed once per pass)
+
+    Returns seconds-per-round terms against the v5e constants above plus
+    the VMEM working set — the quantity the tiling actually bounds: the
+    retired dense kernel held an (N, N) same-segment mask and (N, K)
+    one-hots resident; the tiled kernels hold (br, br) and (br, bk).
+    """
+    n, k, w = n_rows, n_keys, width
+    brc = max(128, min(br, -(-n // 128) * 128))
+    bkc = max(128, min(bk, -(-k // 128) * 128))
+    wp = -(-w // 128) * 128
+    np_ = -(-n // brc) * brc
+    kp = -(-k // bkc) * bkc
+    n_rt, n_kt = np_ // brc, kp // bkc
+    # MXU work: 6 full-product one-hot matmuls + block-local segment scans
+    # (prior (br,br)@(br,W) once per row tile; winner scans (br,br)@(br,1)
+    # once per (key, row) step in each of the two scatter_last passes)
+    mxu_flops = (6 * 2.0 * np_ * kp * wp
+                 + 2.0 * np_ * brc * wp          # ADD prior prefix
+                 + 2 * 2.0 * np_ * brc * n_kt)   # later_ok winner scans
+    table_pass = kp * wp * dtype_bytes
+    hbm_bytes = (
+        3 * 2 * table_pass            # scatter passes: read T, write T'
+        + n_rt * 3 * table_pass       # gather streams 3 snapshots per row tile
+        + n_kt * 3 * np_ * 4          # keys/lane/sid per opposing tile
+        + 3 * np_ * wp * dtype_bytes  # value re-read per pass (3 passes)
+        + np_ * wp * dtype_bytes)     # resp written once
+    compute_s = mxu_flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    return {
+        "n_rows": n, "n_keys": k, "width": w, "br": brc, "bk": bkc,
+        "mxu_flops": mxu_flops, "hbm_bytes": hbm_bytes,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "bottleneck": "compute" if compute_s >= memory_s else "memory",
+        "vmem_tile_bytes": (brc * brc + brc * bkc + bkc * wp) * 4,
+        "vmem_dense_bytes": (np_ * np_ + np_ * kp + kp * wp) * 4,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Report rendering (shared by the benchmarks/roofline.py CLI and run.py)
+# ---------------------------------------------------------------------------
+
+def load_cells(art_dir: str, mesh: str = "single", tag: str = ""):
+    """Dry-run artifact cells (benchmarks/artifacts/dryrun/*.json) for one
+    (mesh, tag) slice, in filename order."""
+    import glob as _glob
+    import json as _json
+    import os as _os
+    cells = []
+    for p in sorted(_glob.glob(_os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            d = _json.load(f)
+        if d.get("mesh") != mesh or d.get("tag", "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def fraction(d) -> float:
+    """Roofline fraction: achieved-vs-peak useful compute if the step ran
+    exactly at its binding term."""
+    r = d["roofline"]
+    t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    if t <= 0:
+        return 0.0
+    return r["model_flops_per_chip"] / PEAK_FLOPS / t
+
+
+def render(cells, fmt: str = "md"):
+    """Print the EXPERIMENTS.md §Roofline table; returns the rows."""
+    rows = []
+    for d in cells:
+        if d["status"] == "skipped":
+            rows.append((d["arch"], d["shape"], "SKIP",
+                         d.get("reason", "")[:60], "", "", "", "", ""))
+            continue
+        if d["status"] == "error":
+            rows.append((d["arch"], d["shape"], "ERR",
+                         d.get("error", "")[:60], "", "", "", "", ""))
+            continue
+        r = d["roofline"]
+        rows.append((
+            d["arch"], d["shape"], r["bottleneck"],
+            f"{r['compute_s']*1e3:.1f}", f"{r['memory_s']*1e3:.1f}",
+            f"{r['collective_s']*1e3:.1f}", f"{r['useful_ratio']:.2f}",
+            f"{fraction(d)*100:.1f}%",
+            "yes" if d.get("fits_hbm") else "NO",
+        ))
+    header = ("arch", "shape", "bottleneck", "compute_ms", "memory_ms",
+              "collective_ms", "useful", "roofline_frac", "fits_hbm")
+    _print_table(header, rows, fmt)
+    return rows
+
+
+def render_delegation(r_sweep, n_keys: int, width: int, br: int = 256,
+                      bk: int = 512, fmt: str = "md"):
+    """Print the closed-form tiled-serve roofline over a row-batch sweep."""
+    rows = []
+    for r in r_sweep:
+        d = delegation_serve_roofline(r, n_keys, width, br=br, bk=bk)
+        rows.append((
+            f"{r}", f"{n_keys}", f"{width}", f"{d['br']}", f"{d['bk']}",
+            f"{d['mxu_flops']/1e9:.2f}", f"{d['hbm_bytes']/1e6:.2f}",
+            f"{d['compute_s']*1e6:.1f}", f"{d['memory_s']*1e6:.1f}",
+            d["bottleneck"],
+            f"{d['vmem_tile_bytes']/1e3:.0f}",
+            f"{d['vmem_dense_bytes']/1e6:.1f}",
+        ))
+    header = ("rows", "keys", "W", "br", "bk", "gflops", "MB_moved",
+              "compute_us", "memory_us", "bottleneck", "tile_kB",
+              "dense_MB")
+    _print_table(header, rows, fmt)
+    return rows
+
+
+def _print_table(header, rows, fmt):
+    if fmt == "csv":
+        print(",".join(header))
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        return
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows),
+                                   default=0))
+              for i, h in enumerate(header)]
+    print(" | ".join(h.ljust(w) for h, w in zip(header, widths)))
+    print("-|-".join("-" * w for w in widths))
+    for r in rows:
+        print(" | ".join(str(x).ljust(w) for x, w in zip(r, widths)))
+
+
 def derive(cost: Dict[str, float], coll: Dict[str, Dict[str, float]],
            n_chips: int, kind: str, n_active: int, tokens: int
            ) -> RooflineTerms:

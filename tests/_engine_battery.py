@@ -248,9 +248,11 @@ def _stats():
     assert set(stats) == {"kv", "rmw-lock"}, stats
     for name, d in stats.items():
         assert set(d) == {"rounds", "residual", "demand_max",
-                          "resp_bytes_saved"}, d
+                          "resp_bytes_saved", "impl_fallback"}, d
         assert d["rounds"] == 1 and d["residual"] == 0, (name, d)
         assert d["demand_max"] >= 1, (name, d)
+        # ref serve on f32 tables: no trace-time impl downgrade fired
+        assert d["impl_fallback"] == 0, (name, d)
         # both stores GET+ADD in this round: only the flag plane elides,
         # and the fused round reports the shared per-round saving
         assert d["resp_bytes_saved"] >= 0, (name, d)
