@@ -25,12 +25,104 @@
     (check_bench --normalize-impl masked) so the shared-grouping serve
     cannot silently lose its scaling edge; the kernel's scaling numbers
     come from the accelerator lane (benchmarks/kernel_sweep.py).
+  * combine: pre-wire request combining (DESIGN.md §13) over a Zipf skew
+    sweep plus the 16-key conflict-heavy mix, combine{off,ref} under a
+    pressured defer drain — the combine mode rides the pack_impl column
+    so check_bench gates the within-run ref/off ops ratio.
+
+Every row carries ``dup_factor`` — requests per distinct (op, key) pair
+in the wave, the combining headroom of the trace (1.0 where the trace is
+not key-addressed or not recorded).
 """
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
+
+
+def dup_factor(batches) -> float:
+    """Requests per distinct (op, key) pair across a wave's batches — the
+    per-round combining headroom of the trace (1.0 = every pair unique)."""
+    pairs, total = set(), 0
+    for op, keys, _vals, _expect in batches:
+        ks = np.asarray(keys).ravel()
+        total += ks.size
+        pairs.update((op, int(k)) for k in ks)
+    return round(total / max(1, len(pairs)), 2)
+
+
+def combine_exp(csv, mesh, args):
+    """Request combining (DESIGN.md §13): combine{off,ref} over identical
+    traces.  Skewed settings sweep Zipf alpha on 4096 keys; conflict_heavy
+    squeezes the wave onto 16 keys and shrinks the slot block so the defer
+    drain needs several rounds WITHOUT combining and one round WITH it —
+    the honest way the wire-row reduction becomes wall-clock on any
+    backend (with ample slots the padded all_to_all is the same size
+    either way).  The combine mode rides the pack_impl column so the CI
+    gate (check_bench --impl ref --normalize-impl off) tracks the
+    within-run on/off ops ratio; CAS is excluded from the mix because it
+    is the uncombinable archetype (expect/swap is order-sensitive)."""
+    import jax.numpy as jnp
+    from repro.core import DelegatedKVStore
+    from repro.core.routing import sample_keys
+    from benchmarks.common import bench, block
+
+    R = args.requests
+    n_dev = mesh.size
+    # setting -> (n_keys, dist, alpha, pressured)
+    settings = {
+        "uniform": (4096, "uniform", 1.0, False),
+        "zipf0.8": (4096, "zipf", 0.8, False),
+        "zipf1.1": (4096, "zipf", 1.1, False),
+        "zipf1.4": (4096, "zipf", 1.4, False),
+        "conflict_heavy": (16, "zipf", 1.1, True),
+    }
+    parts = [("get", 0.4), ("put", 0.2), ("add", 0.4)]
+    for setting, (n_keys, dist, alpha, pressured) in settings.items():
+        rng = np.random.default_rng(29)
+        batches = []
+        for op, frac in parts:
+            n = max(1, int(R * frac))
+            keys = jnp.asarray(sample_keys(rng, n_keys, n, dist, alpha))
+            vals = jnp.asarray(
+                rng.integers(0, 8, (n, 1)).astype(np.float32))
+            batches.append((op, keys, vals, None))
+        dup = dup_factor(batches)
+        for mode in ("off", "ref"):
+            kw = dict(capacity=max(1, R // n_dev), local_shortcut=False,
+                      combine=mode)
+            if pressured:
+                # tight primary block + bounded drain: combine-off pays
+                # extra rounds for the hot trustee, combine-on collapses
+                # each shard to <= |ops| x |local keys| segments per round
+                kw.update(capacity=max(1, R // n_dev // 16),
+                          overflow="defer", max_rounds=64)
+            st = DelegatedKVStore(mesh, n_keys, 1,
+                                  name=f"kv_{setting}_{mode}", **kw)
+            st.prefill(np.zeros((n_keys, 1), np.float32))
+
+            def wave():
+                futs = []
+                for op, keys, vals, _ in batches:
+                    if op == "get":
+                        futs.append(st.get_then(keys))
+                    elif op == "put":
+                        st.put_then(keys, vals)
+                    else:
+                        futs.append(st.add_then(keys, vals))
+                st.flush()
+                block([f.result()["value"] for f in futs]
+                      + [st.trust.state()["table"]])
+
+            wave()
+            stats = st.session.last_stats()[st.trust.name]
+            combined = int(stats.get("rows_combined", 0))
+            saved = int(stats.get("req_bytes_saved", 0))
+            print(f"combine {setting} {mode}: rows_combined={combined} "
+                  f"req_bytes_saved={saved}", flush=True)
+            dt = bench(wave, iters=4)
+            csv.add("combine", setting, mode, round(dt * 1e6, 1), 1.0, dup)
 
 
 def serve_hotpath(csv, mesh, args):
@@ -66,6 +158,7 @@ def serve_hotpath(csv, mesh, args):
             expect = jnp.asarray(
                 rng.integers(0, 8, (n, 1)).astype(np.float32))
             batches.append((op, keys, vals, expect))
+        dup = dup_factor(batches)
         for impl in ("masked", "ref", "pallas"):
             st = DelegatedKVStore(mesh, n_keys, 1,
                                   capacity=max(1, R // n_dev),
@@ -93,7 +186,7 @@ def serve_hotpath(csv, mesh, args):
                 .get("resp_bytes_saved", 0)
             dt = bench(wave, iters=4)
             csv.add("serve_hotpath", f"{mix_name}_elide{saved}", impl,
-                    round(dt * 1e6, 1), 1.0)
+                    round(dt * 1e6, 1), 1.0, dup)
 
 
 def serve_scale(csv, mesh, args):
@@ -120,6 +213,9 @@ def serve_scale(csv, mesh, args):
                     rng.integers(0, 8, (r, vw)).astype(np.float32))}
         received = Received(rows, jnp.ones((r,), bool),
                             jnp.zeros((r,), jnp.int32))
+        dup = round(r / max(1, len(set(
+            zip(np.asarray(rows["op"]).tolist(),
+                np.asarray(rows["key"]).tolist())))), 2)
         state = {"table": jnp.asarray(
             rng.integers(0, 8, (n_keys, vw)).astype(np.float32))}
         impls = ["masked", "ref"]
@@ -137,7 +233,8 @@ def serve_scale(csv, mesh, args):
                 block((new_state["table"], resp["value"]))
 
             dt = bench(round_, iters=4)
-            csv.add("serve_scale", f"r{r}", impl, round(dt * 1e6, 1), 1.0)
+            csv.add("serve_scale", f"r{r}", impl, round(dt * 1e6, 1), 1.0,
+                    dup)
 
 
 def api_overhead(csv, mesh, args):
@@ -206,7 +303,7 @@ def api_overhead(csv, mesh, args):
                 times[impl].append(_time.perf_counter() - t0)
         for impl, ts in times.items():
             csv.add("api_overhead", setting, impl,
-                    round(min(ts) * 1e6, 1), 1.0)
+                    round(min(ts) * 1e6, 1), 1.0, 1.0)
 
 
 def main(argv=None):
@@ -247,15 +344,19 @@ def main(argv=None):
     keys = jnp.asarray(keys_np)
     ones = jnp.ones((R, 1), jnp.float32)
     mean_cap = max(1, R // n_dev // n_dev)
+    # the shared add-wave trace below is single-op: its dup factor is
+    # requests per distinct key
+    dup_main = round(R / max(1, len(set(keys_np.tolist()))), 2)
 
     csv = Csv(["experiment", "setting", "pack_impl", "us_per_round",
-               "served_frac"])
+               "served_frac", "dup_factor"])
     csv.print_header()
 
     # --experiment names ONE experiment to run alone (CI bench-smoke uses
-    # serve_hotpath, the api-overhead gate api_overhead); only experiments
-    # that can run standalone are filterable
-    filterable = ("serve_hotpath", "api_overhead", "serve_scale")
+    # serve_hotpath, the api-overhead gate api_overhead, the combining
+    # gate combine); only experiments that can run standalone are
+    # filterable
+    filterable = ("serve_hotpath", "api_overhead", "serve_scale", "combine")
     if args.experiment and args.experiment not in filterable:
         ap.error(f"--experiment must be one of {filterable}, "
                  f"got {args.experiment!r}")
@@ -263,6 +364,8 @@ def main(argv=None):
         serve_hotpath(csv, mesh, args)
     if not args.experiment or args.experiment == "api_overhead":
         api_overhead(csv, mesh, args)
+    if not args.experiment or args.experiment == "combine":
+        combine_exp(csv, mesh, args)
     # serve_scale is opt-in only (the sweep dwarfs the default suite)
     if args.experiment == "serve_scale":
         serve_scale(csv, mesh, args)
@@ -281,7 +384,7 @@ def main(argv=None):
         served = float((np.asarray(out) != 0).any(1).mean())
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
         csv.add("capacity_drop", f"{mult}x_mean", "ref", round(dt * 1e6, 1),
-                round(served, 4))
+                round(served, 4), dup_main)
 
     # two-part slot: small primary + overflow round (lossless)
     for mult in (0.5, 1, 2):
@@ -294,7 +397,7 @@ def main(argv=None):
         served = float((np.asarray(out) != 0).any(1).mean())
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
         csv.add("two_part_slot", f"{mult}x_mean+4x_overflow", "ref",
-                round(dt * 1e6, 1), round(served, 4))
+                round(dt * 1e6, 1), round(served, 4), dup_main)
 
     # defer + drain engine: bounded multi-round backpressure (paper §5.1
     # wait-for-slot) — small primary blocks drain losslessly over rounds
@@ -309,7 +412,7 @@ def main(argv=None):
         served = 1.0 - stats["residual"] / R
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
         csv.add("defer_drain", f"{mult}x_mean_r{stats['rounds']}", "ref",
-                round(dt * 1e6, 1), round(served, 4))
+                round(dt * 1e6, 1), round(served, 4), dup_main)
 
     # local shortcut ablation
     for shortcut in (False, True):
@@ -318,7 +421,7 @@ def main(argv=None):
         st.prefill(np.zeros((n_keys, 1), np.float32))
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
         csv.add("local_shortcut", str(shortcut), "ref", round(dt * 1e6, 1),
-                1.0)
+                1.0, dup_main)
 
     # pack implementation: lax reference vs Pallas MXU kernel, same round
     impls = (["ref", "pallas"] if args.pack_impl == "both"
@@ -328,7 +431,8 @@ def main(argv=None):
                               pack_impl=impl, local_shortcut=False)
         st.prefill(np.zeros((n_keys, 1), np.float32))
         dt = bench(lambda: block(st.add(keys, ones)), iters=4)
-        csv.add("pack_impl", f"cap2x_{impl}", impl, round(dt * 1e6, 1), 1.0)
+        csv.add("pack_impl", f"cap2x_{impl}", impl, round(dt * 1e6, 1), 1.0,
+                dup_main)
 
     # engine_multi: TWO Trusts (KV table + token ledger) per request wave —
     # one multiplexed session.step() vs one solo round per Trust.  Same
@@ -364,7 +468,7 @@ def main(argv=None):
     for setting, fn in (("per_trust", per_trust), ("fused", fused)):
         dt = bench(fn, iters=4)
         csv.add("engine_multi", setting, eng_impl,
-                round(dt * 1e6, 1), round(served, 4))
+                round(dt * 1e6, 1), round(served, 4), dup_main)
 
     if args.out:
         csv.dump(args.out)

@@ -56,7 +56,9 @@ throughput win and the open-loop p99 bound.
 Columns: ``us_per_req`` = wall-clock per served request (1/throughput,
 feeds the BENCH ops/s trajectory); ``p50_us``/``p99_us`` = per-request
 latency percentiles; ``served_frac`` = served/offered (open loop drops a
-trailing partial wave).
+trailing partial wave); ``dup_factor`` = mean per-wave requests per
+distinct key — the combining headroom of the offered trace (DESIGN.md
+§13).
 """
 from __future__ import annotations
 
@@ -143,7 +145,7 @@ def main(argv=None):
     n_dev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()).reshape(1, n_dev), ("data", "model"))
     csv = Csv(["experiment", "setting", "pack_impl", "us_per_req",
-               "p50_us", "p99_us", "served_frac"])
+               "p50_us", "p99_us", "served_frac", "dup_factor"])
     csv.print_header()
 
     modes = [m for m in args.modes.split(",") if m]
@@ -162,6 +164,13 @@ def main(argv=None):
             vals = jnp.ones((load, 1), jnp.float32) if op == "add" else None
             waves.append((op, keys, vals))
         return waves
+
+    def trace_dup(waves):
+        """Mean per-wave requests per distinct key (each wave is one op,
+        so distinct keys = distinct (op, key) pairs)."""
+        rs = [k.shape[0] / max(1, len(np.unique(np.asarray(k))))
+              for _op, k, _v in waves]
+        return round(float(np.mean(rs)), 2)
 
     def build(load, mode):
         ses = TrustSession(donate_states=True)
@@ -246,17 +255,18 @@ def main(argv=None):
         wall = time.perf_counter() - t0
         return wall, lat, n, args.reqs
 
-    def report(experiment, setting, mode, wall, lat, served, offered):
+    def report(experiment, setting, mode, wall, lat, served, offered, dup):
         per_req = np.repeat([l for l, _c in lat], [c for _l, c in lat])
         csv.add(experiment, setting, mode,
                 round(wall / served * 1e6, 2),
                 round(float(np.percentile(per_req, 50)) * 1e6, 1),
                 round(float(np.percentile(per_req, 99)) * 1e6, 1),
-                round(served / offered, 3))
+                round(served / offered, 3), dup)
         return served / wall
 
     for load in [int(x) for x in args.loads.split(",")]:
         waves = gen_trace(load, seed=7)
+        dup = trace_dup(waves)
         closed_tput = {}
         if "closed" in arrivals:
             best = {}
@@ -269,7 +279,7 @@ def main(argv=None):
                 wall, lat, served, offered = best[mode]
                 closed_tput[mode] = report(
                     "closed", f"{args.dist}/load{load}", mode,
-                    wall, lat, served, offered)
+                    wall, lat, served, offered, dup)
         for arrival in arrivals:
             if arrival == "closed":
                 continue
@@ -286,7 +296,7 @@ def main(argv=None):
             for mode in modes:
                 wall, lat, served, offered = best[mode]
                 report(arrival, f"{args.dist}/load{load}_{arrival}", mode,
-                       wall, lat, served, offered)
+                       wall, lat, served, offered, dup)
 
     if args.out:
         csv.dump(args.out)

@@ -123,6 +123,14 @@ class ChannelConfig:
     #                                engage (e.g. "pallas" on a non-f32
     #                                table); False reports the fallback via
     #                                ChannelInfo.impl_fallback / last_stats
+    combine_impl: str = "off"      # client-side request combining before
+    #                                pack (DESIGN.md §13): "off" ships every
+    #                                request row; "ref" groups local rows by
+    #                                (op, key), ships ONE wire row per
+    #                                segment, and reconstructs full per-
+    #                                request responses after unpack —
+    #                                bit-identical by construction for the
+    #                                per-op archetypes (dedupe/sum/last)
 
     def total_capacity(self) -> int:
         if self.overflow == "second_round":
@@ -142,7 +150,7 @@ class ChannelConfig:
                 self.max_rounds, self.capacity, self.overflow_capacity,
                 self.serve_block_rows, self.serve_block_keys,
                 self.pack_block_rows, self.pack_block_slots,
-                self.strict_impl)
+                self.strict_impl, self.combine_impl)
 
     def n_slots(self, n_trustees: int) -> int:
         """Destination slots per device in the all_to_all block layout.
@@ -251,7 +259,8 @@ class Grouping(NamedTuple):
         return TileMeta(br, n_tiles, first, last, cont)
 
 
-def make_grouping(gid: jax.Array, n_bins: int = 0) -> Grouping:
+def make_grouping(gid: jax.Array, n_bins: int = 0,
+                  gid2: Optional[jax.Array] = None) -> Grouping:
     """Build the shared grouping from a per-row group id (sentinel = max).
 
     ONE stable sort per round (`lax.sort` carries the ids and the
@@ -259,9 +268,28 @@ def make_grouping(gid: jax.Array, n_bins: int = 0) -> Grouping:
     boundaries come from a histogram over the (small) id space when
     ``n_bins`` is given and modest — `seg_start = offsets[gid]`,
     `seg_end = offsets[gid + 1]` after an exclusive bin cumsum — and from
-    O(N) scans over the sorted ids otherwise."""
+    O(N) scans over the sorted ids otherwise.
+
+    ``gid2`` adds a SECONDARY sort key: rows group by the pair
+    ``(gid, gid2)`` without packing both into one int32 (the client-side
+    combine pass groups by (destination, span) x an unbounded key column,
+    where a packed id could overflow).  The pair path always takes the
+    O(N)-scan boundary route (``n_bins`` is ignored)."""
     n = gid.shape[0]
     pos = jnp.arange(n, dtype=jnp.int32)
+    if gid2 is not None:
+        gid_sorted, gid2_sorted, order = lax.sort(
+            (gid, gid2.astype(jnp.int32), pos), num_keys=2, is_stable=True)
+        inv = jnp.zeros((n,), jnp.int32).at[order].set(pos)
+        changed = (gid_sorted[1:] != gid_sorted[:-1]) \
+            | (gid2_sorted[1:] != gid2_sorted[:-1])
+        is_start = jnp.concatenate([jnp.ones((1,), bool), changed])
+        is_end = jnp.concatenate([changed, jnp.ones((1,), bool)])
+        seg_start = lax.cummax(jnp.where(is_start, pos, 0))
+        seg_end = lax.cummin(jnp.where(is_end, pos + 1, n), reverse=True)
+        return Grouping(order.astype(jnp.int32), inv, gid_sorted,
+                        seg_start, seg_end, pos - seg_start,
+                        jnp.take(seg_end, inv))
     gid_sorted, order = lax.sort((gid, pos), num_keys=1, is_stable=True)
     inv = jnp.zeros((n,), jnp.int32).at[order].set(pos)
     if 0 < n_bins <= 4 * n:
@@ -617,6 +645,13 @@ class ChannelInfo(NamedTuple):
     #                            lax for a non-f32 table); > 0 means the
     #                            round did NOT run the impl the config
     #                            asked for (cfg.strict_impl raises instead)
+    rows_combined: Any = 0     # GLOBAL request rows NOT transmitted this
+    #                            round because the combine pass collapsed
+    #                            them into a segment representative (psum;
+    #                            int32 when cfg.combine_impl != "off")
+    req_bytes_saved: Any = 0   # request-wire bytes those rows would have
+    #                            occupied (rows_combined x static bytes/row
+    #                            of the round's request payload)
 
 
 def _resp_bytes_per_row(leaf, wire_fmt: str) -> int:
@@ -757,8 +792,191 @@ def _concat_received(a: Received, b: Received) -> Received:
         client=jnp.concatenate([a.client, b.client]))
 
 
+# ---------------------------------------------------------------------------
+# Client-side request combining (DESIGN.md §13)
+#
+# On hot-key traces many rows of one shard address the SAME (op, key); each
+# currently rides its own request row through the all_to_all.  The combine
+# pass runs between the local-shortcut split and ``pack``: it groups the
+# remaining remote rows by (destination, op span, key) — reusing the
+# ``make_grouping`` sort machinery — deactivates every non-representative
+# row (dst = -1, so pack never assigns it a slot and the planner's demand
+# telemetry shrinks with it), and reconstructs the full per-request
+# responses after unpack.  Three archetypes cover the KV mix:
+#
+#   dedupe  (GET)  one row per distinct key rides the wire; the response
+#                  fans back to every requester (all read the same
+#                  round-entry value).
+#   sum     (ADD)  the segment-FIRST row carries the segment's summed
+#                  delta; each request's prior rebuilds as the combined
+#                  prior + the segment-local exclusive prefix of the
+#                  original deltas (exact for integer payloads within the
+#                  16-bit-plane encoding bound — and for the table, exact
+#                  always: addition is the same sum either way).
+#   last    (PUT)  only the segment-LAST row (the locally final write)
+#                  rides; last-writer-wins across clients is unchanged
+#                  because serve order is (client, slot) and each client
+#                  still contributes its final value in its own slot block.
+#
+# Ops whose outcome depends on each individual request (CAS: each expect can
+# match or not) declare no combine and pass through untouched — every
+# non-combinable row forms its own singleton segment.
+# ---------------------------------------------------------------------------
+
+_COMBINE_KINDS = ("dedupe", "sum", "last")
+_C_DEDUPE, _C_SUM, _C_LAST = 0, 1, 2
+
+
+class CombineSpan(NamedTuple):
+    """Static combine plan for ONE batch span of the fused round (built by
+    the engine's program builders; row membership rides a per-row int32
+    span column, -1 = never combined).  Lane names are post-rename wire
+    lane names (the multiplexed engine may namespace fields per trust)."""
+    kind: str                # "dedupe" | "sum" | "last"
+    key_lane: str            # wire lane whose value identifies the segment
+    sum_lane: Optional[str] = None   # "sum": wire lane carrying the delta
+    resp_tid: Optional[int] = None   # response subtree (tuple index) for a
+    #                                  non-merged multiplexed round; None =
+    #                                  the single/merged response dict
+    resp_field: str = "value"        # "sum": response field rebuilt as
+    #                                  combined prior + local excl. prefix
+
+
+class CombineCtx:
+    """Per-round reconstruction context ``RequestCombiner.pre`` hands to
+    ``post`` (plain object on purpose: it must never be flattened as a
+    pytree — it only flows within one trace)."""
+    __slots__ = ("rep_row", "prefixes", "combined")
+
+    def __init__(self, rep_row, prefixes, combined):
+        self.rep_row = rep_row      # (R,) int32 request-coord representative
+        self.prefixes = prefixes    # ((tid|None, field, (R, ...) array), ...)
+        self.combined = combined    # (R,) bool — deactivated (not shipped)
+
+
+class RequestCombiner:
+    """The combine pass: ``pre`` before ``pack``, ``post`` after unpack.
+
+    Segments never straddle destinations or spans (both are part of the
+    grouping key), and a segment is atomic under capacity pressure: only
+    its ONE representative can be dropped/deferred, so ``post`` expands the
+    representative's dropped bit back over the segment and the drain
+    engine retries whole segments."""
+
+    def __init__(self, spans: Tuple[CombineSpan, ...]):
+        assert spans, "RequestCombiner needs at least one CombineSpan"
+        for sp in spans:
+            assert sp.kind in _COMBINE_KINDS, sp.kind
+            assert sp.kind != "sum" or sp.sum_lane is not None
+        self.spans = tuple(spans)
+
+    def pre(self, dst: jax.Array, rows: Pytree, span_col: jax.Array):
+        """(dst, rows, span_col) -> (dst', rows', CombineCtx).  ``dst`` may
+        already hold virtual bins / -1 for local-shortcut rows; only active
+        rows of a declared span combine."""
+        n = dst.shape[0]
+        pos = jnp.arange(n, dtype=jnp.int32)
+        s = len(self.spans)
+        span_col = jnp.where(dst >= 0, span_col, -1)
+        comb = span_col >= 0
+        # primary key (dst, span) small; secondary key the op's combine key
+        # (unbounded — ride it as make_grouping's second sort key rather
+        # than packing into one id).  Non-combinable rows share primary -1
+        # with a unique secondary -> singleton segments.
+        k1 = jnp.where(comb, dst * s + span_col, -1).astype(jnp.int32)
+        key_col = jnp.zeros((n,), jnp.int32)
+        for sid, sp in enumerate(self.spans):
+            key_col = jnp.where(span_col == sid,
+                                rows[sp.key_lane].astype(jnp.int32), key_col)
+        k2 = jnp.where(comb, key_col, pos)
+        g = make_grouping(k1, gid2=k2)
+        seg_start_row = jnp.take(g.seg_start, g.inv)   # sorted pos of seg head
+        is_first = g.inv == seg_start_row
+        is_last = g.inv == g.seg_end_row - 1
+        kinds = jnp.asarray([_COMBINE_KINDS.index(sp.kind)
+                             for sp in self.spans], jnp.int32)
+        kind_col = jnp.take(kinds, jnp.clip(span_col, 0, s - 1))
+        keep_last = kind_col == _C_LAST
+        is_rep = jnp.where(comb,
+                           jnp.where(keep_last, is_last, is_first), True)
+        new_dst = jnp.where(comb & ~is_rep, -1, dst)
+
+        new_rows = dict(rows)
+        prefixes = []
+        for sid, sp in enumerate(self.spans):
+            if sp.kind != "sum":
+                continue
+            m = comb & (span_col == sid)
+            leaf = rows[sp.sum_lane]
+            mm = m.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            delta = jnp.where(mm, leaf, jnp.zeros_like(leaf))
+            d_s = jnp.take(delta, g.order, axis=0)
+            incl = jnp.cumsum(d_s, axis=0)
+            excl = incl - d_s
+            seg_base = jnp.take(excl, g.seg_start, axis=0)
+            prefix = jnp.take(excl - seg_base, g.inv, axis=0)
+            total_s = jnp.take(incl, jnp.clip(g.seg_end - 1, 0, n - 1),
+                               axis=0) - seg_base
+            total = jnp.take(total_s, g.inv, axis=0)
+            # the representative (segment-first) ships the summed delta;
+            # every other row of the segment is deactivated anyway
+            new_rows[sp.sum_lane] = jnp.where(mm & is_rep.reshape(mm.shape),
+                                              total, new_rows[sp.sum_lane])
+            prefixes.append((sp.resp_tid, sp.resp_field,
+                             jnp.where(mm, prefix, jnp.zeros_like(prefix))))
+
+        rep_sorted = jnp.where(keep_last, g.seg_end_row - 1, seg_start_row)
+        rep_row = jnp.where(comb, jnp.take(g.order, rep_sorted), pos)
+        return new_dst, new_rows, CombineCtx(rep_row, tuple(prefixes),
+                                             comb & ~is_rep)
+
+    def post(self, responses: Pytree, dropped: jax.Array, ctx: CombineCtx):
+        """Fan the representative responses back over their segments, add
+        the sum archetype's exclusive-prefix priors, and expand the
+        representative's dropped bit over the whole segment.  Returns
+        (responses', dropped')."""
+        rep = ctx.rep_row
+        dropped2 = jnp.take(dropped, rep)
+        out = jax.tree.map(lambda l: jnp.take(l, rep, axis=0), responses)
+        served = ~dropped2
+        for tid, field, pref in ctx.prefixes:
+            mm = served.reshape((-1,) + (1,) * (pref.ndim - 1))
+            pref = jnp.where(mm, pref, jnp.zeros_like(pref))
+            if tid is None:
+                out = {**out, field: out[field] + pref}
+            else:
+                sub = {**out[tid], field: out[tid][field] + pref}
+                out = tuple(sub if i == tid else o
+                            for i, o in enumerate(out))
+        return out, dropped2
+
+
+def as_combine_decl(c) -> Tuple[str, str, str, str]:
+    """Normalize an op's combine declaration (an ``opspec.Combine`` or the
+    "dedupe"/"sum"/"last" string shorthand) into a plain
+    ``(kind, key_field, sum_field, resp_field)`` tuple so the engine
+    builders never import the typed layer."""
+    if isinstance(c, str):
+        kind, key, field, resp = c, "key", "value", "value"
+    else:
+        kind, key, field, resp = c.kind, c.key, c.field, c.resp
+    if kind not in _COMBINE_KINDS:
+        raise ValueError(f"unknown combine kind {kind!r}; "
+                         f"expected one of {_COMBINE_KINDS}")
+    return kind, key, field, resp
+
+
+def _req_bytes_per_row(rows: Pytree, wire_fmt: str) -> int:
+    """Static request-wire bytes one row of this payload tree occupies
+    (the per-leaf rule is the response one — same encoding both ways)."""
+    return sum(_resp_bytes_per_row(l, wire_fmt)
+               for l in jax.tree.leaves(rows))
+
+
 def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
-             n_trustees: int, cfg: ChannelConfig
+             n_trustees: int, cfg: ChannelConfig,
+             combine: Optional[RequestCombiner] = None,
+             combine_span: Optional[jax.Array] = None
              ) -> Tuple[Pytree, Pytree, ChannelInfo]:
     """Synchronous delegation: pack -> transmit -> serve -> respond -> unpack.
 
@@ -775,6 +993,14 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
     bins ``trustee * n_lanes + lane``: every (client, trustee) block carries
     one ``capacity`` sub-block per lane, so each lane (Trust) keeps exactly
     its solo pack/capacity/FIFO semantics inside the shared message.
+
+    ``combine``/``combine_span`` (with ``cfg.combine_impl != "off"``)
+    engage the client-side combine pass (DESIGN.md §13) between the
+    shortcut split and ``pack``: local-shortcut rows are served
+    individually (they never ride the wire), remote rows collapse to one
+    row per (destination, span, key) segment, and responses/dropped bits
+    reconstruct after unpack.  ``pack``'s demand telemetry — and hence the
+    CapacityPlanner's EMA — therefore observes POST-combine demand.
     """
     r = dst.shape[0]
     n_slots = cfg.n_slots(n_trustees)
@@ -792,6 +1018,16 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
                                impl_fallback=len(impl_events))
             return new_state, local_resp, info
 
+    cctx = None
+    if combine is not None and combine_span is not None \
+            and cfg.combine_impl != "off":
+        # combine AFTER the shortcut split (only wire rows collapse; the
+        # serve still sees shortcut rows individually, appended last, in
+        # exactly the combine-off order) and BEFORE pack (group_sizes — the
+        # planner's demand — count combined rows).  local_recv captured the
+        # pre-combine payload, so shortcut rows serve their original deltas.
+        dst, payload, cctx = combine.pre(dst, payload, combine_span)
+
     packed, group_sizes = pack(dst, payload, n_bins, cfg)
     received = transmit(packed, n_bins, cfg)
     n_chan = received.valid.shape[0]
@@ -805,17 +1041,29 @@ def delegate(state: Pytree, dst: jax.Array, payload: Pytree, serve_fn: ServeFn,
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
     responses = _respond_unpack(resp_rows, packed.request_slot, n_bins, cfg,
                                 local_resp, local_mask)
+    dropped = packed.dropped
+    rows_combined = req_bytes_saved = 0
+    if cctx is not None:
+        responses, dropped = combine.post(responses, dropped, cctx)
+        rows_combined = lax.psum(
+            jnp.sum(cctx.combined, dtype=jnp.int32), cfg.axis)
+        req_bytes_saved = rows_combined * _req_bytes_per_row(payload,
+                                                             cfg.wire_fmt)
     n_rows = n_bins * cfg.total_capacity()
-    info = ChannelInfo(group_sizes, packed.dropped, n_rows,
+    info = ChannelInfo(group_sizes, dropped, n_rows,
                        resp_bytes_saved=resp_elision_bytes(
                            resp_rows, cfg, n_rows),
-                       impl_fallback=len(impl_events))
+                       impl_fallback=len(impl_events),
+                       rows_combined=rows_combined,
+                       req_bytes_saved=req_bytes_saved)
     return new_state, responses, info
 
 
 def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
                    serve_fn: ServeFn, n_trustees: int, cfg: ChannelConfig,
-                   max_rounds: Optional[int] = None
+                   max_rounds: Optional[int] = None,
+                   combine: Optional[RequestCombiner] = None,
+                   combine_span: Optional[jax.Array] = None
                    ) -> Tuple[Pytree, Pytree, ChannelInfo]:
     """Multi-round drain for ``overflow="defer"`` (paper §5.1: the two-part
     slot's third outcome, *wait for slot availability*, as bounded SPMD
@@ -843,7 +1091,9 @@ def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
     assert max_rounds >= 1
 
     state, responses, info = delegate(state, dst, payload, serve_fn,
-                                      n_trustees, cfg)
+                                      n_trustees, cfg,
+                                      combine=combine,
+                                      combine_span=combine_span)
     remaining = info.dropped
     total = lax.psum(jnp.sum(remaining, dtype=jnp.int32), cfg.axis)
     if max_rounds == 1:
@@ -853,16 +1103,23 @@ def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
     # fully served inline in round 1 (the shortcut path has no capacity), so
     # the shortcut split is disabled for the retry rounds
     cfg_retry = dataclasses.replace(cfg, local_shortcut=False)
+    combined0 = jnp.asarray(info.rows_combined, jnp.int32)
+    saved0 = jnp.asarray(info.req_bytes_saved, jnp.int32)
 
     def cond(carry):
-        _state, _resp, _rem, rounds, total = carry
+        _state, _resp, _rem, rounds, total, _comb, _saved = carry
         return (total > 0) & (rounds < max_rounds)
 
     def body(carry):
-        state, responses, remaining, rounds, _total = carry
+        state, responses, remaining, rounds, _total, comb, saved = carry
         dst_r = jnp.where(remaining, dst, -1)
+        # deferred segments stay atomic (only a segment's representative
+        # can be deferred, and post marks its whole segment remaining), so
+        # re-combining the retried rows re-forms the same segments
         state, resp_r, info_r = delegate(state, dst_r, payload, serve_fn,
-                                         n_trustees, cfg_retry)
+                                         n_trustees, cfg_retry,
+                                         combine=combine,
+                                         combine_span=combine_span)
         sent = remaining & ~info_r.dropped
         responses = jax.tree.map(
             lambda acc, new: jnp.where(
@@ -870,14 +1127,19 @@ def delegate_drain(state: Pytree, dst: jax.Array, payload: Pytree,
             responses, resp_r)
         remaining = info_r.dropped
         total = lax.psum(jnp.sum(remaining, dtype=jnp.int32), cfg.axis)
-        return state, responses, remaining, rounds + 1, total
+        comb = comb + jnp.asarray(info_r.rows_combined, jnp.int32)
+        saved = saved + jnp.asarray(info_r.req_bytes_saved, jnp.int32)
+        return state, responses, remaining, rounds + 1, total, comb, saved
 
-    state, responses, remaining, rounds, total = lax.while_loop(
-        cond, body, (state, responses, remaining, jnp.int32(1), total))
+    (state, responses, remaining, rounds, total, combined,
+     saved) = lax.while_loop(
+        cond, body, (state, responses, remaining, jnp.int32(1), total,
+                     combined0, saved0))
     return state, responses, ChannelInfo(info.group_sizes, remaining,
                                          info.n_rows, rounds, total,
                                          info.resp_bytes_saved,
-                                         info.impl_fallback)
+                                         info.impl_fallback,
+                                         combined, saved)
 
 
 class DelegationFuture(NamedTuple):
@@ -892,17 +1154,26 @@ class DelegationFuture(NamedTuple):
     cfg: ChannelConfig
     local_resp: Optional[Pytree] = None
     local_mask: Optional[jax.Array] = None
+    combiner: Optional[RequestCombiner] = None
+    combine_ctx: Optional[CombineCtx] = None
+    dropped: Optional[jax.Array] = None
 
     def wait(self) -> Pytree:
         if self.n_trustees == 1 and self.cfg.local_shortcut:
             return self.local_resp
-        return _respond_unpack(self.resp_rows, self.request_slot,
-                               self.n_trustees, self.cfg,
-                               self.local_resp, self.local_mask)
+        out = _respond_unpack(self.resp_rows, self.request_slot,
+                              self.n_trustees, self.cfg,
+                              self.local_resp, self.local_mask)
+        if self.combine_ctx is not None:
+            out, _dropped = self.combiner.post(out, self.dropped,
+                                               self.combine_ctx)
+        return out
 
 
 def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
-                   serve_fn: ServeFn, n_trustees: int, cfg: ChannelConfig
+                   serve_fn: ServeFn, n_trustees: int, cfg: ChannelConfig,
+                   combine: Optional[RequestCombiner] = None,
+                   combine_span: Optional[jax.Array] = None
                    ) -> Tuple[Pytree, DelegationFuture, ChannelInfo]:
     """apply_then(): returns immediately after the serve phase."""
     r = dst.shape[0]
@@ -922,6 +1193,11 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
                                impl_fallback=len(impl_events))
             return new_state, fut, info
 
+    cctx = None
+    if combine is not None and combine_span is not None \
+            and cfg.combine_impl != "off":
+        dst, payload, cctx = combine.pre(dst, payload, combine_span)
+
     packed, group_sizes = pack(dst, payload, n_bins, cfg)
     received = transmit(packed, n_bins, cfg)
     n_chan = received.valid.shape[0]
@@ -932,13 +1208,25 @@ def delegate_async(state: Pytree, dst: jax.Array, payload: Pytree,
     if local_recv is not None:
         local_resp = jax.tree.map(lambda l: l[n_chan:], resp_rows)
         resp_rows = jax.tree.map(lambda l: l[:n_chan], resp_rows)
+    dropped = packed.dropped
+    rows_combined = req_bytes_saved = 0
+    if cctx is not None:
+        dropped = jnp.take(dropped, cctx.rep_row)
+        rows_combined = lax.psum(
+            jnp.sum(cctx.combined, dtype=jnp.int32), cfg.axis)
+        req_bytes_saved = rows_combined * _req_bytes_per_row(payload,
+                                                             cfg.wire_fmt)
     fut = DelegationFuture(resp_rows, packed.request_slot, n_bins, cfg,
-                           local_resp, local_mask)
+                           local_resp, local_mask,
+                           combiner=combine if cctx is not None else None,
+                           combine_ctx=cctx, dropped=packed.dropped)
     n_rows = n_bins * cfg.total_capacity()
-    info = ChannelInfo(group_sizes, packed.dropped, n_rows,
+    info = ChannelInfo(group_sizes, dropped, n_rows,
                        resp_bytes_saved=resp_elision_bytes(
                            resp_rows, cfg, n_rows),
-                       impl_fallback=len(impl_events))
+                       impl_fallback=len(impl_events),
+                       rows_combined=rows_combined,
+                       req_bytes_saved=req_bytes_saved)
     return new_state, fut, info
 
 
@@ -993,6 +1281,11 @@ class DelegatedOp:
     apply_grouped: Optional[Callable] = None
     fused: Any = None
     spec: Any = None
+    combine: Any = None   # opspec.Combine (or "dedupe"/"sum"/"last"
+    #                       shorthand) declaring the op's client-side
+    #                       request-combining archetype; None = never
+    #                       combined (e.g. CAS — each request's outcome
+    #                       depends on its own expect value)
 
 
 def check_response_structs(named_resps) -> None:

@@ -393,16 +393,21 @@ class DelegationEngine:
         # impl events fire at trace time (first call per cache entry): pin
         # them to the program so later cache-hit steps still report them
         with ch.collect_impl_events() as impl_events:
-            new_state, resps, rounds, residual, demand = jitted(*args)
+            (new_state, resps, rounds, residual, demand,
+             combined, req_saved) = jitted(*args)
         if impl_events:
             self._impl_events[key] = tuple(impl_events)
         trust._state = new_state
         trust._last_stats = (rounds, residual)
         self.planner.observe(sig, demand)
         self.rounds_dispatched += 1
+        # rows_combined/req_bytes_saved are zero-filled constants when the
+        # trust ran no combine-eligible ops, so consumers (serve.py's
+        # per-trust stats print) can always read them
         self._last_step_stats[self._stats_key(trust)] = {
             "rounds": rounds, "residual": residual, "demand_max": demand,
             "resp_bytes_saved": self._cache[key][2],
+            "rows_combined": combined, "req_bytes_saved": req_saved,
             "impl_fallback": len(self._impl_events.get(key, ()))}
         return list(resps)
 
@@ -471,8 +476,9 @@ class DelegationEngine:
                                                jnp.asarray(x).dtype),
                 (states, dsts, payloads))
             with ch.collect_impl_events() as impl_events:
-                (new_states, resps, rounds, residual_pt,
-                 demand_pt, demand_merged) = jitted(states, dsts, payloads)
+                (new_states, resps, rounds, residual_pt, demand_pt,
+                 demand_merged, combined, req_saved) = \
+                    jitted(states, dsts, payloads)
             if impl_events:
                 self._impl_events[key] = tuple(impl_events)
         except Exception:
@@ -499,8 +505,11 @@ class DelegationEngine:
                 "rounds": rounds, "residual": (residual_pt, i),
                 "demand_max": (demand_pt, i),
                 # round-level response-transpose bytes elided (shared by
-                # every member of the fused round)
+                # every member of the fused round); rows_combined /
+                # req_bytes_saved are likewise round totals, zero-filled
+                # constants for rounds with no combine-eligible ops
                 "resp_bytes_saved": saved,
+                "rows_combined": combined, "req_bytes_saved": req_saved,
                 "impl_fallback": len(self._impl_events.get(key, ()))}
             for (_o, _d, _p, fut), resp in zip(pend, resps[i]):
                 fut._fulfil(resp)
@@ -543,6 +552,25 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig):
         cfg, elide_resp=_elidable_fields(ops, active, resp_like))
     serve = ch.serve_optable(ops, active_ids=active,
                              serve_impl=cfg.serve_impl, cfg=cfg)
+    # request combining (DESIGN.md §13): one CombineSpan per active op that
+    # declares an archetype; rows of undeclared ops ride span -1 (never
+    # combined).  Span membership is static per batch, so the span column
+    # is built host-side below and never ships on the wire.
+    combiner = None
+    span_of_op: Dict[int, int] = {}
+    if cfg.combine_impl != "off":
+        span_list = []
+        for oid in active:
+            if ops[oid].combine is None:
+                continue
+            kind, ckey, cfield, cresp = ch.as_combine_decl(ops[oid].combine)
+            span_of_op[oid] = len(span_list)
+            span_list.append(ch.CombineSpan(
+                kind, key_lane=ckey,
+                sum_lane=cfield if kind == "sum" else None,
+                resp_tid=None, resp_field=cresp))
+        if span_list:
+            combiner = ch.RequestCombiner(tuple(span_list))
     # Request batches are sharded over the whole mesh.  Shared mode: every
     # device is a client and originates its own slice.  Dedicated mode: the
     # fused batch is repacked so all real rows land on the leading n_clients
@@ -579,6 +607,12 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig):
                                            like.dtype))
             rows[name] = jnp.concatenate(parts, 0)
 
+        span_col = None
+        if combiner is not None:
+            span_col = jnp.concatenate(
+                [jnp.full((d.shape[0],), span_of_op.get(oid, -1), jnp.int32)
+                 for oid, d in zip(op_ids, dsts)], 0)
+
         r_total = dst.shape[0]
         # pad the fused batch so each ORIGIN shard gets an equal slice:
         # dedicated mode packs all R rows onto the leading n_clients shards
@@ -594,34 +628,51 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig):
                 lambda l: jnp.concatenate(
                     [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
                 rows)
+            if span_col is not None:
+                span_col = jnp.concatenate(
+                    [span_col, jnp.full((pad,), -1, jnp.int32)], 0)
 
         # any defer config routes through the drain engine so the
         # rounds/residual telemetry is truthful even at max_rounds=1
         drain = cfg.overflow == "defer"
 
-        def shard_fn(state_shard, dst_l, rows_l):
+        def shard_fn(state_shard, dst_l, rows_l, *extra):
+            ckw = dict(combine=combiner, combine_span=extra[0]) \
+                if combiner is not None else {}
             if drain:
                 new_state, resp, info = ch.delegate_drain(
-                    state_shard, dst_l, rows_l, serve, n_trustees, cfg)
+                    state_shard, dst_l, rows_l, serve, n_trustees, cfg,
+                    **ckw)
                 rounds, residual = info.rounds, info.residual
             else:
                 new_state, resp, info = ch.delegate(
-                    state_shard, dst_l, rows_l, serve, n_trustees, cfg)
+                    state_shard, dst_l, rows_l, serve, n_trustees, cfg,
+                    **ckw)
                 rounds, residual = jnp.int32(1), jnp.int32(0)
             demand = _demand_from_group_sizes(info, axes_all)
+            combined = jnp.reshape(
+                jnp.asarray(info.rows_combined, jnp.int32), (1,))
+            req_saved = jnp.reshape(
+                jnp.asarray(info.req_bytes_saved, jnp.int32), (1,))
             # identical on every shard (the drain loop count is psum-
-            # synchronized), so P(None) replication below is sound
+            # synchronized, combine stats are psum totals), so P(None)
+            # replication below is sound
             return (new_state, resp, jnp.reshape(rounds, (1,)),
-                    jnp.reshape(residual, (1,)), demand)
+                    jnp.reshape(residual, (1,)), demand, combined,
+                    req_saved)
 
         in_specs = (state_specs, req_spec,
-                    jax.tree.map(lambda _: req_spec, rows))
+                    jax.tree.map(lambda _: req_spec, rows)) \
+            + ((req_spec,) if combiner is not None else ())
         out_specs = (state_specs,
                      jax.tree.map(lambda _: req_spec, resp_like),
-                     P(None), P(None), P(None))
+                     P(None), P(None), P(None), P(None), P(None))
         f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=False)
-        new_state, resp, rounds, residual, demand = f(state, dst, rows)
+        args = (state, dst, rows) + \
+            ((span_col,) if combiner is not None else ())
+        (new_state, resp, rounds, residual, demand,
+         combined, req_saved) = f(*args)
         # split the fused responses back per batch INSIDE the program (host-
         # side slicing of sharded arrays would pay one dispatch per leaf)
         resps, off = [], 0
@@ -629,7 +680,8 @@ def _build_solo(trust, batches, cfg: ch.ChannelConfig):
             resps.append(jax.tree.map(lambda l, o=off, m=n: l[o:o + m],
                                       resp))
             off += n
-        return new_state, tuple(resps), rounds, residual, demand
+        return (new_state, tuple(resps), rounds, residual, demand,
+                combined, req_saved)
 
     n_rows = cfg.n_slots(n_trustees) * cfg.n_lanes * cfg.total_capacity()
     saved = 0 if (cfg.n_slots(n_trustees) == 1 and cfg.local_shortcut) \
@@ -726,6 +778,29 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
         serve = ch.serve_multiplex(tables, tuple(lane_of),
                                    merge_resp=merged_resp,
                                    serve_impl=cfg.serve_impl, cfg=cfg)
+    # request combining (DESIGN.md §13): one CombineSpan per (trust, op)
+    # that declares an archetype, on the POST-rename wire lanes; the sum
+    # archetype's prior rebuilds into the merged response dict (resp_tid
+    # None) or this trust's subtree of the per-trust response tuple
+    combiner = None
+    span_of: Dict[Tuple[int, int], int] = {}
+    if cfg.combine_impl != "off":
+        span_list = []
+        for tid, (t, (ops_t, active)) in enumerate(zip(trusts, tables)):
+            for oid in active:
+                if ops_t[oid].combine is None:
+                    continue
+                kind, ckey, cfield, cresp = \
+                    ch.as_combine_decl(ops_t[oid].combine)
+                span_of[(tid, oid)] = len(span_list)
+                span_list.append(ch.CombineSpan(
+                    kind, key_lane=lane_of[tid][ckey],
+                    sum_lane=lane_of[tid][cfield] if kind == "sum" else None,
+                    resp_tid=None if merged_resp else tid,
+                    resp_field=cresp))
+        if span_list:
+            combiner = ch.RequestCombiner(tuple(span_list))
+
     state_specs = tuple(t.state_specs for t in trusts)
     resp_specs = jax.tree.map(lambda _: req_spec, trusts[0].resp_like) \
         if merged_resp else \
@@ -787,6 +862,13 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
             dst = jnp.where(dst >= 0,
                             dst * n_trusts + tid_col.astype(jnp.int32), -1)
 
+        span_col = None
+        if combiner is not None:
+            span_col = jnp.concatenate(
+                [jnp.full((d.shape[0],), span_of.get((tid, oid), -1),
+                          jnp.int32)
+                 for tid, oid, d, _p in flat], 0)
+
         r_total = dst.shape[0]
         n_origins = n_cli if dedicated else max(1, mesh.size)
         r_dev = -(-r_total // n_origins)
@@ -800,17 +882,22 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
                 lambda l: jnp.concatenate(
                     [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)], 0),
                 rows)
+            if span_col is not None:
+                span_col = jnp.concatenate(
+                    [span_col, jnp.full((pad,), -1, jnp.int32)], 0)
 
         drain = cfg.overflow == "defer"
 
-        def shard_fn(states_l, dst_l, rows_l, tid_l):
+        def shard_fn(states_l, dst_l, rows_l, tid_l, *extra):
+            ckw = dict(combine=combiner, combine_span=extra[0]) \
+                if combiner is not None else {}
             if drain:
                 new_states, resp, info = ch.delegate_drain(
-                    states_l, dst_l, rows_l, serve, n_trustees, cfg)
+                    states_l, dst_l, rows_l, serve, n_trustees, cfg, **ckw)
                 rounds = info.rounds
             else:
                 new_states, resp, info = ch.delegate(
-                    states_l, dst_l, rows_l, serve, n_trustees, cfg)
+                    states_l, dst_l, rows_l, serve, n_trustees, cfg, **ckw)
                 rounds = jnp.int32(1)
             tid32 = tid_l.astype(jnp.int32)
             # per-trust residual (rows left unserved on any shard)
@@ -836,17 +923,24 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
                     .at[idx].add(1)[:-1].reshape(n_trusts, n_trustees)
                 demand_pt = lax.pmax(jnp.max(pair, axis=1), axes_all)
             demand_merged = _demand_from_group_sizes(info, axes_all)
+            combined = jnp.reshape(
+                jnp.asarray(info.rows_combined, jnp.int32), (1,))
+            req_saved = jnp.reshape(
+                jnp.asarray(info.req_bytes_saved, jnp.int32), (1,))
             return (new_states, resp, jnp.reshape(rounds, (1,)),
-                    res_pt, demand_pt, demand_merged)
+                    res_pt, demand_pt, demand_merged, combined, req_saved)
 
         in_specs = (state_specs, req_spec,
-                    jax.tree.map(lambda _: req_spec, rows), req_spec)
+                    jax.tree.map(lambda _: req_spec, rows), req_spec) \
+            + ((req_spec,) if combiner is not None else ())
         out_specs = (state_specs, resp_specs,
-                     P(None), P(None), P(None), P(None))
+                     P(None), P(None), P(None), P(None), P(None), P(None))
         f = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=False)
-        (new_states, resp, rounds, res_pt, demand_pt, demand_merged) = \
-            f(states, dst, rows, tid_col)
+        args = (states, dst, rows, tid_col) + \
+            ((span_col,) if combiner is not None else ())
+        (new_states, resp, rounds, res_pt, demand_pt, demand_merged,
+         combined, req_saved) = f(*args)
         # slice every (trust, batch) span back out INSIDE the program (host-
         # side slicing of sharded arrays would pay one dispatch per leaf)
         out_resps = []
@@ -856,7 +950,7 @@ def _build_mux(trusts, batches, cfg: ch.ChannelConfig) -> Callable:
                 jax.tree.map(lambda l, o=o, m=m: l[o:o + m], src)
                 for (o, m) in tb_spans))
         return (new_states, tuple(out_resps), rounds, res_pt,
-                demand_pt, demand_merged)
+                demand_pt, demand_merged, combined, req_saved)
 
     n_rows = cfg.n_slots(n_trustees) * cfg.n_lanes * cfg.total_capacity()
     saved = 0 if (t_send == 1 and cfg.local_shortcut) \

@@ -26,7 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .channel import DelegatedOp, Received
-from .opspec import Field, OpSpec, TrustSchema
+from .opspec import Combine, Field, OpSpec, TrustSchema
 from .trust import Trust, TrusteeGroup
 from . import routing
 
@@ -294,12 +294,20 @@ def make_kv_schema(n_trustees: int, value_width: int,
     kw = dict(response=resp, group_key=fused.group_key, fused=fused)
     return TrustSchema(
         "kv",
+        # Combine archetypes (DESIGN.md §13): GET dedupes (every duplicate
+        # reads the same round-entry table), ADD ships one summed delta and
+        # rebuilds per-request priors client-side, PUT ships only the
+        # segment-last writer (same global winner).  CAS declares NO
+        # combine: each expect can individually match or miss.
         ops=[OpSpec("get", payload=(key_f,), writes=("value",),
-                    serve=get, kernel_lane="get", **kw),
+                    serve=get, kernel_lane="get",
+                    combine=Combine("dedupe"), **kw),
              OpSpec("put", payload=(key_f, value_f), writes=(),
-                    serve=put, kernel_lane="put", **kw),
+                    serve=put, kernel_lane="put",
+                    combine=Combine("last"), **kw),
              OpSpec("add", payload=(key_f, value_f), writes=("value",),
-                    serve=add, kernel_lane="add", **kw),
+                    serve=add, kernel_lane="add",
+                    combine=Combine("sum"), **kw),
              OpSpec("cas", payload=(key_f, value_f, expect_f),
                     writes=("value", "flag"),
                     serve=cas, kernel_lane="cas", **kw)],
@@ -333,8 +341,9 @@ class DelegatedKVStore:
                  name: Optional[str] = None,
                  plan_capacity: bool = False, session=None,
                  strict_impl: bool = False,
-                 serve_blocks: Tuple[int, int] = (256, 512),
-                 pack_blocks: Tuple[int, int] = (256, 512)):
+                 serve_blocks: Any = (256, 512),
+                 pack_blocks: Any = (256, 512),
+                 combine: str = "off"):
         axis = axis if axis is not None else tuple(mesh.axis_names)
         group = TrusteeGroup(mesh, axis, mode=mode, n_dedicated=n_dedicated)
         t = group.n_trustees
@@ -358,7 +367,7 @@ class DelegatedKVStore:
             pack_impl=pack_impl, serve_impl=serve_impl, name=name,
             plan_capacity=plan_capacity, session=session,
             strict_impl=strict_impl, serve_blocks=serve_blocks,
-            pack_blocks=pack_blocks)
+            pack_blocks=pack_blocks, combine=combine)
         self.t = t
         self.dtype = dtype
 

@@ -124,6 +124,38 @@ class Field:
         return x
 
 
+@dataclass(frozen=True)
+class Combine:
+    """Client-side request-combining declaration for one op (DESIGN.md
+    §13).  When the channel runs with ``combine_impl="ref"``, rows of this
+    op that share a ``key`` value on one client shard collapse into ONE
+    wire row before the request all_to_all:
+
+    * ``kind="dedupe"`` — any row represents the segment (all read the
+      same round-entry value); the response fans back to every requester.
+    * ``kind="sum"`` — the representative ships the segment's summed
+      ``field``; each request's ``resp`` response rebuilds as the combined
+      response plus the segment-local exclusive prefix of the original
+      deltas (exact for integer payloads within the 16-bit-plane bound).
+    * ``kind="last"`` — only the segment-LAST row (the locally final
+      write) ships; inter-client last-writer-wins is unchanged because
+      serve order is (client, slot).
+
+    Ops whose outcome depends on each individual request (CAS) declare no
+    combine (``OpSpec(combine=None)``, the default) and pass through."""
+    kind: str                 # "dedupe" | "sum" | "last"
+    key: str = "key"          # payload field identifying the segment
+    field: str = "value"      # "sum": payload field holding the delta
+    resp: str = "value"       # "sum": response field carrying the prior
+
+    KINDS = ("dedupe", "sum", "last")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise SchemaError(
+                f"Combine kind {self.kind!r} is not one of {self.KINDS}")
+
+
 @dataclass(frozen=True, eq=False)
 class OpSpec:
     """Declarative spec of one delegated operation.
@@ -148,6 +180,10 @@ class OpSpec:
     kernel_lane: Optional[str] = None
     apply_grouped: Optional[Callable] = None
     fused: Any = None
+    combine: Optional[Combine] = None   # client-side request combining
+    #                                     (a Combine, or the "dedupe"/
+    #                                     "sum"/"last" string shorthand);
+    #                                     None = never combined
 
     # keyword names the generated handles take for themselves — a payload
     # field with one of these names could never be passed by keyword (its
@@ -171,6 +207,27 @@ class OpSpec:
                 raise SchemaError(
                     f"op {self.name!r}: writes names {unknown} not among "
                     f"its response fields {sorted(resp_names)}")
+        if self.combine is not None:
+            c = self.combine
+            if isinstance(c, str):
+                c = Combine(c)
+                object.__setattr__(self, "combine", c)
+            pay = {f.name for f in self.payload}
+            if c.key not in pay:
+                raise SchemaError(
+                    f"op {self.name!r}: combine key {c.key!r} is not a "
+                    f"payload field (fields: {sorted(pay)})")
+            if c.kind == "sum":
+                if c.field not in pay:
+                    raise SchemaError(
+                        f"op {self.name!r}: combine sum field {c.field!r} "
+                        f"is not a payload field (fields: {sorted(pay)})")
+                resp_names = {f.name for f in self.response}
+                if c.resp not in resp_names:
+                    raise SchemaError(
+                        f"op {self.name!r}: combine resp field {c.resp!r} "
+                        f"is not a response field "
+                        f"(fields: {sorted(resp_names)})")
 
     @property
     def payload_names(self) -> Tuple[str, ...]:
@@ -302,7 +359,7 @@ class TrustSchema:
                             kernel_lane=o.kernel_lane,
                             resp_fields=o.writes,
                             apply_grouped=o.apply_grouped, fused=o.fused,
-                            spec=o)
+                            spec=o, combine=o.combine)
                 for o in self.ops)
         return self._delegated
 

@@ -123,8 +123,9 @@ class TrusteeGroup:
                 name: Optional[str] = None, plan_capacity: bool = False,
                 session=None, schema: Optional[TrustSchema] = None,
                 strict_impl: bool = False,
-                serve_blocks: Tuple[int, int] = (256, 512),
-                pack_blocks: Tuple[int, int] = (256, 512)) -> "Trust":
+                serve_blocks: Any = (256, 512),
+                pack_blocks: Any = (256, 512),
+                combine: str = "off") -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
 
         The TYPED form passes ``schema=`` (a ``TrustSchema``, DESIGN.md
@@ -164,11 +165,19 @@ class TrusteeGroup:
 
         ``serve_blocks``/``pack_blocks`` are the (row, key|slot) tile sizes
         of the tiled Pallas kernels (multiples of 128; clamped for small
-        inputs — DESIGN.md §12).  ``strict_impl=True`` turns the serve
-        kernel's silent lax fallback (non-f32 tables) into a TypeError.
-        All of these are part of the fuse signature: trusts configured
-        differently never share a compiled round program.
+        inputs — DESIGN.md §12), or the string ``"auto"`` to pick them from
+        the roofline model (``rooflines.select_serve_blocks`` /
+        ``select_pack_blocks``) for this trust's state shape.
+        ``strict_impl=True`` turns the serve kernel's silent lax fallback
+        (non-f32 tables) into a TypeError.  ``combine`` ("off" | "ref")
+        engages the client-side request-combining pass for ops that declare
+        a combine archetype (DESIGN.md §13).  All of these are part of the
+        fuse signature: trusts configured differently never share a
+        compiled round program.
         """
+        if combine not in ("off", "ref"):
+            raise ValueError(
+                f"combine must be 'off' or 'ref', got {combine!r}")
         if schema is not None:
             if ops is not None or resp_like is not None:
                 raise ValueError(
@@ -181,6 +190,27 @@ class TrusteeGroup:
             raise ValueError(
                 "entrust needs a schema= (typed path) or both ops= and "
                 "resp_like= (legacy path)")
+        if serve_blocks == "auto" or pack_blocks == "auto":
+            # Autotuned block sizes (DESIGN.md §12): size the kernel tiles
+            # from the roofline model for this trust's state shape and a
+            # nominal wire-row count (n_clients x capacity when capacity is
+            # pinned; 4096 rows under auto capacity).
+            from ..launch.rooflines import (select_pack_blocks,
+                                            select_serve_blocks)
+            leaf = jnp.asarray(jax.tree.leaves(state)[0])
+            n_local = max(1, int(leaf.shape[0]) // self.n_trustees)
+            width = 1
+            for d in leaf.shape[1:]:
+                width *= int(d)
+            nominal = self.n_clients * capacity if capacity else 4096
+            if serve_blocks == "auto":
+                serve_blocks = select_serve_blocks(
+                    nominal, n_local, max(1, width),
+                    dtype_bytes=jnp.dtype(leaf.dtype).itemsize)
+            if pack_blocks == "auto":
+                pack_blocks = select_pack_blocks(
+                    nominal, nominal, max(1, width),
+                    dtype_bytes=jnp.dtype(leaf.dtype).itemsize)
         if state_specs is None:
             state_specs = jax.tree.map(lambda _: P(self.axes), state)
         if self.mode == "dedicated":
@@ -215,7 +245,8 @@ class TrusteeGroup:
                             serve_block_keys=serve_blocks[1],
                             pack_block_rows=pack_blocks[0],
                             pack_block_slots=pack_blocks[1],
-                            strict_impl=strict_impl)
+                            strict_impl=strict_impl,
+                            combine_impl=combine)
         return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg,
                      name=name, plan_capacity=plan_capacity, session=session,
                      schema=schema)

@@ -203,6 +203,55 @@ def delegation_serve_roofline(n_rows: int, n_keys: int, width: int,
     }
 
 
+_BLOCK_ROWS = (128, 256, 512, 1024)
+_BLOCK_COLS = (128, 256, 512, 1024, 2048)
+
+
+def _select_blocks(n_rows: int, n_cols: int, width: int, dtype_bytes: int,
+                   vmem_budget: int) -> Tuple[int, int]:
+    """Search the candidate (row, col) tile grid for the feasible pair that
+    minimizes the roofline's max(compute_s, memory_s); ties prefer LARGER
+    tiles (fewer grid steps, less per-tile launch overhead in interpret
+    mode, same modeled time)."""
+    best = None
+    for br in _BLOCK_ROWS:
+        for bk in _BLOCK_COLS:
+            r = delegation_serve_roofline(n_rows, n_cols, width,
+                                          br=br, bk=bk,
+                                          dtype_bytes=dtype_bytes)
+            if r["vmem_tile_bytes"] > vmem_budget:
+                continue
+            t = max(r["compute_s"], r["memory_s"])
+            # rank by the CLAMPED tiles the kernel actually runs (small
+            # inputs collapse several nominal candidates onto one shape)
+            cand = (t, -r["br"], -r["bk"], r["br"], r["bk"])
+            if best is None or cand < best:
+                best = cand
+    if best is None:   # nothing fits the budget: smallest legal tiles
+        return (_BLOCK_ROWS[0], _BLOCK_COLS[0])
+    return (best[3], best[4])
+
+
+def select_serve_blocks(n_rows: int, n_keys: int, width: int,
+                        dtype_bytes: int = 4,
+                        vmem_budget: int = 8 * 2 ** 20) -> Tuple[int, int]:
+    """Autotuned ``(serve_block_rows, serve_block_keys)`` for
+    ``entrust(serve_blocks="auto")``: pick the tile pair the serve roofline
+    ranks fastest for this (rows, local keys, value width) shape, subject
+    to the per-tile VMEM budget."""
+    return _select_blocks(n_rows, n_keys, width, dtype_bytes, vmem_budget)
+
+
+def select_pack_blocks(n_rows: int, n_slots: int, width: int,
+                       dtype_bytes: int = 4,
+                       vmem_budget: int = 8 * 2 ** 20) -> Tuple[int, int]:
+    """Autotuned ``(pack_block_rows, pack_block_slots)`` for
+    ``entrust(pack_blocks="auto")``.  The pack kernel is the same one-hot
+    tile-product shape as serve (rows x slot tiles instead of rows x key
+    tiles), so it reuses the serve roofline with slots as the column dim."""
+    return _select_blocks(n_rows, n_slots, width, dtype_bytes, vmem_budget)
+
+
 # ---------------------------------------------------------------------------
 # Report rendering (shared by the benchmarks/roofline.py CLI and run.py)
 # ---------------------------------------------------------------------------

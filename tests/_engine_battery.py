@@ -248,7 +248,8 @@ def _stats():
     assert set(stats) == {"kv", "rmw-lock"}, stats
     for name, d in stats.items():
         assert set(d) == {"rounds", "residual", "demand_max",
-                          "resp_bytes_saved", "impl_fallback"}, d
+                          "resp_bytes_saved", "rows_combined",
+                          "req_bytes_saved", "impl_fallback"}, d
         assert d["rounds"] == 1 and d["residual"] == 0, (name, d)
         assert d["demand_max"] >= 1, (name, d)
         # ref serve on f32 tables: no trace-time impl downgrade fired
@@ -256,6 +257,10 @@ def _stats():
         # both stores GET+ADD in this round: only the flag plane elides,
         # and the fused round reports the shared per-round saving
         assert d["resp_bytes_saved"] >= 0, (name, d)
+        # combine off (the default): the stats keys are still present,
+        # zero-filled, so consumers never KeyError
+        assert d["rows_combined"] == 0 and d["req_bytes_saved"] == 0, \
+            (name, d)
 
 
 @check("mux_defer_drain_matches_sequential")

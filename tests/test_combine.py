@@ -1,0 +1,42 @@
+"""Request-combining tests (DESIGN.md §13): the 8-device subprocess battery
+(_combine_battery.py) — Zipf hot-key traces with combine{off,ref} compared
+bit-for-bit against the sequential reference across shared / shortcut /
+dedicated, the >= 2x conflict-heavy wire-row reduction, the multiplexed
+round, and both defer-drain regimes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_combine_battery.py")
+
+
+@pytest.fixture(scope="session")
+def combine_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "zipf_shared_combine_matches_reference",
+    "zipf_shortcut_combine_matches_reference",
+    "zipf_dedicated_combine_matches_reference",
+    "conflict_heavy_halves_wire_rows",
+    "mux_combine_off_ref_bit_identical",
+    "drain_ample_combine_off_ref_bit_identical",
+    "drain_pressure_fully_drains",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_combine_multidevice(combine_battery, name):
+    res = combine_battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"
