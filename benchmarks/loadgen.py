@@ -59,10 +59,22 @@ latency percentiles; ``served_frac`` = served/offered (open loop drops a
 trailing partial wave); ``dup_factor`` = mean per-wave requests per
 distinct key — the combining headroom of the offered trace (DESIGN.md
 §13).
+
+``--chaos N`` adds an ``experiment=chaos`` open-loop lane per mode: a
+trustee shard is killed N waves into the timed run, the store recovers
+onto the survivors from the last quiesce-point snapshot (every
+``--chaos-snap-every`` waves), and every unsnapshotted wave replays.  A
+request whose response was never delivered keeps its ORIGINAL arrival
+time, so the recovery stall — re-entrust, restore, replay, and the
+recompile for the shrunk mesh — lands in p99 instead of being laundered
+by a post-recovery restart of the clock (DESIGN.md §14).
 """
 from __future__ import annotations
 
 import argparse
+import shutil
+import sys
+import tempfile
 import time
 
 import numpy as np
@@ -102,6 +114,13 @@ def main(argv=None):
                          "drifts over the ~tens of seconds one mode takes, "
                          "and back-to-back single runs can flip the "
                          "within-run ratio the CI gate watches")
+    ap.add_argument("--chaos", type=int, default=0,
+                    help="kill a trustee shard this many waves into each "
+                         "run and recover onto the survivors (0 = off); "
+                         "adds experiment=chaos rows whose p50/p99 include "
+                         "the recovery stall (needs >= 2 devices)")
+    ap.add_argument("--chaos-snap-every", type=int, default=8,
+                    help="snapshot cadence (waves) for the chaos lane")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -112,6 +131,7 @@ def main(argv=None):
     from repro.core.routing import sample_keys
     from repro.launch.streaming import (AdmissionControl, StreamingDriver,
                                         WaveHandle, _concrete)
+    from repro.runtime import EngineFailureInjector, TrusteeFailure
     from benchmarks.common import Csv
 
     class LockstepLoop:
@@ -255,6 +275,79 @@ def main(argv=None):
         wall = time.perf_counter() - t0
         return wall, lat, n, args.reqs
 
+    def run_chaos_open(load, mode, waves, rate):
+        """Open-loop run with a mid-trace trustee kill: snapshot every
+        ``--chaos-snap-every`` waves at pipeline quiesce points, recover
+        onto the survivors, replay the unsnapshotted suffix in order.
+        State rolls back to the snapshot, so already-delivered waves
+        re-commit their writes but record no second latency; a wave whose
+        response never reached the generator keeps its ORIGINAL arrival
+        time — the whole recovery stall lands in its latency."""
+        st, drv = build(load, mode)
+        ses = getattr(drv, "session", None) or drv.ses
+        warm(st, drv, load)
+        n = len(waves) * load
+        arr = gen_arrivals(n, rate, burst=False, seed=99)
+        lat = []
+        ckdir = tempfile.mkdtemp(prefix="loadgen_chaos_")
+        ses.install_injector(EngineFailureInjector(
+            schedule={ses.wave_counter + max(1, args.chaos):
+                      ("kill", len(jax.devices()) - 1)}))
+
+        def snapshot():
+            if hasattr(drv, "checkpoint"):
+                drv.checkpoint(ckdir)     # quiesces the pipeline first
+            else:
+                ses.checkpoint(ckdir)     # lockstep quiesces every wave
+
+        snapshot()
+        since_snap = []         # (op, keys, vals, on_consume) since snap
+        recovered = False
+        t0 = time.perf_counter()
+        for w, (op, keys, vals) in enumerate(waves):
+            wave_arr = arr[w * load:(w + 1) * load]
+            acked = [False]
+
+            def consumed(h, wave_arr=wave_arr, acked=acked):
+                if acked[0]:
+                    return      # replay of an already-delivered wave
+                acked[0] = True
+                done = h.consumed_at - t0
+                lat.extend((done - a, 1) for a in wave_arr)
+
+            entry = (op, keys, vals, consumed)
+            last = arr[(w + 1) * load - 1]
+            wait = last - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+            try:
+                drv.admit(load)
+                drv.dispatch(outputs=pack(st, op, keys, vals), rows=load,
+                             on_consume=consumed)
+            except TrusteeFailure as e:
+                recovered = True
+                if hasattr(drv, "recover"):
+                    drv.recover(e, ckdir)
+                else:
+                    ses.re_entrust([e.shard], ckpt_dir=ckdir)
+                with ses.replaying():
+                    for rop, rkeys, rvals, rcb in since_snap + [entry]:
+                        drv.admit(load)
+                        drv.dispatch(outputs=pack(st, rop, rkeys, rvals),
+                                     rows=load, on_consume=rcb)
+                    drv.drain()
+            since_snap.append(entry)
+            if (w + 1) % args.chaos_snap_every == 0:
+                snapshot()
+                since_snap = []
+        drv.drain()
+        wall = time.perf_counter() - t0
+        shutil.rmtree(ckdir, ignore_errors=True)
+        if not recovered:
+            raise SystemExit(f"--chaos {args.chaos}: kill never fired "
+                             f"(only {len(waves)} waves at load {load})")
+        return wall, lat, n, args.reqs, ses.last_stats().get("recovery", {})
+
     def report(experiment, setting, mode, wall, lat, served, offered, dup):
         per_req = np.repeat([l for l, _c in lat], [c for _l, c in lat])
         csv.add(experiment, setting, mode,
@@ -297,6 +390,25 @@ def main(argv=None):
                 wall, lat, served, offered = best[mode]
                 report(arrival, f"{args.dist}/load{load}_{arrival}", mode,
                        wall, lat, served, offered, dup)
+        if args.chaos:
+            if len(jax.devices()) < 2:
+                raise SystemExit("--chaos needs >= 2 devices (set "
+                                 "XLA_FLAGS=--xla_force_host_platform_"
+                                 "device_count=8)")
+            rate = args.rate or args.rate_frac * closed_tput.get("lockstep", 0)
+            if rate <= 0:
+                raise SystemExit("--chaos needs --rate or a closed-loop run")
+            # one run per mode: the deterministic recovery stall dwarfs
+            # ambient drift, so best-of-repeats would only launder it
+            for mode in modes:
+                wall, lat, served, offered, rec = run_chaos_open(
+                    load, mode, waves, rate)
+                report("chaos", f"{args.dist}/load{load}_chaos", mode,
+                       wall, lat, served, offered, dup)
+                print(f"# chaos {mode}: restores {rec.get('restores', 0)}, "
+                      f"replayed_rounds {rec.get('replayed_rounds', 0)}, "
+                      f"recovery_ms {rec.get('recovery_ms', 0.0):.1f}",
+                      file=sys.stderr)
 
     if args.out:
         csv.dump(args.out)

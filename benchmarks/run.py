@@ -42,6 +42,9 @@ REDUCED = {
     "streaming": ("benchmarks.loadgen",
                   ["--dist", "zipf", "--objects", "4096", "--loads", "512",
                    "--reqs", "8192", "--arrivals", "closed,open"]),
+    "recovery": ("benchmarks.recovery",
+                 ["--objects", "2048", "--load", "256", "--waves", "16",
+                  "--iters", "2"]),
 }
 
 FULL = {
@@ -67,6 +70,8 @@ FULL = {
                   ["--dist", "zipf", "--objects", "65536",
                    "--loads", "512,2048", "--reqs", "32768",
                    "--arrivals", "closed,open,burst"]),
+    "recovery": ("benchmarks.recovery",
+                 ["--objects", "65536", "--load", "1024", "--waves", "32"]),
 }
 
 

@@ -91,15 +91,31 @@ def save(directory: str, step: int, tree: Pytree,
     return final
 
 
+def _scan_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.isdir(os.path.join(directory, d)):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
 def latest_step(directory: str) -> Optional[int]:
     ptr = os.path.join(directory, "LATEST")
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        name = f.read().strip()
-    if not os.path.isdir(os.path.join(directory, name)):
-        return None
-    return int(name.split("_")[1])
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        if os.path.isdir(os.path.join(directory, name)):
+            return int(name.split("_")[1])
+    # LATEST missing or dangling (its target pruned/torn): fall back to
+    # scanning the published step_* dirs so a valid checkpoint is still found.
+    steps = _scan_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, tree_like: Pytree, step: Optional[int] = None,
@@ -109,7 +125,8 @@ def restore(directory: str, tree_like: Pytree, step: Optional[int] = None,
     ``shardings`` (pytree of NamedSharding) for elastic re-layout."""
     if step is None:
         step = latest_step(directory)
-        assert step is not None, f"no checkpoint under {directory}"
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -155,8 +172,17 @@ def prune_old(directory: str, keep: int = 3) -> None:
     """Keep the newest ``keep`` checkpoints (never the one LATEST points at)."""
     if not os.path.isdir(directory):
         return
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
+    pinned = None
+    ptr = os.path.join(directory, "LATEST")
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        if name.startswith("step_") and os.path.isdir(
+                os.path.join(directory, name)):
+            pinned = int(name.split("_")[1])
+    steps = _scan_steps(directory)
+    for s in steps[:-keep] if keep > 0 else steps:
+        if s == pinned:
+            continue
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)

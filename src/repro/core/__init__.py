@@ -21,12 +21,13 @@ from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
 from .engine import (CapacityPlanner, DelegationEngine, TrustSession,
                      check_payload_fields)
 from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
-from .kvstore import DelegatedKVStore, make_kv_ops, make_kv_schema
+from .kvstore import (DelegatedKVStore, kv_reshard, make_kv_ops,
+                      make_kv_schema)
 from .lockstore import (AtomicAddStore, FetchRMWStore, SequentialKVReference,
                         conflict_ranks)
 from .meshctx import (constrain, current_mesh, current_session,
                       delegation_mode, set_delegation_mode, set_mesh,
-                      set_session, use_mesh, use_session)
+                      set_session, survivors_mesh, use_mesh, use_session)
 from .routing import partition_clients_trustees, trustee_device_slot
 from .nested import launch_serve
 
@@ -38,8 +39,8 @@ __all__ = [
     "pack", "respond", "serve_multiplex", "serve_optable",
     "transmit", "unpack", "Trust", "TrusteeGroup", "TrustFuture",
     "local_trustees", "CapacityPlanner", "DelegationEngine", "TrustSession",
-    "check_payload_fields", "DelegatedKVStore", "make_kv_ops",
-    "make_kv_schema", "AtomicAddStore",
+    "check_payload_fields", "DelegatedKVStore", "kv_reshard", "make_kv_ops",
+    "make_kv_schema", "survivors_mesh", "AtomicAddStore",
     "FetchRMWStore", "SequentialKVReference", "conflict_ranks", "constrain",
     "current_mesh", "current_session", "delegation_mode",
     "set_delegation_mode", "set_session", "use_mesh", "use_session",

@@ -39,8 +39,10 @@ lane), just built and cached here.  See DESIGN.md §8.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
+import time
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -48,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import channel as ch
@@ -225,6 +227,17 @@ class DelegationEngine:
         self.last_step_info: Dict[str, Any] = {"fused": [], "solo": []}
         # (unjitted fused fn, aval-shaped args) — jaxpr inspection in tests
         self.last_exec = None
+        # -- resilience (DESIGN.md §14) ---------------------------------
+        # monotonic wave id per step() dispatch: failure schedules key on
+        # it, snapshot manifests record it, replays get FRESH ids
+        self.wave_counter = 0
+        self._current_wave = -1
+        self.injector = None            # EngineFailureInjector, if installed
+        self.dead_shards: set = set()
+        self.recovery = {"restores": 0, "replayed_rounds": 0,
+                         "recovery_ms": 0.0}
+        self._replaying = False
+        self._last_snapshot: Optional[Tuple[str, int]] = None
 
     def _jit(self, fn) -> Callable:
         """jit a round program, donating the leading states argument when
@@ -288,9 +301,20 @@ class DelegationEngine:
         ``{trust_name: {rounds, residual, demand_max, resp_bytes_saved}}``.
         ``resp_bytes_saved`` counts response-transpose bytes per shard per
         round statically elided (zero-response fields / PUT-only lanes);
-        for a fused round every member reports the round's total."""
-        return {name: {k: _as_int(v) for k, v in d.items()}
-                for name, d in self._last_step_stats.items()}
+        for a fused round every member reports the round's total.
+
+        After any recovery (``restore``/``re_entrust``) the dict carries a
+        ``"recovery"`` entry with session-lifetime counters: ``restores``,
+        ``replayed_rounds`` (rounds dispatched inside ``replaying()``), and
+        ``recovery_ms`` (host wall time spent restoring/rebinding)."""
+        out = {name: {k: _as_int(v) for k, v in d.items()}
+               for name, d in self._last_step_stats.items()}
+        if self.recovery["restores"]:
+            out["recovery"] = {
+                "restores": int(self.recovery["restores"]),
+                "replayed_rounds": int(self.recovery["replayed_rounds"]),
+                "recovery_ms": float(self.recovery["recovery_ms"])}
+        return out
 
     # -- step: one multiplexed round for everything pending -----------------
     def _mux_signature(self, trust):
@@ -324,6 +348,16 @@ class DelegationEngine:
             t = ref() if ref is not None else None
             if t is not None and t._pending:
                 pending_trusts.append(t)
+        if pending_trusts:
+            # one wave id per non-empty step; probed BEFORE the queues are
+            # dequeued so a pre-dispatch kill leaves them intact + notified
+            self._current_wave = self.wave_counter
+            self.wave_counter += 1
+            if self.injector is not None:
+                hit = self.injector.before_dispatch(self._current_wave)
+                if hit is not None:
+                    self._raise_failure(hit, self._current_wave,
+                                        pending_trusts)
         self._dirty.clear()
         self._last_step_stats = {}
         self.last_step_info = {"fused": [], "solo": []}
@@ -397,10 +431,15 @@ class DelegationEngine:
              combined, req_saved) = jitted(*args)
         if impl_events:
             self._impl_events[key] = tuple(impl_events)
+        # post-dispatch failure injection (drop/tear): fires BEFORE the
+        # state commits, so recovery = restore snapshot + replay, uniformly
+        self._maybe_tear([trust])
         trust._state = new_state
         trust._last_stats = (rounds, residual)
         self.planner.observe(sig, demand)
         self.rounds_dispatched += 1
+        if self._replaying:
+            self.recovery["replayed_rounds"] += 1
         # rows_combined/req_bytes_saved are zero-filled constants when the
         # trust ran no combine-eligible ops, so consumers (serve.py's
         # per-trust stats print) can always read them
@@ -481,6 +520,9 @@ class DelegationEngine:
                     jitted(states, dsts, payloads)
             if impl_events:
                 self._impl_events[key] = tuple(impl_events)
+            # post-dispatch failure injection (drop/tear) BEFORE any state
+            # commits — the except below restores every member's queue
+            self._maybe_tear(trusts)
         except Exception:
             # a build/dispatch error must not discard the queued batches:
             # restore every member's queue (state is untouched) so callers
@@ -494,6 +536,8 @@ class DelegationEngine:
         # double the engine's memory footprint between steps
         self.last_exec = (raw, aval_args)
         self.rounds_dispatched += 1
+        if self._replaying:
+            self.recovery["replayed_rounds"] += 1
         self.planner.observe(("mux", self._mux_signature(trusts[0])),
                              demand_merged)
         # per-batch responses were sliced INSIDE the program; stats stay
@@ -513,6 +557,241 @@ class DelegationEngine:
                 "impl_fallback": len(self._impl_events.get(key, ()))}
             for (_o, _d, _p, fut), resp in zip(pend, resps[i]):
                 fut._fulfil(resp)
+
+    # -- resilience: snapshot / restore / failover (DESIGN.md §14) ----------
+    def install_injector(self, injector) -> None:
+        """Install an ``EngineFailureInjector`` (runtime/fault_tolerance):
+        its schedule is probed per wave at dispatch (kill) and between
+        dispatch and state-commit (drop/tear)."""
+        self.injector = injector
+
+    def _raise_failure(self, hit, wave_id: int, trusts) -> None:
+        from ..runtime.fault_tolerance import TrusteeFailure
+        kind, shard = hit
+        if kind == "kill" and shard is not None:
+            self.dead_shards.add(int(shard))
+        snap = self._last_snapshot[1] if self._last_snapshot else None
+        raise TrusteeFailure(
+            f"trustee failure ({kind}) on shard {shard} at wave {wave_id}"
+            f" (last snapshot: {'none' if snap is None else snap})",
+            kind=kind, trusts=tuple(t.name for t in trusts),
+            wave_id=wave_id, shard=shard, last_snapshot_step=snap)
+
+    def _maybe_tear(self, trusts) -> None:
+        if self.injector is None:
+            return
+        hit = self.injector.after_dispatch(self._current_wave)
+        if hit is not None:
+            self._raise_failure(hit, self._current_wave, trusts)
+
+    @contextlib.contextmanager
+    def replaying(self):
+        """Mark the enclosed rounds as recovery replays: they increment
+        ``recovery["replayed_rounds"]`` instead of counting as new work."""
+        prev, self._replaying = self._replaying, True
+        try:
+            yield
+        finally:
+            self._replaying = prev
+
+    def quiesced(self) -> bool:
+        """True when no trust has pending submissions (the only states a
+        snapshot may capture — between engine rounds the trustee's linear
+        op history has no in-flight prefix)."""
+        return not self._dirty and all(
+            not t._pending for t in self.trusts())
+
+    def checkpoint(self, directory: str, step: Optional[int] = None) -> int:
+        """Snapshot every registered Trust's LOGICAL entrusted state into
+        one atomic, crc-checked checkpoint (checkpoint/checkpoint.py).
+
+        Requires a quiesced session: the trustee serializes all ops, so
+        "state between engine rounds" IS the consistent cut — there is no
+        speculative work to lose and nothing in flight to fence.  The
+        manifest carries each trust's schema fingerprint, fuse signature
+        and trustee-group layout so ``restore`` can validate compatibility
+        and re-shard across a trustee-count change.  Returns the step
+        (default: the current wave counter)."""
+        from ..checkpoint import checkpoint as ckpt
+        self._prune()
+        trusts = self.trusts()
+        busy = sorted(t.name for t in trusts if t._pending)
+        if busy:
+            raise RuntimeError(
+                f"session.checkpoint requires a quiesced session (snapshots "
+                f"are taken between engine rounds); trusts with pending "
+                f"submissions: {busy} — flush/step/drain first")
+        names = [t.name for t in trusts]
+        if len(set(names)) != len(names):
+            raise ValueError(
+                f"session.checkpoint needs unique trust names (the name is "
+                f"the manifest key), got {sorted(names)}")
+        if step is None:
+            step = self.wave_counter
+        tree, meta = {}, {}
+        for t in trusts:
+            tree[t.name] = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), t.trustee_state())
+            g = t.group
+            meta[t.name] = {
+                "schema": (t.schema.fingerprint()
+                           if t.schema is not None else None),
+                "fuse_sig": repr(t.cfg.fuse_sig()),
+                "n_trustees": g.n_trustees, "mode": g.mode,
+                "axes": list(g.axes), "n_dedicated": g.n_dedicated,
+                "mesh_shape": list(g.mesh.devices.shape)}
+        ckpt.save(directory, step, tree,
+                  extra={"kind": "trust_session", "wave": self.wave_counter,
+                         "trusts": meta})
+        self._last_snapshot = (directory, step)
+        return step
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        """Restore every registered Trust's entrusted state from a session
+        snapshot, matching by trust NAME, validating the schema fingerprint,
+        and ``device_put``-ing against the CURRENT mesh's shardings (the
+        snapshot stores logical owner-major state, so the mesh shape may
+        have changed).  A trustee-count change re-lays the state out via
+        the schema's ``reshard=`` rule.  Unacknowledged pending submissions
+        are dropped — recovery replays them from the snapshot wave.
+        Returns the restored step."""
+        from ..checkpoint import checkpoint as ckpt
+        t0 = time.perf_counter()
+        self._prune()
+        trusts = {t.name: t for t in self.trusts()}
+        tree_like = {name: jax.tree.map(lambda _: 0, t.trustee_state())
+                     for name, t in trusts.items()}
+        try:
+            tree, got_step, extra = ckpt.restore(directory, tree_like, step)
+        except KeyError as e:
+            raise ValueError(
+                f"checkpoint under {directory} has no state for trust "
+                f"leaf {e.args[0]!r}: the live session and the snapshot "
+                f"disagree on registered trusts") from None
+        meta = (extra or {}).get("trusts", {})
+        for name, t in trusts.items():
+            m = meta.get(name, {})
+            want = t.schema.fingerprint() if t.schema is not None else None
+            if m and m.get("schema") != want:
+                raise ValueError(
+                    f"trust {name!r}: schema fingerprint mismatch "
+                    f"(checkpoint {m.get('schema')}, live {want}) — "
+                    f"refusing to restore incompatible state")
+            host = tree[name]
+            old_t = int(m.get("n_trustees", t.n_trustees))
+            if old_t != t.n_trustees:
+                if t.schema is None or t.schema.reshard is None:
+                    raise ValueError(
+                        f"trust {name!r}: checkpoint holds {old_t}-trustee "
+                        f"state but the live group has {t.n_trustees} "
+                        f"trustees and the schema declares no reshard= rule")
+                host = t.schema.reshard(
+                    jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 host), old_t, t.n_trustees)
+            t.install_trustee_state(host)
+            t._pending = []
+            self.unnotify(t)
+        self._last_snapshot = (directory, got_step)
+        self.recovery["restores"] += 1
+        self.recovery["recovery_ms"] += (time.perf_counter() - t0) * 1e3
+        return got_step
+
+    def re_entrust(self, failed_shards, survivors=None,
+                   ckpt_dir: Optional[str] = None,
+                   step: Optional[int] = None, plan=None) -> None:
+        """Failover: rebuild every live trust's trustee group EXCLUDING the
+        dead shards, re-shard its state onto the survivors, and invalidate
+        the stale compiled programs.
+
+        ``failed_shards`` are flat device-slot indices into each group's
+        mesh; ``survivors`` overrides the survivor device list (default:
+        every mesh device not named in ``failed_shards``).  The shrunk mesh
+        shape comes from ``plan`` (an ``ElasticPlan``; default the
+        delegation ladder — 1-D trustee rings shrinking one shard at a
+        time).  State comes from ``ckpt_dir`` (the last snapshot — the
+        normal recovery path: the dead shard's DRAM is gone) or, when
+        ``ckpt_dir`` is None, live from the current state (administrative
+        re-shard, e.g. draining a shard ahead of maintenance).  Pending
+        submissions are dropped: the driver replays from the snapshot.
+        Callers replay inside ``session.replaying()`` so the rounds land
+        in ``recovery["replayed_rounds"]``."""
+        from .trust import TrusteeGroup
+        from .meshctx import survivors_mesh
+        from ..checkpoint import checkpoint as ckpt
+        t0 = time.perf_counter()
+        self._prune()
+        trusts = self.trusts()
+        if not trusts:
+            return
+        failed = {int(s) for s in failed_shards}
+        self.dead_shards |= failed
+        if ckpt_dir is None:
+            host_states = {t.name: jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), t.trustee_state())
+                for t in trusts}
+            metas = {t.name: {"n_trustees": t.n_trustees} for t in trusts}
+        else:
+            tree_like = {t.name: jax.tree.map(lambda _: 0, t.trustee_state())
+                         for t in trusts}
+            host_states, got_step, extra = ckpt.restore(
+                ckpt_dir, tree_like, step)
+            metas = (extra or {}).get("trusts", {})
+            self._last_snapshot = (ckpt_dir, got_step)
+        new_meshes: Dict[int, Mesh] = {}
+
+        def shrunk_mesh(old_mesh: Mesh) -> Mesh:
+            key = id(old_mesh)
+            if key not in new_meshes:
+                new_meshes[key] = survivors_mesh(old_mesh, failed,
+                                                 survivors, plan)
+            return new_meshes[key]
+
+        for t in trusts:
+            g = t.group
+            mesh = shrunk_mesh(g.mesh)
+            n_ded = g.n_dedicated
+            if g.mode == "dedicated":
+                axis_size = 1
+                for a in g.axes:
+                    axis_size *= int(mesh.shape[a])
+                n_ded = max(1, min(g.n_dedicated, axis_size - 1))
+            new_group = TrusteeGroup(mesh, g.axis, mode=g.mode,
+                                     n_dedicated=n_ded)
+            new_t = new_group.n_trustees
+            old_t = int(metas.get(t.name, {}).get("n_trustees",
+                                                  t.n_trustees))
+            host = host_states[t.name]
+            schema = t.schema
+            if new_t != old_t:
+                if schema is None or schema.reshard is None:
+                    raise ValueError(
+                        f"trust {t.name!r}: cannot re-entrust from {old_t} "
+                        f"to {new_t} trustees — the schema declares no "
+                        f"reshard= rule")
+                host = schema.reshard(
+                    jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 host), old_t, new_t)
+                if t.schema_factory is not None:
+                    # serve closures may bake the trustee count in (e.g.
+                    # the KV table's local_idx): rebuild the schema for it
+                    schema = t.schema_factory(new_t)
+            t._pending = []
+            self.unnotify(t)
+            t.rebind(new_group, schema=schema, logical_state=host)
+        # every compiled program whose member set touches a rebound trust
+        # carries the OLD fuse signature / schema identity — evict them
+        toks = {t.token for t in trusts}
+        self._cache = {k: v for k, v in self._cache.items()
+                       if not toks & set(k[1])}
+        self._impl_events = {k: v for k, v in self._impl_events.items()
+                             if not toks & set(k[1])}
+        live_sigs = set()
+        for t in self.trusts():
+            live_sigs.add(("solo", t.token))
+            live_sigs.add(("mux", self._mux_signature(t)))
+        self.planner.prune(live_sigs)
+        self.recovery["restores"] += 1
+        self.recovery["recovery_ms"] += (time.perf_counter() - t0) * 1e3
 
 
 # ``TrustSession`` is the user-facing name (the paper-side concept: one

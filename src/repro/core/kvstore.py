@@ -226,6 +226,37 @@ class KVTableServe:
                 "flag": unsrt(flag_s).astype(jnp.int32)}
 
 
+def kv_reshard(host_state: Dict[str, np.ndarray], old_t: int,
+               new_t: int) -> Dict[str, np.ndarray]:
+    """Re-layout an owner-major KV table for a different trustee count
+    (the failover path: ``TrustSchema.reshard``).
+
+    The table stores keys owner-major: trustee ``i`` holds keys
+    ``{k : k % old_t == i}`` at local index ``k // old_t``.  Reconstruct
+    key order, pad to a multiple of ``new_t`` (the extra rows are phantom
+    keys past the key space — zero, never routed to), and re-lay out
+    owner-major for ``new_t``."""
+    table = np.asarray(host_state["table"])
+    n_old = table.shape[0]
+    assert n_old % old_t == 0, (n_old, old_t)
+    n_local = n_old // old_t
+    key_order = np.zeros_like(table)
+    for i in range(old_t):
+        key_order[np.arange(i, n_old, old_t)] = \
+            table[i * n_local:(i + 1) * n_local]
+    n_new = ((n_old + new_t - 1) // new_t) * new_t
+    if n_new != n_old:
+        key_order = np.concatenate(
+            [key_order,
+             np.zeros((n_new - n_old,) + table.shape[1:], table.dtype)], 0)
+    nl2 = n_new // new_t
+    out = np.zeros((n_new,) + table.shape[1:], table.dtype)
+    for i in range(new_t):
+        out[i * nl2:(i + 1) * nl2] = key_order[np.arange(i, n_new, new_t)]
+    return {**{k: np.asarray(v) for k, v in host_state.items()},
+            "table": out}
+
+
 def make_kv_schema(n_trustees: int, value_width: int,
                    dtype=jnp.float32) -> TrustSchema:
     """The paper's KV store (§6.3) as a declarative ``TrustSchema``.
@@ -312,7 +343,8 @@ def make_kv_schema(n_trustees: int, value_width: int,
                     writes=("value", "flag"),
                     serve=cas, kernel_lane="cas", **kw)],
         state={"table": Field("table", (value_width,), dtype)},
-        route=lambda payload, t: routing.mod_router(payload["key"], t))
+        route=lambda payload, t: routing.mod_router(payload["key"], t),
+        reshard=kv_reshard)
 
 
 def make_kv_ops(n_trustees: int, value_width: int,
@@ -353,7 +385,11 @@ class DelegatedKVStore:
         self.n_keys_padded = ((n_keys + t - 1) // t) * t
         self.value_width = value_width
         table = jnp.zeros((self.n_keys_padded, value_width), dtype)
-        self.schema = make_kv_schema(t, value_width, dtype)
+        # the factory lets session.re_entrust rebuild the op table for a
+        # different trustee count (KVTableServe bakes n_trustees into its
+        # serve closures); the schema's reshard= rule re-lays the table out
+        schema_factory = lambda t_: make_kv_schema(t_, value_width, dtype)
+        self.schema = schema_factory(t)
         # entrusting registers the trust with the (ambient or given)
         # TrustSession, so session.step() can fuse this store's pending
         # batches with every other registered Trust's into one round;
@@ -367,9 +403,23 @@ class DelegatedKVStore:
             pack_impl=pack_impl, serve_impl=serve_impl, name=name,
             plan_capacity=plan_capacity, session=session,
             strict_impl=strict_impl, serve_blocks=serve_blocks,
-            pack_blocks=pack_blocks, combine=combine)
+            pack_blocks=pack_blocks, combine=combine,
+            schema_factory=schema_factory)
         self.t = t
         self.dtype = dtype
+        self.trust._on_rebuild.append(self._on_trust_rebuild)
+
+    def _on_trust_rebuild(self, trust: Trust) -> None:
+        """Failover hook: ``session.re_entrust`` rebound the trust onto a
+        new trustee group — refresh the facade's cached layout (trustee
+        count, schema, padded key-space size) so route/prefill/dump keep
+        working against the survivors' layout."""
+        self.group = trust.group
+        self.mode = trust.group.mode
+        self.t = trust.n_trustees
+        self.schema = trust.schema
+        self.n_keys_padded = int(
+            jax.tree.leaves(trust.trustee_state())[0].shape[0])
 
     @property
     def session(self):

@@ -111,6 +111,34 @@ def use_mesh(mesh: Mesh):
         _state.mesh = prev
 
 
+def survivors_mesh(old_mesh: Mesh, failed_shards, survivors=None,
+                   plan=None) -> Mesh:
+    """The shrunk mesh a failover re-entrusts onto: the devices of
+    ``old_mesh`` minus the dead flat shard slots (or an explicit survivor
+    list), reshaped to the ``ElasticPlan``'s chosen rung with the OLD axis
+    names — leading axes collapse to 1, the last carries the surviving
+    trustee ring, so every existing ``PartitionSpec`` over those names
+    stays valid.  Default plan: the delegation ladder (1-D trustee rings
+    shrinking one shard at a time, ``delegation_elastic_plan``)."""
+    failed = {int(s) for s in failed_shards}
+    devs = list(old_mesh.devices.reshape(-1))
+    surv = (list(survivors) if survivors is not None else
+            [d for i, d in enumerate(devs) if i not in failed])
+    if not surv:
+        raise RuntimeError("survivors_mesh: no surviving devices")
+    if plan is None:
+        from ..runtime.fault_tolerance import delegation_elastic_plan
+        plan = delegation_elastic_plan(len(devs))
+    shape = plan.choose(len(surv))
+    n = shape[0] * shape[1]
+    names = old_mesh.axis_names
+    dims = (1,) * (len(names) - 1) + (n,)
+    arr = np.empty(n, dtype=object)
+    for i, d in enumerate(surv[:n]):
+        arr[i] = d
+    return Mesh(arr.reshape(dims), names)
+
+
 def axis_size(axis: str) -> int:
     mesh = current_mesh()
     return int(mesh.shape[axis]) if axis in mesh.shape else 1

@@ -305,9 +305,13 @@ class TrustSchema:
 
     def __init__(self, name: str, ops: Sequence[OpSpec],
                  state: Optional[Dict[str, Field]] = None,
-                 route: Optional[Callable] = None):
+                 route: Optional[Callable] = None,
+                 reshard: Optional[Callable] = None):
         self.name = name
         self.ops = tuple(ops)
+        # reshard(host_state, old_t, new_t) -> host_state re-laid-out for a
+        # different trustee count; enables failover onto a shrunk mesh
+        self.reshard = reshard
         if not self.ops:
             raise SchemaError(f"schema {name!r} declares no ops")
         names = [o.name for o in self.ops]
@@ -335,6 +339,26 @@ class TrustSchema:
                     f"(declare the full struct and use writes= for the "
                     f"subset actually written)")
         self._delegated = None
+
+    def fingerprint(self) -> str:
+        """Stable identity for checkpoint manifests: hashes the contract a
+        restore must match (op names + payload/response field layouts +
+        state schema), NOT python object identity — two sessions that build
+        the same schema from the same factory fingerprint identically."""
+        import hashlib
+        parts = [self.name]
+        for o in self.ops:
+            parts.append(f"op:{o.name}")
+            for kind, fields in (("p", o.payload), ("r", o.response)):
+                for f in fields:
+                    parts.append(
+                        f"{kind}:{f.name}:{f.dtype}:{f.row_shape}")
+            parts.append(f"w:{sorted(o.writes or ())}")
+        if self.state is not None:
+            for n in sorted(self.state):
+                f = self.state[n]
+                parts.append(f"s:{n}:{f.dtype}:{f.row_shape}")
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
 
     # -- derivations ---------------------------------------------------------
     def resp_like(self) -> Dict[str, jax.Array]:

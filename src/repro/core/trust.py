@@ -125,7 +125,9 @@ class TrusteeGroup:
                 strict_impl: bool = False,
                 serve_blocks: Any = (256, 512),
                 pack_blocks: Any = (256, 512),
-                combine: str = "off") -> "Trust":
+                combine: str = "off",
+                schema_factory: Optional[Callable[[int], TrustSchema]] = None
+                ) -> "Trust":
         """Move ``state`` under trustee ownership and return the Trust handle.
 
         The TYPED form passes ``schema=`` (a ``TrustSchema``, DESIGN.md
@@ -178,6 +180,11 @@ class TrusteeGroup:
         if combine not in ("off", "ref"):
             raise ValueError(
                 f"combine must be 'off' or 'ref', got {combine!r}")
+        if schema is None and schema_factory is not None:
+            # failover-aware trusts entrust via a factory (n_trustees ->
+            # TrustSchema) so session.re_entrust can rebuild the op table
+            # for a different trustee count (serve closures bake T in)
+            schema = schema_factory(self.n_trustees)
         if schema is not None:
             if ops is not None or resp_like is not None:
                 raise ValueError(
@@ -249,7 +256,7 @@ class TrusteeGroup:
                             combine_impl=combine)
         return Trust(self, sharded, tuple(ops), resp_like, state_specs, cfg,
                      name=name, plan_capacity=plan_capacity, session=session,
-                     schema=schema)
+                     schema=schema, schema_factory=schema_factory)
 
 
 @dataclass
@@ -299,7 +306,8 @@ class Trust:
                  ops: Tuple[DelegatedOp, ...], resp_like: Pytree,
                  state_specs: Pytree, cfg: ChannelConfig,
                  name: Optional[str] = None, plan_capacity: bool = False,
-                 session=None, schema: Optional[TrustSchema] = None):
+                 session=None, schema: Optional[TrustSchema] = None,
+                 schema_factory: Optional[Callable] = None):
         self.group = group
         self._state = state
         self.ops = ops
@@ -308,6 +316,10 @@ class Trust:
         self.state_specs = state_specs
         self.cfg = cfg
         self.schema = schema
+        self.schema_factory = schema_factory
+        # failover hooks: session.re_entrust fires these after rebinding the
+        # trust onto a new trustee group (facades refresh cached layout here)
+        self._on_rebuild: List[Callable] = []
         self.op = OpNamespace(self, schema) if schema is not None else None
         self.plan_capacity = plan_capacity
         self._pending: List[Tuple[int, jax.Array, Pytree, TrustFuture]] = []
@@ -341,6 +353,61 @@ class Trust:
             rows_per = x.shape[0] // (t + c)
             return x[c * rows_per:]
         return jax.tree.map(strip, self._state)
+
+    # -- resilience (DESIGN.md §14) ------------------------------------------
+    def install_trustee_state(self, logical_state: Pytree) -> None:
+        """Install a LOGICAL (host or device) state pytree as the entrusted
+        state: re-pad the zero client region in dedicated mode and
+        device_put every leaf against the CURRENT group mesh's shardings —
+        the elastic half of checkpoint restore (the snapshot stores logical
+        owner-major state, the mesh it lands on may differ)."""
+        g = self.group
+
+        def pad(x):
+            x = jnp.asarray(x)
+            assert x.shape[0] % g.n_trustees == 0, \
+                f"leading dim {x.shape[0]} not divisible by " \
+                f"{g.n_trustees} trustees"
+            rows_per = x.shape[0] // g.n_trustees
+            z = jnp.zeros((g.n_clients * rows_per,) + x.shape[1:], x.dtype)
+            return jnp.concatenate([z, x], 0)
+
+        if g.mode == "dedicated":
+            logical_state = jax.tree.map(pad, logical_state)
+        self._state = jax.tree.map(
+            lambda x, s: jax.device_put(jnp.asarray(x),
+                                        NamedSharding(g.mesh, s)),
+            logical_state, self.state_specs)
+
+    def rebind(self, group: TrusteeGroup,
+               schema: Optional[TrustSchema] = None,
+               logical_state: Optional[Pytree] = None) -> None:
+        """Re-home this trust onto a new trustee group (failover path,
+        called by ``session.re_entrust``): swap group and (optionally)
+        schema, recompute the derived op table / handles / config fields,
+        reset the cached fuse signature so the engine recompiles, install
+        the given logical state, and fire the ``_on_rebuild`` hooks."""
+        self.group = group
+        if schema is not None:
+            self.schema = schema
+            self.ops = tuple(schema.delegated_ops())
+            self.op_index = {o.name: i for i, o in enumerate(self.ops)}
+            self.resp_like = schema.resp_like()
+            self.op = OpNamespace(self, schema)
+        self.cfg = dataclasses.replace(
+            self.cfg,
+            axis=group.axis if len(group.axes) > 1 else group.axes[0],
+            mode=group.mode,
+            n_clients=group.n_clients if group.mode == "dedicated" else 0,
+            local_shortcut=(False if group.mode == "dedicated"
+                            else self.cfg.local_shortcut))
+        # state_specs are PartitionSpecs (mesh-independent) — keep them
+        self._mux_sig = None
+        self._last_stats = None
+        if logical_state is not None:
+            self.install_trustee_state(logical_state)
+        for cb in self._on_rebuild:
+            cb(self)
 
     # -- core API ------------------------------------------------------------
     # The typed handles (``trust.op.<name>``) and the stringly shims below

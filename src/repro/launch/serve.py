@@ -55,9 +55,24 @@ def main(argv=None):
                          "many engine rounds in flight behind the decode "
                          "loop (0 = one blocking session.step per token); "
                          "admission control caps the in-flight ledger rows")
+    ap.add_argument("--chaos", type=int, default=None, metavar="WAVE",
+                    help="with --session: tear the ledger/meter engine "
+                         "round at this wave id (the round runs but its "
+                         "results are lost before any state commits), then "
+                         "recover by restoring the last session snapshot "
+                         "and replaying the lost waves.  The model pins "
+                         "the mesh, so chaos here exercises the same-mesh "
+                         "restore+replay path; shard kills with mesh "
+                         "shrink live in the failover battery")
+    ap.add_argument("--chaos-snap-every", type=int, default=8,
+                    help="with --chaos: checkpoint the session ledger "
+                         "every this many token waves (quiesce points)")
     args = ap.parse_args(argv)
     if args.stream_depth > 0 and not args.session:
         ap.error("--stream-depth requires --session")
+    if args.chaos is not None and not args.session:
+        ap.error("--chaos requires --session (it tears a session "
+                 "engine round)")
 
     import jax
     import jax.numpy as jnp
@@ -157,6 +172,22 @@ def main(argv=None):
             meter.prefill(np.zeros((max(mesh.size, 1), 1), np.float32))
             meter_keys = led_keys % max(mesh.size, 1)
 
+    chaos_dir = None
+    waves_since_snap = 0
+    if args.chaos is not None:
+        # deterministic chaos: tear the session round at the given wave —
+        # the jitted round ran, but its results are lost before any state
+        # commits (the paper's lost-response failure).  Recovery restores
+        # the last quiesce-point snapshot and replays the lost waves.
+        import tempfile as _tempfile
+        from ..runtime import EngineFailureInjector
+        chaos_dir = _tempfile.mkdtemp(prefix="serve_chaos_")
+        session.install_injector(EngineFailureInjector(
+            schedule={args.chaos: ("tear", 0)}))
+        print(f"[serve] chaos: tearing session wave {args.chaos}, "
+              f"snapshots every {args.chaos_snap_every} waves",
+              flush=True)
+
     driver = wave_rows = None
     if session is not None and args.stream_depth > 0:
         # dispatch-ahead: the ledger/meter engine round of token t runs
@@ -169,6 +200,27 @@ def main(argv=None):
             session, depth=args.stream_depth,
             admission=AdmissionControl(wave_rows * (args.stream_depth + 1)))
 
+    def ledger_wave():
+        # ONE multiplexed engine round serves every registered Trust's
+        # wave: ledger increments + meter traffic (typed handles — the
+        # schema routes the keys, DESIGN.md §10)
+        ledger.trust.op.add.then(led_keys, led_ones)
+        meter.trust.op.add.then(meter_keys, led_ones)
+        if driver is not None:
+            driver.admit(wave_rows)
+            driver.dispatch(rows=wave_rows)
+        else:
+            session.step()
+
+    def snapshot():
+        if driver is not None:
+            driver.checkpoint(chaos_dir)
+        else:
+            session.checkpoint(chaos_dir)
+
+    if chaos_dir is not None:
+        snapshot()
+
     t0 = time.monotonic()
     prev = None
     outputs = []
@@ -179,16 +231,29 @@ def main(argv=None):
         if t >= args.prompt_len - 1:
             outputs.append(np.asarray(prev))
             if session is not None:
-                # ONE multiplexed engine round serves every registered
-                # Trust's wave: ledger increments + meter traffic (typed
-                # handles — the schema routes the keys, DESIGN.md §10)
-                ledger.trust.op.add.then(led_keys, led_ones)
-                meter.trust.op.add.then(meter_keys, led_ones)
-                if driver is not None:
-                    driver.admit(wave_rows)
-                    driver.dispatch(rows=wave_rows)
+                if chaos_dir is None:
+                    ledger_wave()
                 else:
-                    session.step()
+                    from ..runtime import TrusteeFailure
+                    try:
+                        ledger_wave()
+                    except TrusteeFailure as e:
+                        print(f"[serve] chaos: {e}", flush=True)
+                        if driver is not None:
+                            driver.recover(e, chaos_dir)
+                        else:
+                            session.restore(chaos_dir)
+                        # replay the acknowledged-but-unsnapshotted waves,
+                        # then retry the torn one (its queues were dropped
+                        # by the restore; the wave resubmits from scratch)
+                        with session.replaying():
+                            for _ in range(waves_since_snap):
+                                ledger_wave()
+                        ledger_wave()
+                    waves_since_snap += 1
+                    if waves_since_snap % args.chaos_snap_every == 0:
+                        snapshot()
+                        waves_since_snap = 0
             elif ledger is not None:
                 ledger.trust.op.add(led_keys, led_ones)
     if driver is not None:
@@ -212,6 +277,17 @@ def main(argv=None):
               f"per-trust stats {session.last_stats()}", flush=True)
         if driver is not None:
             print(f"[serve] streaming driver: {driver.stats()}", flush=True)
+        if chaos_dir is not None:
+            rec = session.last_stats().get("recovery")
+            expect = args.gen
+            ok = bool(np.all(ledger.dump()[:, 0].astype(int) == expect))
+            print(f"[serve] chaos recovery: {rec} — ledger counts "
+                  f"{'MATCH' if ok else 'DIVERGE FROM'} the {expect} "
+                  f"generated tokens per request", flush=True)
+            import shutil as _shutil
+            _shutil.rmtree(chaos_dir, ignore_errors=True)
+            if not ok:
+                raise SystemExit("[serve] chaos recovery diverged")
     total_steps = args.prompt_len + args.gen - 1
     print(f"[serve] {total_steps} steps in {dt:.2f}s "
           f"({1e3*dt/total_steps:.1f} ms/step, "

@@ -213,6 +213,48 @@ class StreamingDriver:
     def inflight(self) -> int:
         return len(self._inflight)
 
+    # -- resilience (DESIGN.md §14) -----------------------------------------
+    def quiesce(self) -> None:
+        """Bring the pipeline to a quiesce point: consume every in-flight
+        wave AND flush anything still queued on the session.  After this,
+        no wave is in flight and no trust has pending submissions — the
+        only states a snapshot may capture (an in-flight wave's state
+        transition is not yet observable, so checkpointing mid-flight
+        would tear the acknowledged-op history)."""
+        self.drain()
+        if not self.session.quiesced():
+            self.session.step()
+            self.drain()
+
+    def checkpoint(self, directory: str, step: Optional[int] = None) -> int:
+        """Quiesce the pipeline, then snapshot the session
+        (``TrustSession.checkpoint``) — the ONLY correct way to checkpoint
+        a depth>0 streaming session.  Returns the snapshot step."""
+        self.quiesce()
+        return self.session.checkpoint(directory, step=step)
+
+    def recover(self, failure, ckpt_dir: str, survivors=None,
+                plan=None) -> int:
+        """Standard failover sequence for a ``TrusteeFailure`` raised out
+        of ``dispatch()``: discard the torn in-flight waves (their state
+        never committed), re-entrust onto the survivors when a shard died,
+        otherwise restore the last snapshot in place.  Returns the snapshot
+        step to replay from; the caller re-submits every wave after it
+        inside ``session.replaying()``."""
+        # the torn waves' futures will never be fulfilled: drop the handles
+        # without blocking on them (their programs may never have run)
+        self._inflight.clear()
+        if self.admission is not None:
+            self.admission.inflight_rows = 0
+        if getattr(failure, "kind", "kill") == "kill":
+            self.session.re_entrust(
+                [failure.shard] if failure.shard is not None else [],
+                survivors=survivors, ckpt_dir=ckpt_dir, plan=plan)
+        else:
+            self.session.restore(ckpt_dir)
+        snap = self.session._last_snapshot
+        return snap[1] if snap is not None else 0
+
     # -- adaptive wave sizing ----------------------------------------------
     def wave_budget(self, trusts, fallback: Optional[int] = None) -> int:
         """Target row count for the next wave, from the planner demand EMA.

@@ -1,2 +1,4 @@
-from .fault_tolerance import (ElasticPlan, FailureInjector, SimulatedFailure,
-                              StragglerMonitor, TrainLoop, TrainLoopConfig)
+from .fault_tolerance import (ElasticPlan, EngineFailureInjector,
+                              FailureInjector, SimulatedFailure,
+                              StragglerMonitor, TrainLoop, TrainLoopConfig,
+                              TrusteeFailure, delegation_elastic_plan)

@@ -31,6 +31,38 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+class TrusteeFailure(RuntimeError):
+    """A trustee shard died (or its round tore) during an engine wave.
+
+    Raised by ``DelegationEngine.step()`` when an ``EngineFailureInjector``
+    fires (or, in production, when the runtime detects a dead device).
+    Carries enough context for the recovery path to act without re-deriving
+    engine state: which trusts were in the failed wave, the wave id, the
+    failed shard index, and the last session snapshot step (None if the
+    session never checkpointed).
+
+    Failure kinds:
+      * ``kill``  — the shard is gone; recover via ``session.re_entrust``.
+      * ``drop``  — a response wave was lost in flight; state did NOT commit.
+      * ``tear``  — the round tore between dispatch and consumption; state
+        did NOT commit and pending queues were restored.
+    In every kind the failure surfaces BEFORE any future is fulfilled and
+    BEFORE any trust state commits, so recovery semantics are uniform:
+    restore the last snapshot and replay the waves since.
+    """
+
+    def __init__(self, msg: str, *, kind: str = "kill",
+                 trusts: Tuple[str, ...] = (), wave_id: int = -1,
+                 shard: Optional[int] = None,
+                 last_snapshot_step: Optional[int] = None):
+        super().__init__(msg)
+        self.kind = kind
+        self.trusts = tuple(trusts)
+        self.wave_id = wave_id
+        self.shard = shard
+        self.last_snapshot_step = last_snapshot_step
+
+
 @dataclass
 class FailureInjector:
     """Deterministic failure schedule: fail when step in ``at_steps``."""
@@ -41,6 +73,47 @@ class FailureInjector:
         if step in self.at_steps and step not in self.fired:
             self.fired.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class EngineFailureInjector:
+    """Deterministic trustee-failure schedule keyed on the engine wave counter.
+
+    ``schedule`` maps wave id -> (kind, shard) with kind in
+    {"kill", "drop", "tear"}.  Installed via
+    ``session.install_injector(inj)``; the engine consults it at two points:
+    ``before_dispatch`` (kill — the shard is dead before the round runs) and
+    ``after_dispatch`` (drop/tear — the round ran but its results are lost
+    before any state committed).  Each entry fires at most once, so replayed
+    waves (which get fresh wave ids) are not re-killed unless scheduled.
+    """
+    schedule: Dict[int, Tuple[str, int]] = field(default_factory=dict)
+    fired: set = field(default_factory=set)
+
+    def _probe(self, wave_id: int, phase: str) -> Optional[Tuple[str, int]]:
+        entry = self.schedule.get(wave_id)
+        if entry is None or wave_id in self.fired:
+            return None
+        kind = entry[0]
+        pre = kind == "kill"
+        if (phase == "before") != pre:
+            return None
+        self.fired.add(wave_id)
+        return entry
+
+    def before_dispatch(self, wave_id: int) -> Optional[Tuple[str, int]]:
+        return self._probe(wave_id, "before")
+
+    def after_dispatch(self, wave_id: int) -> Optional[Tuple[str, int]]:
+        return self._probe(wave_id, "after")
+
+
+def delegation_elastic_plan(n_devices: int) -> "ElasticPlan":
+    """ElasticPlan ladder for delegation meshes: 1-D (1, k) trustee rings
+    shrinking by one shard at a time, so killing any single trustee always
+    has a viable next rung (unlike the pow2 training ladder)."""
+    ladder = tuple((1, k) for k in range(n_devices, 0, -1))
+    return ElasticPlan(ladder=ladder)
 
 
 @dataclass
@@ -116,6 +189,7 @@ class TrainLoop:
         return 0 if s is None else s
 
     def run(self, n_steps: int, start_step: Optional[int] = None) -> Dict:
+        init_state = self.state
         step = self.resume_step() if start_step is None else start_step
         if step > 0:
             self.state, step, _ = ckpt.restore(self.cfg.ckpt_dir, self.state)
@@ -144,7 +218,10 @@ class TrainLoop:
                     raise
                 resumed = ckpt.latest_step(self.cfg.ckpt_dir)
                 if resumed is None:
+                    # no checkpoint on disk: a real restart begins from the
+                    # INITIAL state, not the partially-advanced one
                     step = 0
+                    self.state = init_state
                 else:
                     self.state, step, _ = ckpt.restore(self.cfg.ckpt_dir,
                                                        self.state)

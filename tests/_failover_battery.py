@@ -1,0 +1,486 @@
+"""Trustee-failover chaos battery — executed as a SUBPROCESS with 8
+simulated host devices (the main pytest process keeps a single device).
+
+The headline robustness proof (DESIGN.md §14): a trustee shard is killed
+mid-≥1k-op mixed GET/PUT/ADD/CAS trace, the session re-entrusts the state
+onto the survivors (a shrunk mesh chosen by the delegation elastic plan),
+the waves after the last snapshot replay — and the FULL acknowledged-op
+history is bit-identical to the sequential reference, in shared, shortcut
+and dedicated modes.  Also covers: multi-trust session checkpoint/restore
+across a mesh-shape change, drop/tear failure kinds (state must NOT
+commit), recovery counters in ``engine.last_stats()``, the quiesce
+precondition on ``session.checkpoint``, schema-fingerprint validation, and
+the StreamingDriver quiesce/checkpoint/recover surface.
+
+Prints one JSON dict of named check results; tests/test_failover.py
+asserts on them.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import shutil
+import tempfile
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+N_KEYS = 37          # prime: exercises owner-shard padding + reshard padding
+VW = 2               # value width
+R = 56               # rows per wave: divisible by 8 AND 7, so the
+                     # client-major contiguous request layout (= serve
+                     # order) survives the 8 -> 7 device shrink
+N_WAVES = 20         # 20 * 56 = 1120 ops >= the 1k-op acceptance floor
+SNAP_EVERY = 4       # checkpoint cadence (waves between snapshots)
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def gen_trace(seed):
+    """Random single-op waves with integer-valued float payloads (bit-exact
+    adds).  CAS expects hit a plain request-order sequential replay ~half
+    the time so both the success and failure paths exercise."""
+    from repro.core import SequentialKVReference
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    sim = SequentialKVReference(N_KEYS, VW)
+    sim.prefill(init)
+    waves = []
+    for _ in range(N_WAVES):
+        op = ["get", "put", "add", "cas"][int(rng.integers(0, 4))]
+        keys = rng.integers(0, N_KEYS, R).astype(np.int32)
+        vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+        expect = None
+        if op == "cas":
+            live = sim.table[keys].copy()
+            rand = rng.integers(0, 8, (R, VW)).astype(np.float32)
+            expect = np.where(rng.random(R)[:, None] < 0.5, live, rand)
+        if op == "get":
+            sim.get(keys)
+        elif op == "put":
+            sim.put(keys, vals)
+        elif op == "add":
+            sim.add(keys, vals)
+        else:
+            sim.cas(keys, expect, vals)
+        waves.append((op, keys, vals, expect))
+    return init, waves
+
+
+def serve_perm(keys, n_dev, shortcut):
+    """One wave's serve order: with the local shortcut each trustee serves
+    channel rows first, then its self-addressed rows — a permutation that
+    depends on the CURRENT device count (client id = row // rows-per-client,
+    owner = key % n_dev).  Without the shortcut, serve order == request
+    order (client-major contiguous layout)."""
+    if not shortcut:
+        return np.arange(len(keys))
+    r_per_client = len(keys) // n_dev
+    client = np.arange(len(keys)) // r_per_client
+    local = (keys % n_dev) == client
+    return np.concatenate([np.where(~local)[0], np.where(local)[0]])
+
+
+def ref_wave(ref, wave, n_dev, shortcut):
+    """Serve one wave on the sequential reference in the store's serve
+    order for ``n_dev`` devices; responses return in request order."""
+    op, keys, vals, expect = wave
+    perm = serve_perm(keys, n_dev, shortcut)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    if op == "get":
+        return ("value", ref.get(keys[perm])[inv])
+    if op == "put":
+        ref.put(keys[perm], vals[perm])
+        return ("none", None)
+    if op == "add":
+        return ("value", ref.add(keys[perm], vals[perm])[inv])
+    fl, old = ref.cas(keys[perm], expect[perm], vals[perm])
+    return ("cas", (fl[inv], old[inv]))
+
+
+def store_wave(store, sess, wave):
+    """Submit one wave, run it as one engine round, return the acknowledged
+    response (request order).  The fulfilled future IS the acknowledgment."""
+    op, keys, vals, expect = wave
+    k = jnp.asarray(keys)
+    if op == "get":
+        fut = store.get_then(k)
+    elif op == "put":
+        fut = store.put_then(k, jnp.asarray(vals))
+    elif op == "add":
+        fut = store.add_then(k, jnp.asarray(vals))
+    else:
+        fut = store.cas_then(k, jnp.asarray(expect), jnp.asarray(vals))
+    sess.step()
+    r = fut.result()
+    if op == "put":
+        return ("none", None)
+    if op == "cas":
+        return ("cas", (np.asarray(r["flag"]), np.asarray(r["value"])))
+    return ("value", np.asarray(r["value"]))
+
+
+def assert_identical(got, want, what):
+    kind_g, g = got
+    kind_w, w = want
+    assert kind_g == kind_w, f"{what}: kind {kind_g} != {kind_w}"
+    if kind_g == "none":
+        return
+    if kind_g == "cas":
+        assert np.array_equal(g[0], w[0]), f"{what}: cas flags differ"
+        assert np.array_equal(g[1], w[1]), f"{what}: cas old values differ"
+    else:
+        assert np.array_equal(g, w), f"{what}: responses differ"
+
+
+def run_chaos(mode_kw, shortcut, kill_wave, kill_shard, seed, what,
+              replay_exact=True):
+    """Kill a trustee shard at engine wave ``kill_wave``, recover onto the
+    survivors from the last snapshot, replay the unsnapshotted acked waves,
+    finish the trace — then prove the FULL acknowledged history
+    bit-identical to the sequential reference served with the device count
+    in effect at each wave's final acknowledgment.
+
+    ``replay_exact``: in the order-preserving modes (shared no-shortcut,
+    dedicated) a replayed wave must reproduce its ORIGINAL acknowledged
+    response bit-for-bit (the client already consumed it).  The shortcut's
+    serve order depends on the device count, so its chaos run aligns the
+    kill with a snapshot boundary (empty replay set) instead.
+    """
+    import repro.core as core
+    from repro.core import (DelegatedKVStore, SequentialKVReference,
+                            TrustSession)
+    from repro.runtime import EngineFailureInjector, TrusteeFailure
+
+    mesh = mesh2x4()
+    init, waves = gen_trace(seed)
+    ckdir = tempfile.mkdtemp(prefix="failover_")
+    try:
+        with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+            store = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R,
+                                     name="kv", **mode_kw)
+            store.prefill(init)
+            sess.install_injector(EngineFailureInjector(
+                schedule={kill_wave: ("kill", kill_shard)}))
+            sess.checkpoint(ckdir)
+            snapshot_wave = 0
+            acked = {}          # wave index -> (response, n_dev at ack)
+            failures = 0
+            expected_replays = 0
+            w = 0
+            while w < len(waves):
+                try:
+                    resp = store_wave(store, sess, waves[w])
+                except TrusteeFailure as e:
+                    failures += 1
+                    assert e.kind == "kill" and e.shard == kill_shard
+                    assert e.wave_id == kill_wave, (e.wave_id, kill_wave)
+                    assert e.last_snapshot_step is not None
+                    assert "kv" in e.trusts
+                    sess.re_entrust([e.shard], ckpt_dir=ckdir)
+                    expected_replays += w - snapshot_wave
+                    with sess.replaying():
+                        for rw in range(snapshot_wave, w):
+                            r2 = store_wave(store, sess, waves[rw])
+                            if replay_exact:
+                                assert_identical(
+                                    r2, acked[rw][0],
+                                    f"{what} replay {rw} vs original ack")
+                            acked[rw] = (r2, store.group.axis_size)
+                    continue
+                acked[w] = (resp, store.group.axis_size)
+                w += 1
+                if w % SNAP_EVERY == 0:
+                    sess.checkpoint(ckdir)
+                    snapshot_wave = w
+            assert failures == 1, f"{what}: injector fired {failures}x"
+            assert store.group.axis_size == 7, \
+                f"{what}: mesh did not shrink ({store.group.axis_size})"
+            if store.mode != "dedicated":
+                assert store.t == 7, f"{what}: T did not shrink ({store.t})"
+
+            # oracle: replay the acknowledged history; each wave serves in
+            # the order of the device count at its FINAL acknowledgment
+            ref = SequentialKVReference(N_KEYS, VW)
+            ref.prefill(init)
+            for i in range(len(waves)):
+                resp, n_dev = acked[i]
+                want = ref_wave(ref, waves[i], n_dev, shortcut)
+                assert_identical(resp, want, f"{what} wave {i}")
+            assert np.array_equal(store.dump(), ref.dump()), \
+                f"{what}: final table differs"
+            st = sess.last_stats()
+            assert st["recovery"]["restores"] >= 1
+            assert st["recovery"]["recovery_ms"] > 0
+            assert st["recovery"]["replayed_rounds"] == expected_replays, \
+                (st["recovery"]["replayed_rounds"], expected_replays)
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+@check("chaos_shared_kill_mid_trace")
+def _chaos_shared():
+    run_chaos({"local_shortcut": False}, shortcut=False, kill_wave=9,
+              kill_shard=3, seed=60, what="chaos/shared")
+
+
+@check("chaos_shortcut_kill_at_snapshot")
+def _chaos_shortcut():
+    # snapshot-aligned kill: the shortcut's serve order depends on the
+    # device count, so replays could not re-ack bit-identically — the
+    # durable snapshot covers every acked wave instead (empty replay set)
+    run_chaos({"local_shortcut": True}, shortcut=True, kill_wave=8,
+              kill_shard=3, seed=61, what="chaos/shortcut",
+              replay_exact=False)
+
+
+@check("chaos_dedicated_kill_mid_trace")
+def _chaos_dedicated():
+    # 2x4 dedicated T=3: shards 5,6,7 are the reserved trustee slots; kill
+    # trustee shard 6 -> 7 survivors (4 clients + 3 trustees, T unchanged,
+    # state restored from the snapshot — the dead shard's DRAM is gone)
+    run_chaos({"mode": "dedicated", "n_dedicated": 3}, shortcut=False,
+              kill_wave=9, kill_shard=6, seed=62, what="chaos/dedicated")
+
+
+@check("chaos_kill_far_from_snapshot_replays_several_waves")
+def _chaos_offset():
+    # kill three waves past the snapshot: durable prefix + 3-wave replay
+    run_chaos({"local_shortcut": False}, shortcut=False, kill_wave=11,
+              kill_shard=5, seed=63, what="chaos/offset")
+
+
+@check("multi_trust_checkpoint_restores_across_mesh_shapes")
+def _multi_trust_elastic():
+    """A 2-trust session snapshots on a 2x4 mesh and restores into a fresh
+    session on a 1x8 mesh (same trustee count, different shape): state and
+    post-restore serves are bit-identical."""
+    import repro.core as core
+    from repro.core import DelegatedKVStore, TrustSession
+    rng = np.random.default_rng(70)
+    init_a = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    init_b = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    keys = rng.integers(0, N_KEYS, R).astype(np.int32)
+    vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+    k2 = rng.integers(0, N_KEYS, R).astype(np.int32)
+    ckdir = tempfile.mkdtemp(prefix="elastic_")
+    try:
+        mesh_a = mesh2x4()
+        with core.use_session(TrustSession()) as s1, core.use_mesh(mesh_a):
+            a = DelegatedKVStore(mesh_a, N_KEYS, VW, capacity=R, name="a",
+                                 local_shortcut=False)
+            b = DelegatedKVStore(mesh_a, N_KEYS, VW, capacity=R, name="b",
+                                 local_shortcut=False)
+            a.prefill(init_a)
+            b.prefill(init_b)
+            a.add_then(jnp.asarray(keys), jnp.asarray(vals))
+            b.put_then(jnp.asarray(keys), jnp.asarray(vals))
+            s1.step()
+            step = s1.checkpoint(ckdir)
+            want_a = a.dump()
+            want_b = b.dump()
+        mesh_b = Mesh(np.array(jax.devices()).reshape(1, 8),
+                      ("data", "model"))
+        with core.use_session(TrustSession()) as s2, core.use_mesh(mesh_b):
+            a2 = DelegatedKVStore(mesh_b, N_KEYS, VW, capacity=R, name="a",
+                                  local_shortcut=False)
+            b2 = DelegatedKVStore(mesh_b, N_KEYS, VW, capacity=R, name="b",
+                                  local_shortcut=False)
+            got_step = s2.restore(ckdir)
+            assert got_step == step, (got_step, step)
+            assert np.array_equal(a2.dump(), want_a), "trust a state"
+            assert np.array_equal(b2.dump(), want_b), "trust b state"
+            got = np.asarray(a2.get(jnp.asarray(k2)))
+            assert np.array_equal(got, want_a[k2]), "post-restore get"
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+@check("drop_and_tear_do_not_commit_state")
+def _drop_tear():
+    """drop/tear fire AFTER dispatch but BEFORE the state commits: the
+    table is unchanged, the future unfulfilled, the queues restored — a
+    plain retry (fresh wave id) then serves correctly with no restore."""
+    import repro.core as core
+    from repro.core import (DelegatedKVStore, SequentialKVReference,
+                            TrustSession)
+    from repro.runtime import EngineFailureInjector, TrusteeFailure
+    mesh = mesh2x4()
+    rng = np.random.default_rng(71)
+    init = rng.integers(0, 8, (N_KEYS, VW)).astype(np.float32)
+    keys = rng.integers(0, N_KEYS, R).astype(np.int32)
+    vals = rng.integers(0, 8, (R, VW)).astype(np.float32)
+    ref = SequentialKVReference(N_KEYS, VW)
+    ref.prefill(init)
+    want = ref.add(keys, vals)
+    for kind in ("drop", "tear"):
+        with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+            store = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R,
+                                     name="kv", local_shortcut=False)
+            store.prefill(init)
+            sess.install_injector(EngineFailureInjector(
+                schedule={0: (kind, 2)}))
+            fut = store.add_then(jnp.asarray(keys), jnp.asarray(vals))
+            try:
+                sess.step()
+                raise AssertionError(f"{kind}: step did not raise")
+            except TrusteeFailure as e:
+                assert e.kind == kind and e.wave_id == 0
+            assert np.array_equal(store.dump(), init), \
+                f"{kind}: state committed despite the failure"
+            assert not fut.ready(), f"{kind}: future fulfilled"
+            assert store.trust._pending, f"{kind}: queue not restored"
+            sess.step()
+            assert fut.ready(), f"{kind}: retry did not serve"
+            got = np.asarray(fut.result()["value"])
+            assert np.array_equal(got, want), f"{kind}: retry response"
+            assert not np.array_equal(store.dump(), init), \
+                f"{kind}: retry did not commit"
+
+
+@check("checkpoint_requires_quiesce")
+def _quiesce_guard():
+    import repro.core as core
+    from repro.core import DelegatedKVStore, TrustSession
+    mesh = mesh2x4()
+    ckdir = tempfile.mkdtemp(prefix="quiesce_")
+    try:
+        with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+            store = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R,
+                                     name="kv", local_shortcut=False)
+            keys = np.zeros(R, np.int32)
+            vals = np.ones((R, VW), np.float32)
+            store.add_then(jnp.asarray(keys), jnp.asarray(vals))
+            try:
+                sess.checkpoint(ckdir)
+                raise AssertionError("checkpoint accepted pending work")
+            except RuntimeError as e:
+                assert "quiesced" in str(e) and "kv" in str(e)
+            sess.step()
+            sess.checkpoint(ckdir)   # quiesced now: succeeds
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+@check("restore_rejects_schema_mismatch")
+def _schema_guard():
+    import repro.core as core
+    from repro.core import DelegatedKVStore, TrustSession
+    mesh = mesh2x4()
+    ckdir = tempfile.mkdtemp(prefix="schema_")
+    try:
+        with core.use_session(TrustSession()) as s1, core.use_mesh(mesh):
+            DelegatedKVStore(mesh, N_KEYS, VW, capacity=R, name="kv",
+                             local_shortcut=False)
+            s1.checkpoint(ckdir)
+        with core.use_session(TrustSession()) as s2, core.use_mesh(mesh):
+            # different value width -> different schema fingerprint AND
+            # different state row shape
+            DelegatedKVStore(mesh, N_KEYS, VW + 1, capacity=R,
+                             name="kv", local_shortcut=False)
+            try:
+                s2.restore(ckdir)
+                raise AssertionError("restore accepted a mismatched schema")
+            except ValueError as e:
+                assert "fingerprint" in str(e) and "kv" in str(e)
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+@check("streaming_driver_quiesce_checkpoint_and_recover")
+def _streaming_chaos():
+    """StreamingDriver surface: checkpoint() quiesces before the snapshot;
+    a kill raised out of dispatch() recovers via driver.recover(); the
+    replayed stream's full acknowledged history matches the reference."""
+    import repro.core as core
+    from repro.core import (DelegatedKVStore, SequentialKVReference,
+                            TrustSession)
+    from repro.launch.streaming import StreamingDriver
+    from repro.runtime import EngineFailureInjector, TrusteeFailure
+    mesh = mesh2x4()
+    init, waves = gen_trace(80)
+    ckdir = tempfile.mkdtemp(prefix="stream_")
+    try:
+        with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+            store = DelegatedKVStore(mesh, N_KEYS, VW, capacity=R,
+                                     name="kv", local_shortcut=False)
+            store.prefill(init)
+            driver = StreamingDriver(sess, depth=1)
+            sess.install_injector(EngineFailureInjector(
+                schedule={9: ("kill", 5)}))
+            driver.checkpoint(ckdir)
+            snapshot_wave = 0
+            acked = {}
+            w = 0
+            while w < len(waves):
+                op, keys, vals, expect = waves[w]
+                k = jnp.asarray(keys)
+                if op == "get":
+                    fut = store.get_then(k)
+                elif op == "put":
+                    fut = store.put_then(k, jnp.asarray(vals))
+                elif op == "add":
+                    fut = store.add_then(k, jnp.asarray(vals))
+                else:
+                    fut = store.cas_then(k, jnp.asarray(expect),
+                                         jnp.asarray(vals))
+                try:
+                    driver.dispatch(outputs=fut, rows=R)
+                except TrusteeFailure as e:
+                    snap = driver.recover(e, ckdir)
+                    assert snap == e.last_snapshot_step
+                    assert driver.inflight == 0
+                    with sess.replaying():
+                        for rw in range(snapshot_wave, w):
+                            r2 = store_wave(store, sess, waves[rw])
+                            assert_identical(r2, acked[rw],
+                                             f"stream replay {rw}")
+                    continue
+                driver.drain()
+                r = fut.result() if op != "put" else None
+                resp = (("none", None) if op == "put" else
+                        ("cas", (np.asarray(r["flag"]),
+                                 np.asarray(r["value"]))) if op == "cas"
+                        else ("value", np.asarray(r["value"])))
+                acked[w] = resp
+                w += 1
+                if w % SNAP_EVERY == 0:
+                    driver.checkpoint(ckdir)
+                    snapshot_wave = w
+            ref = SequentialKVReference(N_KEYS, VW)
+            ref.prefill(init)
+            for i in range(len(waves)):
+                want = ref_wave(ref, waves[i], 8, shortcut=False)
+                assert_identical(acked[i], want, f"stream wave {i}")
+            assert np.array_equal(store.dump(), ref.dump())
+            assert sess.last_stats()["recovery"]["restores"] >= 1
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

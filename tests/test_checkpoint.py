@@ -1,0 +1,168 @@
+"""Checkpoint substrate: atomic publish, crc integrity, bfloat16, elastic
+restore, LATEST-pointer robustness, prune safety.
+
+The multi-device elastic restore of a live TrustSession (2x4 -> 1x8 mesh,
+and the 8 -> 7 trustee reshard) lives in the failover battery
+(tests/_failover_battery.py); these tests pin the host-level contract of
+``checkpoint/checkpoint.py`` itself.
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _tree():
+    return {"table": jnp.arange(24, dtype=jnp.float32).reshape(8, 3),
+            "nested": {"bf": jnp.asarray(
+                np.linspace(-3, 3, 16), jnp.bfloat16)}}
+
+
+# ---------------------------------------------------------------------------
+# atomic publish
+# ---------------------------------------------------------------------------
+
+def test_torn_tmp_never_restored(tmp_path):
+    """A crash mid-save leaves step_<N>.tmp; neither latest_step nor
+    restore may ever observe it as a valid checkpoint."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    torn = os.path.join(tmp_path, "step_00000002.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        f.write('{"step": 2')          # truncated mid-write
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    _, step, _ = ckpt.restore(str(tmp_path), t)
+    assert step == 1
+
+
+def test_save_overwrites_stale_tmp(tmp_path):
+    """A leftover .tmp from a crashed save of the SAME step must not block
+    (or leak into) the next successful save."""
+    t = _tree()
+    stale = os.path.join(tmp_path, "step_00000003.tmp")
+    os.makedirs(stale)
+    with open(os.path.join(stale, "garbage"), "w") as f:
+        f.write("x")
+    ckpt.save(str(tmp_path), 3, t)
+    assert not os.path.exists(stale)
+    out, step, _ = ckpt.restore(str(tmp_path), t, step=3)
+    np.testing.assert_array_equal(np.asarray(out["table"]),
+                                  np.asarray(t["table"]))
+
+
+# ---------------------------------------------------------------------------
+# integrity
+# ---------------------------------------------------------------------------
+
+def test_crc_corruption_detected(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 1, t)
+    npz = os.path.join(path, "arrays.npz")
+    data = {k: np.array(v) for k, v in np.load(npz).items()}
+    raw = data["table"]
+    raw.flat[5] += 1.0                 # single flipped value
+    np.savez(npz, **data)
+    with pytest.raises(IOError, match="corruption.*table"):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_bfloat16_round_trip_bit_exact(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    out, _, _ = ckpt.restore(str(tmp_path), t)
+    got = np.asarray(out["nested"]["bf"])
+    want = np.asarray(t["nested"]["bf"])
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(got.view(np.uint16), want.view(np.uint16))
+
+
+# ---------------------------------------------------------------------------
+# elastic restore
+# ---------------------------------------------------------------------------
+
+def test_elastic_restore_device_puts_against_given_shardings(tmp_path):
+    """Arrays save in logical (global) layout; restore lands them on the
+    CURRENT mesh via the shardings pytree — the mesh at save time (here: a
+    differently-named, differently-shaped virtual mesh) does not matter."""
+    save_mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b"))
+    t = {"table": jax.device_put(jnp.arange(12, dtype=jnp.float32)
+                                 .reshape(6, 2),
+                                 NamedSharding(save_mesh, P("a")))}
+    ckpt.save(str(tmp_path), 7, t)
+    restore_mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                        ("x", "y", "z"))
+    sh = {"table": NamedSharding(restore_mesh, P("y"))}
+    out, step, _ = ckpt.restore(str(tmp_path), t, shardings=sh)
+    assert step == 7
+    assert out["table"].sharding == sh["table"]
+    np.testing.assert_array_equal(np.asarray(out["table"]),
+                                  np.asarray(t["table"]))
+
+
+# ---------------------------------------------------------------------------
+# LATEST pointer robustness (failover satellites)
+# ---------------------------------------------------------------------------
+
+def test_restore_empty_dir_raises_filenotfound_naming_directory(tmp_path):
+    target = str(tmp_path / "nothing_here")
+    with pytest.raises(FileNotFoundError, match="nothing_here"):
+        ckpt.restore(target, _tree())
+
+
+def test_latest_step_tolerates_dangling_pointer(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3):
+        ckpt.save(str(tmp_path), s, t)
+    # simulate a crash after step_3 was pruned but before LATEST moved
+    shutil.rmtree(os.path.join(tmp_path, "step_00000003"))
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    _, step, _ = ckpt.restore(str(tmp_path), t)
+    assert step == 2
+
+
+def test_latest_step_tolerates_missing_pointer(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 4, t)
+    os.remove(os.path.join(tmp_path, "LATEST"))
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_latest_step_empty_dir_is_none(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    assert ckpt.latest_step(str(tmp_path / "missing")) is None
+
+
+# ---------------------------------------------------------------------------
+# prune safety
+# ---------------------------------------------------------------------------
+
+def test_prune_old_never_deletes_latest_target(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    # LATEST pinned on an OLD step (e.g. the newer saves came from another
+    # writer whose LATEST update lost the race)
+    with open(os.path.join(tmp_path, "LATEST"), "w") as f:
+        f.write("step_00000002")
+    ckpt.prune_old(str(tmp_path), keep=1)
+    left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert left == ["step_00000002", "step_00000005"]
+    # the pinned checkpoint still restores
+    _, step, _ = ckpt.restore(str(tmp_path), t)
+    assert step == 2
+
+
+def test_prune_keep_zero_still_pins_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2):
+        ckpt.save(str(tmp_path), s, t)
+    ckpt.prune_old(str(tmp_path), keep=0)
+    left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert left == ["step_00000002"]

@@ -1,0 +1,167 @@
+"""Trustee failover tests: chaos-injected kills, checkpoint/restore of
+entrusted state, re-entrust onto survivors (DESIGN.md §14).
+
+Two layers:
+
+* in-process single-device checks of the engine's recovery surface
+  (injector wiring, wave ids, checkpoint round-trip, recovery stats)
+* the 8-device subprocess chaos battery (_failover_battery.py): a trustee
+  shard killed mid-≥1k-op mixed GET/PUT/ADD/CAS trace in shared, shortcut
+  and dedicated modes, state re-entrusted onto the survivors, and the FULL
+  acknowledged-op history proven bit-identical to the sequential
+  reference; plus multi-trust elastic restore, drop/tear semantics, the
+  quiesce precondition, schema-fingerprint validation, and the
+  StreamingDriver recover path.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+_BATTERY = os.path.join(os.path.dirname(__file__), "_failover_battery.py")
+
+
+@pytest.fixture(scope="session")
+def failover_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, _BATTERY], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+CHECKS = [
+    "chaos_shared_kill_mid_trace",
+    "chaos_shortcut_kill_at_snapshot",
+    "chaos_dedicated_kill_mid_trace",
+    "chaos_kill_far_from_snapshot_replays_several_waves",
+    "multi_trust_checkpoint_restores_across_mesh_shapes",
+    "drop_and_tear_do_not_commit_state",
+    "checkpoint_requires_quiesce",
+    "restore_rejects_schema_mismatch",
+    "streaming_driver_quiesce_checkpoint_and_recover",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_failover_multidevice(failover_battery, name):
+    res = failover_battery[name]
+    assert res["ok"], f"{name}: {res.get('error')}\n{res.get('trace', '')}"
+
+
+# ---------------------------------------------------------------------------
+# In-process single-device checks
+# ---------------------------------------------------------------------------
+
+def _store_and_session(tmp_path=None, **kw):
+    import repro.core as core
+    from repro.core import DelegatedKVStore, TrustSession
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sess = TrustSession()
+    st = DelegatedKVStore(mesh, 13, 2, capacity=16, name="kv",
+                          session=sess, **kw)
+    return st, sess
+
+
+def test_checkpoint_restore_round_trip(tmp_path):
+    st, sess = _store_and_session()
+    rng = np.random.default_rng(0)
+    init = rng.integers(0, 8, (13, 2)).astype(np.float32)
+    st.prefill(init)
+    keys = rng.integers(0, 13, 16).astype(np.int32)
+    vals = rng.integers(0, 8, (16, 2)).astype(np.float32)
+    st.add_then(jnp.asarray(keys), jnp.asarray(vals))
+    sess.step()
+    want = st.dump()
+    step = sess.checkpoint(str(tmp_path))
+    assert step == sess.wave_counter == 1
+    # mutate past the snapshot, then restore back to it
+    st.add_then(jnp.asarray(keys), jnp.asarray(vals))
+    sess.step()
+    assert not np.array_equal(st.dump(), want)
+    got_step = sess.restore(str(tmp_path))
+    assert got_step == step
+    assert np.array_equal(st.dump(), want)
+    rec = sess.last_stats()["recovery"]
+    assert rec["restores"] == 1 and rec["recovery_ms"] > 0
+
+
+def test_restore_drops_pending_submissions(tmp_path):
+    st, sess = _store_and_session()
+    st.prefill(np.ones((13, 2), np.float32))
+    sess.checkpoint(str(tmp_path))
+    fut = st.add_then(jnp.zeros(4, jnp.int32), jnp.ones((4, 2), jnp.float32))
+    sess.restore(str(tmp_path))
+    assert not st.trust._pending
+    sess.step()          # nothing pending: a no-op, the future stays open
+    assert not fut.ready()
+
+
+def test_kill_failure_carries_context(tmp_path):
+    from repro.runtime import EngineFailureInjector, TrusteeFailure
+    st, sess = _store_and_session()
+    st.prefill(np.zeros((13, 2), np.float32))
+    snap = sess.checkpoint(str(tmp_path))
+    sess.install_injector(EngineFailureInjector(schedule={0: ("kill", 0)}))
+    st.add_then(jnp.zeros(4, jnp.int32), jnp.ones((4, 2), jnp.float32))
+    with pytest.raises(TrusteeFailure) as ei:
+        sess.step()
+    e = ei.value
+    assert e.kind == "kill" and e.shard == 0 and e.wave_id == 0
+    assert e.last_snapshot_step == snap
+    assert e.trusts == ("kv",)
+    assert 0 in sess.dead_shards
+    # the queue survived the pre-dispatch kill: recovery can replay it
+    assert st.trust._pending
+
+
+def test_injector_fires_once_per_entry():
+    from repro.runtime import EngineFailureInjector
+    inj = EngineFailureInjector(schedule={3: ("kill", 1), 5: ("tear", 2)})
+    assert inj.before_dispatch(0) is None
+    assert inj.before_dispatch(3) == ("kill", 1)
+    assert inj.before_dispatch(3) is None          # fired once
+    assert inj.after_dispatch(3) is None           # kill is pre-dispatch
+    assert inj.after_dispatch(5) == ("tear", 2)
+    assert inj.after_dispatch(5) is None
+    assert inj.before_dispatch(5) is None          # tear is post-dispatch
+
+
+def test_wave_counter_increments_per_nonempty_step():
+    st, sess = _store_and_session()
+    st.prefill(np.zeros((13, 2), np.float32))
+    assert sess.wave_counter == 0
+    sess.step()                                    # nothing pending
+    assert sess.wave_counter == 0
+    st.add_then(jnp.zeros(4, jnp.int32), jnp.ones((4, 2), jnp.float32))
+    sess.step()
+    assert sess.wave_counter == 1
+
+
+def test_last_stats_without_recovery_has_no_recovery_entry():
+    st, sess = _store_and_session()
+    st.prefill(np.zeros((13, 2), np.float32))
+    st.add_then(jnp.zeros(4, jnp.int32), jnp.ones((4, 2), jnp.float32))
+    sess.step()
+    assert "recovery" not in sess.last_stats()
+
+
+def test_schema_fingerprint_stability():
+    """Same contract -> same fingerprint; a field-layout change -> new.
+    The trustee count is deliberately NOT part of the fingerprint —
+    elastic restore re-shards the same contract across trustee counts."""
+    from repro.core import make_kv_schema
+    a = make_kv_schema(4, 2).fingerprint()
+    assert a == make_kv_schema(4, 2).fingerprint()
+    assert a == make_kv_schema(8, 2).fingerprint()     # T-independent
+    assert a != make_kv_schema(4, 3).fingerprint()     # value width

@@ -93,6 +93,27 @@ def test_trainloop_resumes_after_injected_failure(tmp_path):
     assert calls.count(10) == 2 and calls.count(11) == 2
 
 
+def test_trainloop_restart_without_checkpoint_resets_state(tmp_path):
+    """A failure BEFORE the first checkpoint restarts from the INITIAL
+    state — the partially-advanced ``self.state`` must not leak into the
+    replay (regression: the loop used to reset only the step counter)."""
+    calls = []
+
+    def step_fn(state, step):
+        calls.append(step)
+        return {"x": state["x"] + 1}, {"loss": float(step)}
+
+    loop = TrainLoop(TrainLoopConfig(str(tmp_path), ckpt_every=5),
+                     step_fn, {"x": jnp.zeros(())},
+                     injector=FailureInjector(at_steps=(3,)))
+    summary = loop.run(8)
+    assert summary["restarts"] == 1
+    # 8 effective steps: had the advanced state leaked, x would be 11
+    assert float(loop.state["x"]) == 8
+    # steps 0..2 ran twice (replayed from scratch), 3..7 once
+    assert [calls.count(s) for s in range(8)] == [2, 2, 2, 1, 1, 1, 1, 1]
+
+
 def test_trainloop_gives_up_after_max_retries(tmp_path):
     def step_fn(state, step):
         raise SimulatedFailure("always")
