@@ -78,9 +78,12 @@ def main(argv=None) -> int:
                          "fraction vs the checked-in baseline (per-row "
                          "median over all prior entries)")
     ap.add_argument("--metric", default="ops_per_s",
-                    choices=["ops_per_s", "p50_us", "p99_us"],
+                    choices=["ops_per_s", "p50_us", "p99_us",
+                             "tokens_per_s", "pt_ops_per_s"],
                     help="gated row field; the *_us latency metrics are "
-                         "lower-is-better (regression = increase)")
+                         "lower-is-better (regression = increase); "
+                         "tokens_per_s/pt_ops_per_s are the paged-decode "
+                         "throughput pair (higher is better)")
     ap.add_argument("--require-baseline", type=int, default=0,
                     help="fail (instead of trivially passing) when the "
                          "trajectory holds fewer than N entries — set for "

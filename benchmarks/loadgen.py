@@ -60,6 +60,14 @@ trailing partial wave); ``dup_factor`` = mean per-wave requests per
 distinct key — the combining headroom of the offered trace (DESIGN.md
 §13).
 
+``--users N`` splits the offered load across N tenants (per-user Zipf:
+user u's share ∝ 1/(u+1)^1.1, so user 0 is the hot tenant), threads the
+per-wave ``{user: rows}`` breakdown through the driver's admission
+ledger — the pipelined mode runs with ``per_user_rows`` buckets, so the
+hot user throttles against their OWN budget — and reports per-user p99
+rows (``experiment=<arrival>_users``, top users by traffic) next to the
+aggregate ones.
+
 ``--chaos N`` adds an ``experiment=chaos`` open-loop lane per mode: a
 trustee shard is killed N waves into the timed run, the store recovers
 onto the survivors from the last quiesce-point snapshot (every
@@ -114,6 +122,11 @@ def main(argv=None):
                          "drifts over the ~tens of seconds one mode takes, "
                          "and back-to-back single runs can flip the "
                          "within-run ratio the CI gate watches")
+    ap.add_argument("--users", type=int, default=0,
+                    help="split traffic across this many tenants (Zipf "
+                         "shares), admit through per-user buckets in the "
+                         "pipelined mode, and report per-user p99 rows "
+                         "(0 = off)")
     ap.add_argument("--chaos", type=int, default=0,
                     help="kill a trustee shard this many waves into each "
                          "run and recover onto the survivors (0 = off); "
@@ -146,10 +159,11 @@ def main(argv=None):
         def __init__(self, ses):
             self.ses = ses
 
-        def admit(self, rows):
+        def admit(self, rows, users=None):
             pass
 
-        def dispatch(self, outputs=None, rows=0, on_consume=None):
+        def dispatch(self, outputs=None, rows=0, on_consume=None,
+                     users=None):
             h = WaveHandle(wave_id=0, outputs=outputs, rows=rows,
                            dispatched_at=time.perf_counter())
             self.ses.step()
@@ -185,6 +199,23 @@ def main(argv=None):
             waves.append((op, keys, vals))
         return waves
 
+    def gen_users(load, n_waves, seed):
+        """Per-wave tenant ids, Zipf-shared across ``--users`` tenants
+        (identical across driver modes, like the key trace)."""
+        if not args.users:
+            return None
+        rng = np.random.default_rng(seed + 1)
+        p = 1.0 / np.arange(1, args.users + 1) ** 1.1
+        p /= p.sum()
+        return [rng.choice(args.users, size=load, p=p)
+                for _ in range(n_waves)]
+
+    def wave_users(uw):
+        if uw is None:
+            return None
+        ids, counts = np.unique(uw, return_counts=True)
+        return {int(u): int(c) for u, c in zip(ids, counts)}
+
     def trace_dup(waves):
         """Mean per-wave requests per distinct key (each wave is one op,
         so distinct keys = distinct (op, key) pairs)."""
@@ -203,9 +234,14 @@ def main(argv=None):
         st.prefill(np.zeros((args.objects, 1), np.float32))
         if mode == "lockstep":
             return st, LockstepLoop(ses)
+        # per-user buckets: a single wave may be all one tenant (<= load
+        # rows), so the bucket must admit at least one full wave; depth
+        # waves of one tenant then exhaust their budget and throttle
+        per_user = load * depth[mode] if args.users else None
         drv = StreamingDriver(
             ses, depth=depth[mode],
-            admission=AdmissionControl(load * (depth[mode] + 1)))
+            admission=AdmissionControl(load * (depth[mode] + 1),
+                                       per_user_rows=per_user))
         return st, drv
 
     def pack(st, op, keys, vals):
@@ -222,22 +258,28 @@ def main(argv=None):
                 drv.dispatch(outputs=pack(st, op, keys, vals), rows=load)
         drv.drain()
 
-    def run_closed(load, mode, waves):
+    def run_closed(load, mode, waves, uwaves=None):
         st, drv = build(load, mode)
         warm(st, drv, load)
         lat = []                           # (per-request latency s, count)
-
-        def consumed(h):
-            lat.append((h.consumed_at - h.dispatched_at, h.rows))
+        ulat = {}                          # user -> [(latency s, count)]
 
         t0 = time.perf_counter()
-        for op, keys, vals in waves:
-            drv.admit(load)
+        for w, (op, keys, vals) in enumerate(waves):
+            users = wave_users(uwaves[w]) if uwaves is not None else None
+
+            def consumed(h, users=users):
+                wl = h.consumed_at - h.dispatched_at
+                lat.append((wl, h.rows))
+                for u, c in (users or {}).items():
+                    ulat.setdefault(u, []).append((wl, c))
+
+            drv.admit(load, users)
             drv.dispatch(outputs=pack(st, op, keys, vals), rows=load,
-                         on_consume=consumed)
+                         on_consume=consumed, users=users)
         drv.drain()
         wall = time.perf_counter() - t0
-        return wall, lat, len(waves) * load, len(waves) * load
+        return wall, lat, len(waves) * load, len(waves) * load, ulat
 
     def gen_arrivals(n, rate, burst, seed):
         """Arrival offsets (s from run start) at ``rate`` req/s; burst
@@ -249,12 +291,13 @@ def main(argv=None):
             gaps = gaps * np.where(phase == 0, 0.25, 4.0)
         return np.cumsum(gaps)
 
-    def run_open(load, mode, waves, rate, burst):
+    def run_open(load, mode, waves, rate, burst, uwaves=None):
         st, drv = build(load, mode)
         warm(st, drv, load)
         n = len(waves) * load              # whole waves only
         arr = gen_arrivals(n, rate, burst, seed=99)
         lat = []
+        ulat = {}
 
         t0 = time.perf_counter()
         for w, (op, keys, vals) in enumerate(waves):
@@ -262,18 +305,23 @@ def main(argv=None):
             wait = last - (time.perf_counter() - t0)
             if wait > 0:
                 time.sleep(wait)
-            drv.admit(load)
+            users = wave_users(uwaves[w]) if uwaves is not None else None
+            drv.admit(load, users)
             wave_arr = arr[w * load:(w + 1) * load]
+            wave_uw = uwaves[w] if uwaves is not None else None
 
-            def consumed(h, wave_arr=wave_arr):
+            def consumed(h, wave_arr=wave_arr, wave_uw=wave_uw):
                 done = h.consumed_at - t0
                 lat.extend((done - a, 1) for a in wave_arr)
+                if wave_uw is not None:
+                    for a, u in zip(wave_arr, wave_uw):
+                        ulat.setdefault(int(u), []).append((done - a, 1))
 
             drv.dispatch(outputs=pack(st, op, keys, vals), rows=load,
-                         on_consume=consumed)
+                         on_consume=consumed, users=users)
         drv.drain()
         wall = time.perf_counter() - t0
-        return wall, lat, n, args.reqs
+        return wall, lat, n, args.reqs, ulat
 
     def run_chaos_open(load, mode, waves, rate):
         """Open-loop run with a mid-trace trustee kill: snapshot every
@@ -357,22 +405,41 @@ def main(argv=None):
                 round(served / offered, 3), dup)
         return served / wall
 
+    def report_users(experiment, setting, mode, ulat, served, dup):
+        """Per-tenant latency rows (top tenants by traffic).  us_per_req
+        here is the tenant's MEAN latency — per-tenant wall share is not
+        well-defined when tenants interleave inside one wave."""
+        by_rows = sorted(ulat.items(),
+                         key=lambda kv: -sum(c for _l, c in kv[1]))
+        for u, entries in by_rows[:8]:
+            per_req = np.repeat([l for l, _c in entries],
+                                [c for _l, c in entries])
+            csv.add(f"{experiment}_users", f"{setting}/u{u}", mode,
+                    round(float(np.mean(per_req)) * 1e6, 2),
+                    round(float(np.percentile(per_req, 50)) * 1e6, 1),
+                    round(float(np.percentile(per_req, 99)) * 1e6, 1),
+                    round(len(per_req) / served, 3), dup)
+
     for load in [int(x) for x in args.loads.split(",")]:
         waves = gen_trace(load, seed=7)
+        uwaves = gen_users(load, len(waves), seed=7)
         dup = trace_dup(waves)
         closed_tput = {}
         if "closed" in arrivals:
             best = {}
             for _rep in range(max(1, args.repeats)):
                 for mode in modes:
-                    run = run_closed(load, mode, waves)
+                    run = run_closed(load, mode, waves, uwaves)
                     if mode not in best or run[0] < best[mode][0]:
                         best[mode] = run
             for mode in modes:
-                wall, lat, served, offered = best[mode]
+                wall, lat, served, offered, ulat = best[mode]
                 closed_tput[mode] = report(
                     "closed", f"{args.dist}/load{load}", mode,
                     wall, lat, served, offered, dup)
+                if ulat:
+                    report_users("closed", f"{args.dist}/load{load}", mode,
+                                 ulat, served, dup)
         for arrival in arrivals:
             if arrival == "closed":
                 continue
@@ -383,13 +450,16 @@ def main(argv=None):
             for _rep in range(max(1, args.repeats)):
                 for mode in modes:
                     run = run_open(load, mode, waves, rate,
-                                   burst=(arrival == "burst"))
+                                   burst=(arrival == "burst"), uwaves=uwaves)
                     if mode not in best or run[0] < best[mode][0]:
                         best[mode] = run
             for mode in modes:
-                wall, lat, served, offered = best[mode]
+                wall, lat, served, offered, ulat = best[mode]
                 report(arrival, f"{args.dist}/load{load}_{arrival}", mode,
                        wall, lat, served, offered, dup)
+                if ulat:
+                    report_users(arrival, f"{args.dist}/load{load}_{arrival}",
+                                 mode, ulat, served, dup)
         if args.chaos:
             if len(jax.devices()) < 2:
                 raise SystemExit("--chaos needs >= 2 devices (set "

@@ -1,6 +1,11 @@
-"""Render EXPERIMENTS.md sections from dry-run artifacts.
+"""Render EXPERIMENTS.md sections from dry-run artifacts, and markdown
+tables from the checked-in BENCH_*.json perf trajectories.
 
-Replaces the <!-- DRYRUN_SUMMARY --> and <!-- ROOFLINE_TABLE --> markers.
+Replaces the <!-- DRYRUN_SUMMARY --> and <!-- ROOFLINE_TABLE --> markers
+(skipped when EXPERIMENTS.md is absent).  ``--bench <tag>`` prints the
+newest entry of ``benchmarks/artifacts/BENCH_<tag>.json`` as a table;
+rows carrying the paged-decode throughput pair render their native
+``tokens/s`` + ``pt ops/s`` columns instead of being dropped as unknown.
 Perf-log and paper-claims sections are maintained by hand (they narrate
 hypothesis -> change -> measure cycles).
 """
@@ -10,8 +15,10 @@ import glob
 import json
 import os
 
-from benchmarks.common import V5E
-from benchmarks.roofline import fraction, load_cells
+from benchmarks.common import V5E, artifact_path
+# fraction/load_cells live in the shared launch-layer implementation
+# (benchmarks.roofline is a CLI wrapper and re-exports neither)
+from repro.launch.rooflines import fraction, load_cells
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
@@ -90,7 +97,54 @@ def bottleneck_notes():
     return "\n".join(lines)
 
 
-def main():
+def bench_table(tag: str) -> str:
+    """Markdown table of the NEWEST entry in BENCH_<tag>.json.
+
+    Throughput-first rows (the paged-decode lanes) carry ``tokens_per_s``
+    and ``pt_ops_per_s``; rows without them show the generic ``ops_per_s``.
+    Unknown metric columns render, they are never silently dropped."""
+    path = artifact_path(f"BENCH_{tag}.json")
+    with open(path) as f:
+        data = json.load(f)
+    entries = data.get("entries", [])
+    if not entries:
+        return f"(BENCH_{tag}.json holds no entries)"
+    entry = entries[-1]
+    rows = entry.get("rows", [])
+    paged = any("tokens_per_s" in r for r in rows)
+    hdr = "| name | impl | " + ("tokens/s | pt ops/s | " if paged
+                                else "ops/s | ") + "p99 us |"
+    out = [f"**{tag}** @ {entry.get('timestamp', '?')} "
+           f"({len(entries)} entries)", "", hdr,
+           "|" + "---|" * (hdr.count("|") - 1)]
+    for r in rows:
+        p99 = r.get("p99_us", "")
+        if paged:
+            out.append(f"| {r.get('name', '')} | {r.get('pack_impl', '')} | "
+                       f"{r.get('tokens_per_s', '')} | "
+                       f"{r.get('pt_ops_per_s', '')} | {p99} |")
+        else:
+            out.append(f"| {r.get('name', '')} | {r.get('pack_impl', '')} | "
+                       f"{r.get('ops_per_s', '')} | {p99} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="",
+                    help="comma list of BENCH_<tag>.json tags to print as "
+                         "markdown tables")
+    args = ap.parse_args(argv)
+    if args.bench:
+        for tag in args.bench.split(","):
+            print(bench_table(tag.strip()))
+            print()
+        return
+    if not os.path.exists(EXP):
+        print(f"EXPERIMENTS.md not found at {os.path.abspath(EXP)} — "
+              f"nothing to render (use --bench <tag> for the perf tables)")
+        return
     with open(EXP) as f:
         text = f.read()
     text = _replace(text, "DRYRUN_SUMMARY", dryrun_summary())

@@ -45,6 +45,9 @@ REDUCED = {
     "recovery": ("benchmarks.recovery",
                  ["--objects", "2048", "--load", "256", "--waves", "16",
                   "--iters", "2"]),
+    "paged_decode": ("benchmarks.paged_decode",
+                     ["--requests", "32", "--max-seqs", "32",
+                      "--repeats", "1"]),
 }
 
 FULL = {
@@ -72,6 +75,9 @@ FULL = {
                    "--arrivals", "closed,open,burst"]),
     "recovery": ("benchmarks.recovery",
                  ["--objects", "65536", "--load", "1024", "--waves", "32"]),
+    "paged_decode": ("benchmarks.paged_decode",
+                     ["--requests", "96", "--pages", "256",
+                      "--max-seqs", "64", "--repeats", "2"]),
 }
 
 
@@ -110,6 +116,15 @@ def summarize(name: str, stdout: str):
                         f"/{row['pack_impl']}",
                         float(row["us_per_req"]),
                         f"p50={row['p50_us']}us p99={row['p99_us']}us", row))
+        elif "tokens_per_s" in row:
+            # paged decode: throughput-first rows; us_per_call derives as
+            # 1/tokens_per_s so the ops/s trajectory stays comparable
+            tps = float(row["tokens_per_s"])
+            out.append((f"{name}:{row['experiment']}/{row['setting']}"
+                        f"/{row['pack_impl']}",
+                        round(1e6 / tps, 3) if tps > 0 else float("inf"),
+                        f"pt_ops={row['pt_ops_per_s']}/s "
+                        f"p99={row['p99_us']}us", row))
         elif "us_per_round" in row:
             key = f"{name}:{row['experiment']}/{row['setting']}"
             if row.get("pack_impl"):
@@ -157,9 +172,10 @@ def write_bench_json(tag: str, args, summary) -> str:
                      "experiment": fields.get("experiment", ""),
                      "setting": fields.get("setting", "")})
         # streaming rows carry per-request latency percentiles so the
-        # trajectory can gate tails (check_bench --metric p99_us), not
-        # just throughput
-        for k in ("p50_us", "p99_us"):
+        # trajectory can gate tails (check_bench --metric p99_us), not just
+        # throughput; paged-decode rows carry their native throughput pair
+        # (check_bench --metric tokens_per_s)
+        for k in ("p50_us", "p99_us", "tokens_per_s", "pt_ops_per_s"):
             if fields.get(k):
                 rows[-1][k] = float(fields[k])
     entry = {"timestamp": datetime.datetime.now(datetime.timezone.utc)

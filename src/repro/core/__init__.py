@@ -8,11 +8,13 @@
 # engine.py    DelegationEngine / TrustSession — one multiplexed round for
 #              all Trusts + the adaptive capacity planner (DESIGN.md §8)
 # kvstore.py   DelegatedKVStore + make_kv_schema (paper §6.3)
+# pagetable.py DelegatedPageTable — Trust-owned paged KV-cache page table
+#              for continuous-batching decode (DESIGN.md §15)
 # lockstore.py lock-analog baselines (Fig. 6 competitors)
 # nested.py    launch()/nested delegation (chained channel rounds)
 # routing.py   key -> trustee routers + workload generators
 # meshctx.py   current-mesh + current-session threading for shard_map islands
-from .opspec import Field, OpSpec, SchemaError, TrustSchema
+from .opspec import Field, ListField, OpSpec, SchemaError, TrustSchema
 from .channel import (ChannelConfig, ChannelInfo, DelegatedOp,
                       DelegationFuture, Grouping, Packed, Received,
                       check_response_structs, delegate, delegate_async,
@@ -23,6 +25,9 @@ from .engine import (CapacityPlanner, DelegationEngine, TrustSession,
 from .trust import Trust, TrusteeGroup, TrustFuture, local_trustees
 from .kvstore import (DelegatedKVStore, kv_reshard, make_kv_ops,
                       make_kv_schema)
+from .pagetable import (DelegatedPageTable, SequentialPageTable,
+                        initial_pagetable_state, make_pagetable_schema,
+                        pagetable_reshard)
 from .lockstore import (AtomicAddStore, FetchRMWStore, SequentialKVReference,
                         conflict_ranks)
 from .meshctx import (constrain, current_mesh, current_session,
@@ -32,7 +37,9 @@ from .routing import partition_clients_trustees, trustee_device_slot
 from .nested import launch_serve
 
 __all__ = [
-    "Field", "OpSpec", "SchemaError", "TrustSchema",
+    "Field", "ListField", "OpSpec", "SchemaError", "TrustSchema",
+    "DelegatedPageTable", "SequentialPageTable", "initial_pagetable_state",
+    "make_pagetable_schema", "pagetable_reshard",
     "ChannelConfig", "ChannelInfo", "DelegatedOp", "DelegationFuture",
     "Grouping", "Packed", "Received", "check_response_structs",
     "delegate", "delegate_async", "delegate_drain", "make_grouping",

@@ -22,6 +22,7 @@ from .delegation_pack import delegation_pack as _pack_pallas
 from .delegation_serve import delegation_serve as _serve_pallas
 from .flash_attention import flash_attention as _fa_pallas
 from .grouped_matmul import grouped_matmul as _gmm_pallas
+from .paged_attention import paged_attention as _pa_pallas
 from .selective_scan import selective_scan as _scan_pallas
 
 
@@ -124,6 +125,20 @@ def flash_attention(q, k, v, q_offset=None, causal: bool = True,
                                    q_offset=off)
     return _fa_pallas(q, k, v, q_offset, causal=causal, scale=scale,
                       bq=bq, bk=bk, interpret=interpret)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths,
+                    scale: Optional[float] = None, impl: str = "ref",
+                    interpret: bool = True):
+    """Block-sparse decode attention over a paged KV pool (the layout the
+    delegated page table serves).  q: (B, Hq, D); k_pages/v_pages:
+    (P, Hkv, PS, D); page_table: (B, MP) global page ids (-1 pad);
+    lengths: (B,) -> (B, Hq, D)."""
+    if impl == "ref":
+        return ref.paged_attention(q, k_pages, v_pages, page_table, lengths,
+                                   scale=scale)
+    return _pa_pallas(q, k_pages, v_pages, page_table, lengths,
+                      scale=scale, interpret=interpret)
 
 
 def selective_scan(x, dt, a, b, c, d, h0=None, impl: str = "ref",

@@ -1,0 +1,119 @@
+"""Paged decode attention (forward) Pallas kernel.
+
+The block-sparse sibling of ``flash_attention`` for continuous-batching
+decode: K/V live in a shared pool of fixed-size pages ((P, Hkv, PS, D)),
+and each sequence owns a CHAIN of pages named by a page table
+((B, MP) global page ids, -1 padded) — the layout the delegated page
+table (core/pagetable.py) serves.  One query token per sequence.
+
+The page table rides ``PrefetchScalarGridSpec``: page ids are scalar-
+prefetched, so the K/V BlockSpec index maps read them BEFORE the kernel
+body runs and each grid step DMAs exactly the one page it attends over —
+the canonical paged-gather mechanism (no gathered (B, MP*PS, D) copy
+ever exists in HBM).  Softmax runs blockwise per page with running
+(m, l) statistics in VMEM scratch; chain tails (-1 page ids / positions
+past the sequence length) are masked, and fully-past-the-end pages are
+skipped via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale: float, hq: int,
+               ps: int, mp: int):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    b = bh // hq
+    seq_len = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip pages entirely past the sequence end (chain tail: the index
+    # map clamped their -1 ids to page 0, but no position is live there)
+    @pl.when(j * ps < seq_len)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)            # (1, D)
+        k = k_ref[0].astype(jnp.float32)              # (PS, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(kpos < seq_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == mp - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, D); k_pages/v_pages: (P, Hkv, PS, D);
+    page_table: (B, MP) global page ids (-1 pad); lengths: (B,) with
+    lengths[b] >= 1 -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    p, hkv, ps, _ = k_pages.shape
+    mp = page_table.shape[1]
+    rep = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+
+    qr = q.reshape(b * hq, d)
+    kr = k_pages.reshape(p * hkv, ps, d)
+    vr = v_pages.reshape(p * hkv, ps, d)
+    pt = jnp.asarray(page_table, jnp.int32).reshape(b * mp)
+    lens = jnp.asarray(lengths, jnp.int32)
+
+    def kv_index(bh, j, pt_ref, len_ref):
+        # the scalar-prefetched page table picks the page; -1 chain pads
+        # clamp to page 0 (their positions are masked / skipped anyway)
+        page = jnp.maximum(pt_ref[(bh // hq) * mp + j], 0)
+        kvh = (bh % hq) // rep
+        return (page * hkv + kvh, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hq, mp),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bh, j, pt_ref, len_ref: (bh, 0)),
+            pl.BlockSpec((1, ps, d), kv_index),
+            pl.BlockSpec((1, ps, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, d),
+                               lambda bh, j, pt_ref, len_ref: (bh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_pa_kernel, scale=scale, hq=hq, ps=ps, mp=mp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, d), q.dtype),
+        interpret=interpret,
+    )(pt, lens, qr, kr, vr)
+    return out.reshape(b, hq, d)

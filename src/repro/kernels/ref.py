@@ -120,6 +120,35 @@ def flash_attention_stats(q, k, v, causal=True, scale=None, q_offset=0):
     return o, m, l
 
 
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Block-sparse decode attention over a paged KV pool (oracle).
+
+    q: (B, Hq, D) one query token per sequence; k_pages/v_pages:
+    (P, Hkv, PS, D) shared page pool; page_table: (B, MP) global page
+    ids, -1 padded (the delegated page table's ``lookup`` chains);
+    lengths: (B,) live positions per sequence (>= 1) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    p, hkv, ps, _ = k_pages.shape
+    mp = page_table.shape[1]
+    rep = hq // hkv
+    safe = jnp.clip(page_table, 0, p - 1)
+    k = jnp.moveaxis(k_pages[safe], 2, 1).reshape(b, hkv, mp * ps, d)
+    v = jnp.moveaxis(v_pages[safe], 2, 1).reshape(b, hkv, mp * ps, d)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(mp * ps)
+    s = jnp.where(pos[None, None, :] < lengths[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def merge_attention_stats(os, ms, ls):
     """Merge per-shard (o, m, l) partials along a leading shard axis."""
     m = jnp.max(ms, axis=0)                            # (B, H, Sq)

@@ -68,6 +68,7 @@ class WaveHandle:
     on_consume: Optional[Callable[["WaveHandle"], None]] = None
     dispatched_at: float = 0.0
     consumed_at: float = -1.0
+    users: Optional[Dict[Any, int]] = None   # per-user row breakdown
 
     @property
     def wave_latency_s(self) -> float:
@@ -82,28 +83,60 @@ class AdmissionControl:
     wave returns its rows.  With ``depth``-bounded pipelining this is the
     knob that trades throughput (deeper backlog keeps the trustees busy)
     against tail latency (every admitted row waits behind the rows ahead
-    of it) — the §7 serving trade-off the streaming benchmark reports."""
+    of it) — the §7 serving trade-off the streaming benchmark reports.
 
-    def __init__(self, max_inflight_rows: int):
+    ``per_user_rows`` adds OPTIONAL per-user token buckets under the
+    global one: a wave carrying a ``users`` breakdown ({user_id: rows})
+    is admitted only if the global bucket AND every named user's bucket
+    have room — one hot user saturates their own budget, not the
+    service (the multi-tenant fairness knob of ROADMAP item 1).  The
+    check is atomic: a wave refused on any bucket consumes nothing."""
+
+    def __init__(self, max_inflight_rows: int,
+                 per_user_rows: Optional[int] = None):
         if max_inflight_rows <= 0:
             raise ValueError(
                 f"max_inflight_rows must be positive, got {max_inflight_rows}")
+        if per_user_rows is not None and per_user_rows <= 0:
+            raise ValueError(
+                f"per_user_rows must be positive, got {per_user_rows}")
         self.max_inflight_rows = max_inflight_rows
+        self.per_user_rows = per_user_rows
         self.inflight_rows = 0
         self.admitted = 0
         self.refused = 0
+        self.user_inflight: Dict[Any, int] = {}
+        self.user_refused: Dict[Any, int] = {}
 
-    def try_admit(self, rows: int) -> bool:
+    def try_admit(self, rows: int,
+                  users: Optional[Dict[Any, int]] = None) -> bool:
         if self.inflight_rows + rows > self.max_inflight_rows:
             self.refused += 1
             return False
+        if self.per_user_rows is not None and users:
+            over = [u for u, r in users.items()
+                    if self.user_inflight.get(u, 0) + r > self.per_user_rows]
+            if over:
+                self.refused += 1
+                for u in over:
+                    self.user_refused[u] = self.user_refused.get(u, 0) + 1
+                return False
         self.inflight_rows += rows
         self.admitted += rows
+        if users:
+            for u, r in users.items():
+                self.user_inflight[u] = self.user_inflight.get(u, 0) + r
         return True
 
-    def release(self, rows: int) -> None:
+    def release(self, rows: int,
+                users: Optional[Dict[Any, int]] = None) -> None:
         self.inflight_rows -= rows
         assert self.inflight_rows >= 0, "released more rows than admitted"
+        if users:
+            for u, r in users.items():
+                self.user_inflight[u] = self.user_inflight.get(u, 0) - r
+                assert self.user_inflight[u] >= 0, \
+                    f"released more rows than admitted for user {u!r}"
 
 
 class StreamingDriver:
@@ -151,13 +184,14 @@ class StreamingDriver:
     # -- pipeline core ------------------------------------------------------
     def dispatch(self, outputs: Any = None, rows: int = 0,
                  rids: Tuple[int, ...] = (),
-                 on_consume: Optional[Callable] = None) -> WaveHandle:
+                 on_consume: Optional[Callable] = None,
+                 users: Optional[Dict[Any, int]] = None) -> WaveHandle:
         """Run ONE asynchronous engine round over everything pending on the
         session and park its handle.  Blocks only to keep the pipeline at
         ``depth`` in-flight waves (consuming oldest-first)."""
         h = WaveHandle(wave_id=self._next_wave, outputs=outputs, rows=rows,
                        rids=tuple(rids), on_consume=on_consume,
-                       dispatched_at=time.perf_counter())
+                       dispatched_at=time.perf_counter(), users=users)
         self._next_wave += 1
         self.session.step(sync=False)
         self._inflight.append(h)
@@ -166,9 +200,11 @@ class StreamingDriver:
             self._consume_oldest()
         return h
 
-    def admit(self, rows: int) -> None:
-        """Reserve ``rows`` admission tokens, consuming in-flight waves
-        oldest-first until the bucket has room.  No-op without admission
+    def admit(self, rows: int,
+              users: Optional[Dict[Any, int]] = None) -> None:
+        """Reserve ``rows`` admission tokens (and per-user tokens when a
+        ``users`` breakdown is given), consuming in-flight waves
+        oldest-first until the buckets have room.  No-op without admission
         control.  Raises if ``rows`` can never fit."""
         if self.admission is None:
             return
@@ -176,7 +212,14 @@ class StreamingDriver:
             raise ValueError(
                 f"wave of {rows} rows exceeds the admission budget "
                 f"{self.admission.max_inflight_rows} outright")
-        while not self.admission.try_admit(rows):
+        pu = self.admission.per_user_rows
+        if pu is not None and users:
+            worst = max(users.values())
+            if worst > pu:
+                raise ValueError(
+                    f"a user's {worst} rows exceed the per-user budget "
+                    f"{pu} outright")
+        while not self.admission.try_admit(rows, users):
             if not self._inflight:
                 raise AssertionError(
                     "admission bucket too small for already-released rows")
@@ -189,7 +232,7 @@ class StreamingDriver:
         h.consumed_at = time.perf_counter()
         self.events.append(("consume", h.wave_id))
         if self.admission is not None:
-            self.admission.release(h.rows)
+            self.admission.release(h.rows, h.users)
         # refresh the EMA cache for wave_budget() only at QUIESCE points:
         # planner.observe() overwrites the staged demand scalar at every
         # dispatch, so with waves still in flight the staged value belongs
@@ -246,6 +289,7 @@ class StreamingDriver:
         self._inflight.clear()
         if self.admission is not None:
             self.admission.inflight_rows = 0
+            self.admission.user_inflight.clear()
         if getattr(failure, "kind", "kill") == "kill":
             self.session.re_entrust(
                 [failure.shard] if failure.shard is not None else [],
@@ -301,6 +345,8 @@ class StreamingDriver:
         if self.admission is not None:
             out["admitted_rows"] = self.admission.admitted
             out["admission_refusals"] = self.admission.refused
+            if self.admission.user_refused:
+                out["user_refusals"] = dict(self.admission.user_refused)
         return out
 
 

@@ -387,6 +387,71 @@ def decode_attention(params, x, pos, cache, cfg: ModelConfig, run=None):
     return meshctx.constrain(y, dp, None), {"k": nk, "v": nv}
 
 
+# ---------------------------------------------------------------------------
+# Decode against the DELEGATED page table's block-sparse KV layout
+# ---------------------------------------------------------------------------
+
+def init_paged_kv_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                       dtype) -> Dict[str, jax.Array]:
+    """A shared pool of KV pages: (P, Hkv, PS, Dh).  Page identities are
+    GLOBAL ids handed out by ``core.pagetable.DelegatedPageTable`` —
+    trustee ``i`` owns pages ``{p : p % T == i}``."""
+    assert cfg.attn_kind != ATTN_MLA, "paged decode is GQA-only"
+    _, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    return {"k": jnp.zeros((n_pages, hkvp, page_size, dh), dtype),
+            "v": jnp.zeros((n_pages, hkvp, page_size, dh), dtype)}
+
+
+def paged_decode_attention(params, x, pos, pool, page_table, cfg: ModelConfig,
+                           run=None):
+    """One-token decode against the paged KV pool.
+
+    x: (B, D) new-token activations; pos: (B,) token positions;
+    pool: ``init_paged_kv_pool``; page_table: (B, MP) global page ids
+    (-1 pad) — each row is the sequence's chain from the delegated page
+    table (``lookup``/``append`` responses), so page_table[b, pos[b]//PS]
+    names the page the new token's KV row lands in.  Returns
+    (y (B, D), new_pool).  The attention itself is the paged-gather
+    kernel (``kernels/paged_attention``): pages are fetched per chain
+    slot, never densified into a (B, MP*PS, D) copy."""
+    assert cfg.attn_kind != ATTN_MLA, "paged decode is GQA-only"
+    hqp, hkvp = padded_heads(cfg)
+    dh = cfg.resolved_head_dim
+    b, _ = x.shape
+    ps = pool["k"].shape[2]
+    xs = x[:, None, :]
+    q = jnp.einsum("bsd,de->bse", xs, params["w_q"])
+    k = jnp.einsum("bsd,de->bse", xs, params["w_k"])
+    v = jnp.einsum("bsd,de->bse", xs, params["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(b, 1, hqp, dh)
+    k = k.reshape(b, 1, hkvp, dh)
+    v = v.reshape(b, 1, hkvp, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)[:, 0]        # (B, Hq, Dh)
+    k = apply_rope(k, posb, cfg.rope_theta)[:, 0]        # (B, Hkv, Dh)
+    v = v[:, 0]
+
+    # write the new token's KV row into its page slot (the slot's page id
+    # came back from the page table's append for exactly this position)
+    pt = jnp.asarray(page_table, jnp.int32)
+    page = jnp.take_along_axis(pt, (pos // ps)[:, None], axis=1)[:, 0]
+    page = jnp.clip(page, 0, pool["k"].shape[0] - 1)
+    slot = pos % ps
+    nk = pool["k"].at[page, :, slot].set(k.astype(pool["k"].dtype))
+    nv = pool["v"].at[page, :, slot].set(v.astype(pool["v"].dtype))
+
+    impl = "pallas" if (run is not None and run.use_pallas) else "ref"
+    out = kops.paged_attention(q, nk, nv, pt, pos + 1, impl=impl)
+    y = jnp.einsum("be,ed->bd", out.reshape(b, hqp * dh), params["w_o"])
+    return y, {"k": nk, "v": nv}
+
+
 def _mla_decode(params, x, pos, cache, cfg, run, mesh, dp):
     """MLA decode over sequence-sharded latent pages.
 

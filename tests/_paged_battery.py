@@ -1,0 +1,368 @@
+"""Paged KV-cache battery — executed as a SUBPROCESS with 8 simulated
+host devices (the main pytest process keeps a single device per the
+dry-run protocol).
+
+The DESIGN.md §15 acceptance battery: a ≥1k-request multi-sequence decode
+trace through the ``DelegatedPageTable`` must be bit-identical — page
+assignments AND the attention outputs computed from the served page
+lists — to the ``SequentialPageTable`` host oracle, in shared (with and
+without the local-trustee shortcut) and dedicated modes; alloc/free
+conservation must hold (zero leaked pages), including through one
+injected trustee kill + ``re_entrust`` onto 7 survivors; page-table ops
+must ride the SAME fused engine round as a coexisting KV store's ops.
+
+Prints one JSON dict of named check results; tests/test_paged_kv.py
+asserts on them.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import json
+import shutil
+import tempfile
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+RESULTS = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:                                # noqa: BLE001
+            RESULTS[name] = {"ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-1500:]}
+        return fn
+    return deco
+
+
+# table geometry: 64 seqs over 8 trustees (8 local seqs each), a 128-page
+# pool (16 local pages), 4-page chains of 4-token pages — worst-case local
+# demand 8*4 = 32 > 16 local pages, so the LRU eviction path exercises
+MAX_SEQS = 64
+N_PAGES = 128
+PAGE_SIZE = 4
+MAX_PAGES = 4
+R = 56               # rows per wave: divisible by 8 AND 7, so the
+                     # client-major contiguous layout (= serve order)
+                     # survives the 8 -> 7 device shrink
+N_WAVES = 20         # 20 * 56 = 1120 ops >= the 1k-request floor
+SNAP_EVERY = 4
+
+
+def mesh2x4():
+    return Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+
+def gen_trace(seed, n_waves=N_WAVES):
+    """Decode-shaped op trace: append-dominated, with allocs (prompt
+    admission), lookups (page-list gathers) and frees (retirement) mixed
+    in.  ``free`` waves draw 56 UNIQUE live seqs (the facade raises on
+    unknown/duplicate frees — exactly the typed contract)."""
+    rng = np.random.default_rng(seed)
+    known = set()
+    waves = []
+    for _ in range(n_waves):
+        op = rng.choice(["alloc", "append", "append", "lookup", "free"],
+                        p=[0.2, 0.25, 0.25, 0.2, 0.1])
+        if op == "free" and len(known) < R:
+            op = "append"
+        if op == "alloc":
+            seqs = rng.integers(0, MAX_SEQS, R).astype(np.int32)
+            extra = rng.integers(1, MAX_PAGES + 1, R).astype(np.int32)
+            known.update(int(s) for s in seqs)
+        elif op == "append":
+            seqs = rng.integers(0, MAX_SEQS, R).astype(np.int32)
+            extra = rng.integers(0, MAX_PAGES * PAGE_SIZE, R).astype(np.int32)
+            known.update(int(s) for s in seqs)
+        elif op == "lookup":
+            seqs = rng.integers(0, MAX_SEQS, R).astype(np.int32)
+            extra = None
+        else:
+            seqs = rng.choice(sorted(known), R, replace=False).astype(np.int32)
+            extra = None
+            known.difference_update(int(s) for s in seqs)
+        waves.append((str(op), seqs, extra))
+    return waves
+
+
+FIELDS = {"alloc": ("pages", "n", "flag"), "append": ("page", "n", "flag"),
+          "free": ("n", "flag"), "lookup": ("pages", "n", "flag")}
+
+
+def serve_perm(seqs, t, n_dev, shortcut):
+    """One wave's serve order (same model as the KV batteries): without
+    the shortcut it IS the request order (client-major contiguous); with
+    it, each trustee serves channel rows first, self-addressed rows last."""
+    if not shortcut:
+        return np.arange(len(seqs))
+    r_per_client = len(seqs) // n_dev
+    client = np.arange(len(seqs)) // r_per_client
+    local = (seqs % t) == client
+    return np.concatenate([np.where(~local)[0], np.where(local)[0]])
+
+
+def oracle_wave(oracle, wave, n_dev, shortcut):
+    op, seqs, extra = wave
+    perm = serve_perm(seqs, oracle.t, n_dev, shortcut)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    if op == "alloc":
+        r = oracle.alloc(seqs[perm], extra[perm])
+    elif op == "append":
+        r = oracle.append(seqs[perm], extra[perm])
+    elif op == "free":
+        r = oracle.free(seqs[perm])
+    else:
+        r = oracle.lookup(seqs[perm])
+    return {k: np.asarray(v)[inv] for k, v in r.items()}
+
+
+def table_wave(pt, sess, wave):
+    """Submit one wave, run it as ONE engine round, return the globalized
+    acknowledged response (request order)."""
+    op, seqs, extra = wave
+    if op == "alloc":
+        fut = pt.alloc_then(seqs, extra)
+    elif op == "append":
+        fut = pt.append_then(seqs, extra)
+    elif op == "free":
+        fut = pt.free_then(seqs)
+    else:
+        fut = pt.lookup_then(seqs)
+    sess.step()
+    r = fut.result()
+    gfields = tuple(f for f in ("pages", "page") if f in FIELDS[op])
+    return pt.globalize(r, seqs, fields=gfields)
+
+
+def assert_wave_equal(got, want, op, what):
+    for f in FIELDS[op]:
+        assert np.array_equal(got[f], want[f]), \
+            f"{what}: field {f!r} differs\n got={got[f][:8]}\nwant={want[f][:8]}"
+
+
+def run_differential(mode_kw, shortcut, seed, what):
+    import repro.core as core
+    from repro.core import (DelegatedPageTable, SequentialPageTable,
+                            TrustSession)
+    mesh = mesh2x4()
+    waves = gen_trace(seed)
+    with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+        pt = DelegatedPageTable(mesh, N_PAGES, max_seqs=MAX_SEQS,
+                                page_size=PAGE_SIZE, max_pages=MAX_PAGES,
+                                capacity=R, **mode_kw)
+        oracle = SequentialPageTable(N_PAGES, MAX_SEQS, PAGE_SIZE,
+                                     MAX_PAGES, pt.t)
+        for i, wave in enumerate(waves):
+            got = table_wave(pt, sess, wave)
+            want = oracle_wave(oracle, wave, pt.group.axis_size, shortcut)
+            assert_wave_equal(got, want, wave[0], f"{what} wave {i}")
+        st_got, st_want = pt.dump(), oracle.dump()
+        for k in st_want:
+            assert np.array_equal(st_got[k], st_want[k]), f"{what}: state {k}"
+        aud = pt.audit()
+        assert aud["consistent"] and aud["leaked"] == 0, f"{what}: {aud}"
+        assert aud["evictions"] > 0, f"{what}: eviction path never fired"
+        # drain every live chain: conservation must land on an empty table
+        live = sorted(pt._known)
+        while live:
+            batch, live = live[:R], live[R:]
+            table_wave(pt, sess, ("free", np.array(batch, np.int32), None))
+        assert pt.audit()["allocated"] == 0, f"{what}: leaked pages at end"
+
+
+@check("shared_no_shortcut_matches_oracle")
+def _shared_plain():
+    run_differential({"local_shortcut": False}, shortcut=False, seed=90,
+                     what="paged/shared")
+
+
+@check("shared_shortcut_matches_oracle")
+def _shared_shortcut():
+    run_differential({"local_shortcut": True}, shortcut=True, seed=91,
+                     what="paged/shortcut")
+
+
+@check("dedicated_matches_oracle")
+def _dedicated():
+    run_differential({"mode": "dedicated", "n_dedicated": 4},
+                     shortcut=False, seed=92, what="paged/dedicated")
+
+
+# ---------------------------------------------------------------------------
+@check("attention_outputs_bit_identical")
+def _attention():
+    """Full decode dataflow: both sides drive the same 8-sequence decode
+    trace, scatter per-token KV into pools addressed by THEIR OWN served
+    page ids, gather chains via lookup, and run the paged-attention
+    oracle kernel — outputs must be bit-identical at every step."""
+    import repro.core as core
+    from repro.core import (DelegatedPageTable, SequentialPageTable,
+                            TrustSession)
+    from repro.kernels import ops as kops
+    mesh = mesh2x4()
+    B, H, D = 8, 2, 8
+    steps = PAGE_SIZE * MAX_PAGES           # decode to full chains
+    rng = np.random.default_rng(93)
+    with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+        pt = DelegatedPageTable(mesh, N_PAGES, max_seqs=MAX_SEQS,
+                                page_size=PAGE_SIZE, max_pages=MAX_PAGES,
+                                capacity=R)
+        oracle = SequentialPageTable(N_PAGES, MAX_SEQS, PAGE_SIZE,
+                                     MAX_PAGES, pt.t)
+        p_pad = ((N_PAGES + pt.t - 1) // pt.t) * pt.t
+        pools = {s: np.zeros((p_pad, H, PAGE_SIZE, D), np.float32)
+                 for s in ("got", "want")}
+        seqs = np.arange(B, dtype=np.int32)
+        for pos in range(steps):
+            poss = np.full(B, pos, np.int32)
+            fa = pt.append_then(seqs, poss)
+            fl = pt.lookup_then(seqs)
+            sess.step()
+            got_a = pt.globalize(fa.result(), seqs, fields=("page",))
+            got_l = pt.globalize(fl.result(), seqs, fields=("pages",))
+            want_a = oracle.append(seqs, poss)
+            want_l = oracle.lookup(seqs)
+            assert_wave_equal(got_a, want_a, "append", f"attn step {pos}")
+            assert_wave_equal(got_l, want_l, "lookup", f"attn step {pos}")
+            kv = rng.normal(size=(2, B, H, D)).astype(np.float32)
+            q = rng.normal(size=(B, H, D)).astype(np.float32)
+            outs = {}
+            for side, resp_a, resp_l in (("got", got_a, got_l),
+                                         ("want", want_a, want_l)):
+                page, slot = resp_a["page"], pos % PAGE_SIZE
+                kpool = pools[side]
+                kpool[page, :, slot] = kv[0]
+                vpool = kpool * 0.5 + 1.0   # deterministic distinct V pool
+                vpool[page, :, slot] = kv[1]
+                outs[side] = np.asarray(kops.paged_attention(
+                    jnp.asarray(q), jnp.asarray(kpool), jnp.asarray(vpool),
+                    jnp.asarray(resp_l["pages"]),
+                    jnp.full((B,), pos + 1, jnp.int32), impl="ref"))
+            assert np.array_equal(outs["got"], outs["want"]), \
+                f"attention outputs differ at step {pos}"
+
+
+# ---------------------------------------------------------------------------
+@check("chaos_kill_reentrust_zero_leaks")
+def _chaos():
+    """Kill trustee shard 3 at a snapshot boundary mid-trace, re-entrust
+    onto the 7 survivors, reshard the oracle with the SAME re-layout —
+    every later acknowledgment stays bit-identical and conservation holds
+    through the failover (zero leaked pages on the drained table)."""
+    import repro.core as core
+    from repro.core import (DelegatedPageTable, SequentialPageTable,
+                            TrustSession)
+    from repro.runtime import EngineFailureInjector, TrusteeFailure
+    mesh = mesh2x4()
+    waves = gen_trace(94)
+    kill_wave = SNAP_EVERY * 2          # aligned: empty replay set
+    ckdir = tempfile.mkdtemp(prefix="paged_chaos_")
+    try:
+        with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+            pt = DelegatedPageTable(mesh, N_PAGES, max_seqs=MAX_SEQS,
+                                    page_size=PAGE_SIZE, max_pages=MAX_PAGES,
+                                    capacity=R, local_shortcut=False)
+            oracle = SequentialPageTable(N_PAGES, MAX_SEQS, PAGE_SIZE,
+                                         MAX_PAGES, pt.t)
+            sess.install_injector(EngineFailureInjector(
+                schedule={kill_wave: ("kill", 3)}))
+            sess.checkpoint(ckdir)
+            failures = 0
+            w = 0
+            while w < len(waves):
+                try:
+                    got = table_wave(pt, sess, waves[w])
+                except TrusteeFailure as e:
+                    failures += 1
+                    assert e.kind == "kill" and e.shard == 3
+                    assert "pagetable" in e.trusts
+                    if waves[w][0] == "free":
+                        # the torn wave's host-side free bookkeeping must
+                        # roll back with it before the resubmission
+                        pt._known.update(int(s) for s in waves[w][1])
+                    sess.re_entrust([e.shard], ckpt_dir=ckdir)
+                    assert pt.t == 7, f"T did not shrink: {pt.t}"
+                    oracle.reshard(7)
+                    aud = pt.audit()
+                    assert aud["consistent"], f"post-failover: {aud}"
+                    continue
+                want = oracle_wave(oracle, waves[w], pt.group.axis_size,
+                                   shortcut=False)
+                assert_wave_equal(got, want, waves[w][0],
+                                  f"chaos wave {w} (t={pt.t})")
+                w += 1
+                if w % SNAP_EVERY == 0 and w <= kill_wave:
+                    sess.checkpoint(ckdir)
+            assert failures == 1, f"injector fired {failures}x"
+            st_got, st_want = pt.dump(), oracle.dump()
+            for k in st_want:
+                assert np.array_equal(st_got[k], st_want[k]), f"chaos: {k}"
+            aud = pt.audit()
+            assert aud["consistent"] and aud["leaked"] == 0, f"chaos: {aud}"
+            live = sorted(pt._known)
+            while live:
+                batch, live = live[:R], live[R:]
+                table_wave(pt, sess,
+                           ("free", np.array(batch, np.int32), None))
+            assert pt.audit()["allocated"] == 0, "chaos: leaked pages at end"
+            assert sess.last_stats()["recovery"]["restores"] >= 1
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+@check("pagetable_ops_fuse_with_kv_round")
+def _fused_with_kv():
+    """A page-table wave and a KV-store wave pending on the same session
+    serve in ONE fused engine round (rounds_dispatched +1) and both
+    futures acknowledge — the decode driver's page-table ops ride the
+    decode wave's round, not a second all_to_all."""
+    import repro.core as core
+    from repro.core import (DelegatedKVStore, DelegatedPageTable,
+                            SequentialKVReference, SequentialPageTable,
+                            TrustSession)
+    mesh = mesh2x4()
+    rng = np.random.default_rng(95)
+    with core.use_session(TrustSession()) as sess, core.use_mesh(mesh):
+        pt = DelegatedPageTable(mesh, N_PAGES, max_seqs=MAX_SEQS,
+                                page_size=PAGE_SIZE, max_pages=MAX_PAGES,
+                                capacity=R, local_shortcut=False)
+        kv = DelegatedKVStore(mesh, 37, 2, capacity=R, name="kv",
+                              local_shortcut=False)
+        init = rng.integers(0, 8, (37, 2)).astype(np.float32)
+        kv.prefill(init)
+        seqs = rng.integers(0, MAX_SEQS, R).astype(np.int32)
+        poss = rng.integers(0, MAX_PAGES * PAGE_SIZE, R).astype(np.int32)
+        keys = rng.integers(0, 37, R).astype(np.int32)
+        vals = rng.integers(0, 8, (R, 2)).astype(np.float32)
+        before = sess.rounds_dispatched
+        f_pt = pt.append_then(seqs, poss)
+        f_kv = kv.add_then(jnp.asarray(keys), jnp.asarray(vals))
+        sess.step()
+        assert sess.rounds_dispatched == before + 1, \
+            (before, sess.rounds_dispatched)
+        assert f_pt.ready() and f_kv.ready()
+        oracle = SequentialPageTable(N_PAGES, MAX_SEQS, PAGE_SIZE,
+                                     MAX_PAGES, pt.t)
+        want = oracle.append(seqs, poss)
+        got = pt.globalize(f_pt.result(), seqs, fields=("page",))
+        assert_wave_equal(got, want, "append", "fused round")
+        kv_ref = SequentialKVReference(37, 2)
+        kv_ref.prefill(init)
+        want_kv = kv_ref.add(keys, vals)
+        assert np.array_equal(np.asarray(f_kv.result()["value"]), want_kv)
+
+
+if __name__ == "__main__":
+    print(json.dumps(RESULTS))

@@ -1,0 +1,181 @@
+"""Page-table edge cases (in-process, single-device mesh) + the typed
+ListField layer + pallas-vs-ref paged attention.
+
+The three contract corners DESIGN.md §15 calls out:
+  * alloc with an exhausted free list fires the LRU eviction path, and the
+    EVICTED sequence's next append re-allocates its chain (healing)
+  * free of an unknown seq_id raises SchemaError naming the op
+  * an append crossing a page boundary allocates exactly one page
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import DelegatedPageTable, SchemaError
+from repro.core.opspec import Field, ListField
+
+
+def mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def make_pt(n_pages=8, max_seqs=4, page_size=4, max_pages=4):
+    return DelegatedPageTable(mesh1(), n_pages, max_seqs=max_seqs,
+                              page_size=page_size, max_pages=max_pages,
+                              capacity=16)
+
+
+# ---------------------------------------------------------------------------
+def test_exhausted_free_list_evicts_lru_and_victim_heals():
+    """Pool of 8 pages: seqs 0 and 1 take 4 each (pool exhausted); seq 2's
+    alloc must evict the LRU victim (seq 0, the stalest stamp) whole; the
+    victim's next append then re-allocates its chain from scratch."""
+    pt = make_pt()
+    r0 = pt.alloc([0], [4])
+    r1 = pt.alloc([1], [4])
+    assert r0["flag"][0] == 1 and r1["flag"][0] == 1
+    assert pt.audit()["free"] == 0
+    pt.lookup([1])                      # touch seq 1: seq 0 becomes LRU
+    r2 = pt.alloc([2], [4])
+    assert r2["flag"][0] == 1, "alloc under pressure must evict and commit"
+    assert pt.audit()["evictions"] == 1
+    assert pt.lookup([0])["n"][0] == 0, "victim chain must be wiped whole"
+    assert pt.lookup([1])["n"][0] == 4, "non-victim chain must survive"
+    # the evicted seq's next append heals: pos 5 -> pages 0..1 re-alloc'd
+    ra = pt.append([0], [5])
+    assert ra["flag"][0] == 2, "heal must allocate exactly the missing pages"
+    assert ra["n"][0] == 2 and ra["page"][0] >= 0
+    aud = pt.audit()
+    assert aud["consistent"] and aud["leaked"] == 0
+
+
+def test_free_unknown_seq_raises_schema_error_naming_op():
+    pt = make_pt()
+    pt.alloc([1], [1])
+    with pytest.raises(SchemaError, match=r"op 'free'.*unknown seq_id"):
+        pt.free([1, 2])
+    # the failed call must not have consumed seq 1's known-ness
+    assert pt.free([1])["n"][0] == 1
+    with pytest.raises(SchemaError, match=r"op 'free'"):
+        pt.free([1])                    # double free is unknown again
+
+
+def test_append_across_page_boundary_allocates_exactly_one_page():
+    pt = make_pt()
+    pt.alloc([0], [1])
+    for pos in range(4):                # fill page 0 (page_size=4)
+        r = pt.append([0], [pos])
+        assert r["flag"][0] == 0 and r["n"][0] == 1
+    r = pt.append([0], [4])             # first token of page 1
+    assert r["flag"][0] == 1, "boundary crossing must allocate exactly one"
+    assert r["n"][0] == 2
+    assert r["page"][0] != pt.append([0], [3])["page"][0]
+    r = pt.append([0], [5])             # same page again: no allocation
+    assert r["flag"][0] == 0 and r["n"][0] == 2
+
+
+def test_append_beyond_max_chain_fails_closed():
+    pt = make_pt(n_pages=8, max_pages=2)
+    pt.alloc([0], [2])
+    r = pt.append([0], [2 * 4])         # page_idx 2 >= max_pages
+    assert r["flag"][0] == -1 and r["page"][0] == -1
+    assert pt.audit()["consistent"]
+
+
+def test_alloc_infeasible_is_all_or_nothing():
+    """An alloc that cannot commit (chain-capacity overflow on the
+    requester) must change NOTHING — no partial pages, no eviction."""
+    pt = make_pt(n_pages=8, max_seqs=4, max_pages=4)
+    pt.alloc([2], [3])
+    before = pt.dump()
+    r = pt.alloc([2], [2])              # 3 + 2 > max_pages: must refuse
+    assert r["flag"][0] == 0 and r["n"][0] == 3
+    after = pt.dump()
+    for k in ("used", "chains", "chain_len"):
+        assert np.array_equal(before[k], after[k]), k
+    assert pt.audit()["evictions"] == 0
+
+
+def test_seq_id_out_of_range_raises():
+    pt = make_pt()
+    with pytest.raises(SchemaError, match=r"op 'alloc'.*outside"):
+        pt.alloc([7], [1])
+    with pytest.raises(SchemaError, match=r"op 'lookup'"):
+        pt.lookup([-1])
+
+
+# ---------------------------------------------------------------------------
+def test_listfield_shape_counts_and_trim():
+    f = ListField("pages", max_len=4, dtype=jnp.int32)
+    assert f.row_shape == (4,)
+    rows = jnp.asarray([[3, 1, -1, -1], [-1, -1, -1, -1], [5, 2, 9, 0]])
+    assert np.array_equal(np.asarray(f.counts(rows)), [2, 0, 4])
+    assert np.array_equal(f.trim(rows[0]), [3, 1])
+    g = ListField("x", max_len=3, pad=0, dtype=jnp.int32)
+    assert np.array_equal(np.asarray(g.counts(jnp.asarray([[1, 0, 2]]))), [2])
+
+
+def test_listfield_rejects_conflicting_row_shape():
+    with pytest.raises(SchemaError, match="max_len"):
+        ListField("pages", row_shape=(3,), max_len=4, dtype=jnp.int32)
+
+
+def test_listfield_equals_plain_field_of_same_shape():
+    a = ListField("pages", max_len=4, dtype=jnp.int32)
+    b = Field("pages", (4,), jnp.int32)
+    assert a.row_shape == b.row_shape and a.dtype == b.dtype
+
+
+# ---------------------------------------------------------------------------
+def test_paged_attention_pallas_matches_ref():
+    """The Pallas paged-gather flash attention (interpret mode) must match
+    the jnp oracle on ragged chains and GQA head groups."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(11)
+    b, hq, hkv, d, p, ps, mp = 4, 4, 2, 16, 12, 8, 3
+    q = rng.normal(size=(b, hq, d)).astype(np.float32)
+    k = rng.normal(size=(p, hkv, ps, d)).astype(np.float32)
+    v = rng.normal(size=(p, hkv, ps, d)).astype(np.float32)
+    lengths = np.array([1, 7, 13, 24], np.int32)
+    tbl = np.full((b, mp), -1, np.int32)
+    perm = rng.permutation(p)
+    off = 0
+    for i in range(b):
+        n = -(-int(lengths[i]) // ps)
+        tbl[i, :n] = perm[off:off + n]
+        off += n
+    want = np.asarray(kops.paged_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(tbl),
+        jnp.asarray(lengths), impl="ref"))
+    got = np.asarray(kops.paged_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(tbl),
+        jnp.asarray(lengths), impl="pallas", interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_matches_dense_decode():
+    """models.attention.paged_decode_attention over a paged pool must match
+    the dense decode_attention path on the same tokens."""
+    from repro.configs.base import ModelConfig
+    from repro.models import attention as att
+    cfg = ModelConfig(name="paged-test", family="dense", n_layers=1,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=64)
+    rng = jax.random.PRNGKey(0)
+    params = att.init_attention(rng, cfg, jnp.float32)
+    b, steps, ps, mp = 2, 8, 4, 4
+    n_pages = b * mp
+    pool = att.init_paged_kv_pool(cfg, n_pages, ps, jnp.float32)
+    tbl = np.arange(n_pages, dtype=np.int32).reshape(b, mp)
+    cache = att.init_kv_cache(cfg, b, steps, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (b, steps, cfg.d_model))
+    for t in range(steps):
+        pos = jnp.full((b,), t, jnp.int32)
+        y_paged, pool = att.paged_decode_attention(
+            params, xs[:, t], pos, pool, jnp.asarray(tbl), cfg)
+        y_dense, cache = att.decode_attention(params, xs[:, t], pos, cache,
+                                              cfg)
+        np.testing.assert_allclose(np.asarray(y_paged), np.asarray(y_dense),
+                                   rtol=2e-5, atol=2e-5)
